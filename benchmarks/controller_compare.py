@@ -1,0 +1,51 @@
+"""BEYOND-PAPER: interval-controller shoot-out — the paper's bang-bang rule
+(eq. 1) vs an EMA-slope proportional controller and an improvement-budget
+controller (`core/controllers.py`), on two contrasting domains."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig, SchedulerConfig
+from repro.core import FederatedBoostEngine
+from repro.core.controllers import BudgetScheduler, TrendScheduler
+from repro.core.metrics import time_to_error
+from repro.core.scheduling import HostScheduler
+
+
+def run(domain: str, make_sched) -> Dict:
+    from repro.data import make_domain_data
+    dom = DOMAINS[domain]
+    data = make_domain_data(dom, seed=0)
+    cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=25,
+                         straggler_factor=dom.straggler_factor,
+                         dropout_prob=dom.dropout_prob,
+                         link_mbps=dom.link_mbps,
+                         balanced_init=dom.label_imbalance < 0.4)
+    eng = FederatedBoostEngine(cfg, data, "enhanced")
+    eng.scheduler = make_sched(cfg.scheduler)
+    m = eng.run()
+    return m
+
+
+def main() -> List[Dict]:
+    controllers = {
+        "paper eq.1 (bang-bang)": lambda c: HostScheduler(c),
+        "trend (EMA slope)": lambda c: TrendScheduler(c),
+        "budget (gain/sync)": lambda c: BudgetScheduler(c),
+    }
+    out = []
+    for domain in ("edge_vision", "mobile"):
+        print(f"\n--- controller comparison: {domain} ---")
+        print(f"{'controller':<24} {'bytes':>9} {'msgs':>6} {'syncs':>6} "
+              f"{'val_err':>8}")
+        for name, mk in controllers.items():
+            m = run(domain, mk)
+            print(f"{name:<24} {m.total_bytes:>9} {m.n_messages:>6} "
+                  f"{m.n_syncs:>6} {m.final_val_error:>8.3f}", flush=True)
+            out.append({"domain": domain, "controller": name,
+                        "bytes": m.total_bytes, "err": m.final_val_error})
+    return out
+
+
+if __name__ == "__main__":
+    main()

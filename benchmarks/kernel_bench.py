@@ -1,0 +1,102 @@
+"""Kernel microbenchmarks: wall time (interpret mode on CPU — correctness
+path, NOT TPU-representative) + the structural numbers that matter for TPU:
+per-block VMEM footprint, FLOPs, and arithmetic intensity per kernel tile.
+
+Emits ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def stump_vmem_bytes(block_n: int, F: int, T: int) -> int:
+    # x block + y/w + threshold grid + (bn,F,T) predicate tile + (F,T) acc
+    return 4 * (block_n * F + 2 * block_n + F * T + block_n * F * T + F * T)
+
+
+def flash_vmem_bytes(bq: int, bk: int, d: int) -> int:
+    # q,k,v tiles + scores + m/l/acc scratch (f32)
+    return 4 * (bq * d + 2 * bk * d + bq * bk + 2 * bq + bq * d)
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    out = []
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+
+    # stump_scan: the boosting inner loop
+    N, F, T = 2048, 64, 16
+    x = jax.random.normal(ks[0], (N, F))
+    y = jnp.sign(jax.random.normal(ks[1], (N,)))
+    w = jax.nn.softmax(jax.random.normal(ks[2], (N,)))
+    thr = jnp.sort(jax.random.normal(ks[3], (F, T)), axis=1)
+    us_k = _time(lambda *a: ops.stump_scan(*a), x, y, w, thr)
+    us_r = _time(lambda *a: ref.stump_scan_ref(*a), x, y, w, thr)
+    flops = 2.0 * N * F * T
+    vmem = stump_vmem_bytes(256, F, T)
+    out.append(("stump_scan_pallas_interp", us_k,
+                f"N{N}xF{F}xT{T};vmem_block={vmem/1e3:.0f}KB;"
+                f"flops={flops/1e6:.1f}MF"))
+    out.append(("stump_scan_jnp_ref", us_r, "same-shape oracle"))
+
+    # dist_update: the per-round distribution refresh (paper eq. 4)
+    Nd = 8192
+    D = jax.nn.softmax(jax.random.normal(ks[0], (Nd,)))
+    yd = jnp.sign(jax.random.normal(ks[1], (Nd,)))
+    hd = jnp.sign(jax.random.normal(ks[2], (Nd,)))
+    us_k = _time(lambda *z: ops.dist_update(*z), 0.7, D, yd, hd)
+    us_r = _time(lambda *z: ref.dist_update_ref(*z), 0.7, D, yd, hd)
+    out.append(("dist_update_pallas_interp", us_k,
+                f"N{Nd};hbm_sweeps=1-vs-3;bytes={3*Nd*4/1e3:.0f}KB"))
+    out.append(("dist_update_jnp_ref", us_r, ""))
+
+    # ensemble_vote
+    Tm, Nm = 256, 8192
+    m = jnp.sign(jax.random.normal(ks[0], (Tm, Nm)))
+    a = jax.random.normal(ks[1], (Tm,))
+    out.append(("ensemble_vote_pallas_interp",
+                _time(lambda *z: ops.ensemble_vote(*z), m, a),
+                f"T{Tm}xN{Nm};hbm_saved={(Tm*Nm*4)/1e6:.1f}MB-roundtrip"))
+    out.append(("ensemble_vote_jnp_ref",
+                _time(lambda *z: ref.ensemble_vote_ref(*z), m, a), ""))
+
+    # flash_attention: 32k-prefill block (scaled for CPU interpret)
+    B, H, Tt, d = 1, 2, 1024, 128
+    q = jax.random.normal(ks[0], (B, H, Tt, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, Tt, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, Tt, d), jnp.float32)
+    us_k = _time(lambda *z: ops.flash_attention(*z), q, k, v)
+    us_r = _time(lambda *z: ref.flash_attention_ref(*z), q, k, v)
+    vmem = flash_vmem_bytes(128, 128, d)
+    ai = (4 * Tt * Tt * d) / (4 * 3 * Tt * d)   # flops / bytes-in per head
+    out.append(("flash_attention_pallas_interp", us_k,
+                f"T{Tt}xd{d};vmem_block={vmem/1e3:.0f}KB;"
+                f"arith_intensity={ai:.0f}"))
+    out.append(("flash_attention_jnp_ref", us_r,
+                f"hbm_logits={(H*Tt*Tt*4)/1e6:.0f}MB-materialized"))
+    return out
+
+
+def main() -> None:
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Single-pod (16x16) vs multi-pod (2x16x16) scaling report from the
+dry-run artifacts: per-device roofline terms should ~halve when the pod
+axis doubles data parallelism, EXCEPT collective terms that cross the
+(slower) inter-pod links — the table surfaces which archs scale cleanly.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.roofline import analyze_record, load_records
+
+
+def main() -> List[dict]:
+    single = {(r["arch"], r["shape"]): analyze_record(r)
+              for r in load_records("pod16x16")}
+    multi = {(r["arch"], r["shape"]): analyze_record(r)
+             for r in load_records("pod2x16x16")}
+    print(f"{'arch':<24} {'shape':<12} {'cmp x':>6} {'coll x':>7}  verdict")
+    out = []
+    for key in sorted(single):
+        a, b = single.get(key), multi.get(key)
+        if not a or not b:
+            continue
+        cr = (b["t_compute_s"] / a["t_compute_s"]
+              if a["t_compute_s"] else float("nan"))
+        xr = (b["t_collective_s"] / a["t_collective_s"]
+              if a["t_collective_s"] else float("nan"))
+        verdict = ("clean" if cr < 0.6 and (xr != xr or xr < 0.75)
+                   else "comm-limited" if cr < 0.6 else "flat")
+        print(f"{key[0]:<24} {key[1]:<12} {cr:>6.2f} {xr:>7.2f}  {verdict}")
+        out.append({"arch": key[0], "shape": key[1], "compute_ratio": cr,
+                    "collective_ratio": xr, "verdict": verdict})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_chip / 197e12        [bf16 MXU peak]
+    memory term     = HLO_bytes_per_chip / 819e9         [HBM bw]
+    collective term = collective_bytes_per_chip / 50e9   [ICI link bw]
+
+HLO_FLOPs / collective bytes are the trip-count-corrected values from
+launch/hlo_analysis.py (XLA's cost_analysis visits loop bodies once; see
+that module).  Two memory conventions are reported:
+    mem(hlo)  — HloCostAnalysis-style sum of operand+result bytes
+                (upper bound: ignores fusion locality)
+    mem(min)  — analytic streaming lower bound: parameter + optimizer +
+                KV/state-cache traffic per step per chip
+The dominant term is judged with mem(min) (the defensible bound); when
+mem(hlo) flips the verdict it is flagged.
+
+MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference),
+per chip; the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled
+compute is useful (remat + capacity slack + attention show up here).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.registry import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops_per_chip(arch: str, shape: str, n_devices: int) -> float:
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh.mode == "train":
+        tokens = sh.global_batch * sh.seq_len
+        total = 6.0 * n_active * tokens
+    elif sh.mode == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * sh.global_batch
+    return total / n_devices
+
+
+def mem_min_per_chip(arch: str, shape: str, n_devices: int) -> float:
+    """Analytic streaming lower bound on HBM bytes per step per chip."""
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    p = cfg.param_count()
+    if sh.mode == "train":
+        # params read (bf16) x3 (fwd/bwd/remat) + grads w (bf16)
+        # + adam m,v r/w (bf16) + params w
+        per_param = 2 * 3 + 2 + 4 * 2 + 2
+        base = p * per_param
+        act = sh.global_batch * sh.seq_len * cfg.d_model * cfg.n_layers * 2 * 4
+        return (base + act) / n_devices
+    if sh.mode == "prefill":
+        act = sh.global_batch * sh.seq_len * cfg.d_model * cfg.n_layers * 2 * 2
+        return (p * 2 + act) / n_devices
+    # decode: all (active) params + full KV/state cache read per token
+    cache = 0
+    hd = cfg.resolved_head_dim
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind in ("attn", "attn_local"):
+            S = sh.seq_len
+            if kind == "attn_local" and cfg.sliding_window:
+                S = min(S, cfg.sliding_window)
+            cache += 2 * sh.global_batch * S * cfg.n_kv_heads * hd * 2
+        else:
+            mc = cfg.mamba
+            cache += sh.global_batch * mc.n_heads(cfg.d_model) * mc.head_dim \
+                * mc.d_state * 4
+    return (cfg.active_param_count() * 2 + cache) / n_devices
+
+
+def load_records(mesh: str = "pod16x16", variant: str = "baseline"
+                 ) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(
+            ART_DIR, f"*__{mesh}__{variant}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    arch, shape = rec["arch"], rec["shape"]
+    flops = rec.get("flops_corrected", 0.0)
+    mem_hlo = rec.get("bytes_accessed_corrected", 0.0)
+    coll = rec.get("collective_bytes_total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m_hlo = mem_hlo / HBM_BW
+    t_m_min = mem_min_per_chip(arch, shape, n) / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m_min, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    terms_hlo = {"compute": t_c, "memory": t_m_hlo, "collective": t_x}
+    dom_hlo = max(terms_hlo, key=terms_hlo.get)
+    mf = model_flops_per_chip(arch, shape, n)
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "t_compute_s": t_c, "t_mem_min_s": t_m_min, "t_mem_hlo_s": t_m_hlo,
+        "t_collective_s": t_x,
+        "dominant": dom, "dominant_hlo_conv": dom_hlo,
+        "model_flops_per_chip": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def table(mesh: str = "pod16x16", variant: str = "baseline") -> List[Dict]:
+    rows = [r for r in (analyze_record(x) for x in load_records(mesh, variant))
+            if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"| {'arch':<24} | {'shape':<11} | {'compute s':>9} | "
+           f"{'mem(min) s':>10} | {'mem(hlo) s':>10} | {'coll s':>9} | "
+           f"{'dominant':<10} | {'useful':>6} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']:<24} | {r['shape']:<11} | {r['t_compute_s']:>9.4f} | "
+            f"{r['t_mem_min_s']:>10.4f} | {r['t_mem_hlo_s']:>10.4f} | "
+            f"{r['t_collective_s']:>9.4f} | {r['dominant']:<10} | "
+            f"{r['useful_ratio']:>6.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table(mesh)
+        if not rows:
+            print(f"(no artifacts for {mesh}; run "
+                  f"`python -m repro.launch.dryrun --all`)")
+            continue
+        print(f"\n### Roofline — {mesh} (baseline)\n")
+        print(render(rows))
+        doms = {}
+        for r in rows:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\ndominant-term census: {doms}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+report.  Prints ``name,us_per_call,derived`` CSV lines at the end (harness
+convention); the human-readable tables precede them.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --quick    # 1 seed, fewer rounds
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    seeds = (0,) if args.quick else (0, 1, 2)
+    n_rounds = 20 if args.quick else 30
+
+    csv_rows = []
+
+    def timed(name, fn):
+        t0 = time.time()
+        out = fn()
+        csv_rows.append((name, (time.time() - t0) * 1e6, "bench-wall"))
+        return out
+
+    from benchmarks import (controller_compare, domains, fedavg_compare,
+                            kernel_bench, multipod_compare, relevance_filter,
+                            roofline, scheduler_ablation, staleness)
+
+    # Table 1 (the paper's main quantitative claim)
+    tab1 = timed("table1_domains",
+                 lambda: domains.main(n_rounds=n_rounds, seeds=seeds))
+    # scheduling-rule ablation (paper eq. 1)
+    timed("scheduler_ablation", scheduler_ablation.main)
+    # staleness compensation sweep (paper eq. 2)
+    timed("staleness_sweep", staleness.main)
+    # FL baselines comparison (paper's framing vs FedAvg/FedAsync)
+    timed("fedavg_compare", fedavg_compare.main)
+    # beyond-paper: relevance-filtered buffers + alternative controllers
+    timed("relevance_filter", relevance_filter.main)
+    timed("controller_compare", controller_compare.main)
+    # roofline report from the dry-run artifacts (§Roofline)
+    timed("roofline_report", roofline.main)
+    # single- vs multi-pod scaling census
+    timed("multipod_compare", multipod_compare.main)
+
+    print("\n--- kernel microbench + harness CSV ---")
+    for name, us, derived in kernel_bench.rows():
+        csv_rows.append((name, us, derived))
+    for d in tab1:
+        csv_rows.append((
+            f"table1_{d['domain']}", 0.0,
+            f"time_down={d['time_down']:.1f}%;comm_down={d['comm_down']:.1f}%;"
+            f"conv_down={d['conv_down']:.1f}%;acc_delta={d['acc_delta_pp']:+.1f}pp"))
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

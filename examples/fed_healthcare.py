@@ -1,0 +1,45 @@
+"""Federated healthcare diagnostics (paper domain 5): six hospitals with
+imbalanced diagnostic labels train a shared classifier without sharing
+patient data.  Compares the paper's enhanced async AdaBoost against the
+synchronous boosting baseline AND against FedAvg — showing the comm and
+robustness profile the paper claims for this domain.
+
+    PYTHONPATH=src python examples/fed_healthcare.py
+"""
+from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.core import FederatedBoostEngine
+from repro.core.federated import run_fedavg
+from repro.core.metrics import pct_reduction
+from repro.data import make_domain_data
+
+dom = DOMAINS["healthcare"]
+data = make_domain_data(dom, seed=0)
+print(f"{dom.n_clients} hospitals, {dom.n_samples} records, "
+      f"positive rate {dom.label_imbalance:.0%} (imbalanced), "
+      f"uplink {dom.link_mbps} Mb/s\n")
+
+cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=30,
+                     straggler_factor=dom.straggler_factor,
+                     dropout_prob=dom.dropout_prob, link_mbps=dom.link_mbps)
+
+runs = {
+    "sync AdaBoost (baseline)": FederatedBoostEngine(cfg, data, "baseline").run(),
+    "async AdaBoost (paper)": FederatedBoostEngine(cfg, data, "enhanced").run(),
+}
+avg = run_fedavg(data, n_rounds=30, link_mbps=dom.link_mbps,
+                 straggler_factor=dom.straggler_factor)
+
+print(f"{'method':<26} {'bytes':>10} {'msgs':>6} {'test_err':>9} {'recall':>7}")
+for name, m in runs.items():
+    print(f"{name:<26} {m.total_bytes:>10} {m.n_messages:>6} "
+          f"{m.final_test_error:>9.3f} {m.final_test_recall:>7.3f}")
+print(f"{'FedAvg (weights on wire)':<26} {avg.total_bytes:>10} "
+      f"{avg.n_messages:>6} {avg.final_test_error:>9.3f} {'':>7}")
+
+b = runs["sync AdaBoost (baseline)"]
+e = runs["async AdaBoost (paper)"]
+print(f"\npaper band check (healthcare): comm down "
+      f"{pct_reduction(b.total_bytes, e.total_bytes):.0f}% "
+      f"(paper: ~20-30%), accuracy delta "
+      f"{100*(b.final_test_error - e.final_test_error):+.1f}pp "
+      f"(paper: +1-2pp under class imbalance)")

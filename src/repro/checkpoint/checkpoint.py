@@ -1,0 +1,105 @@
+"""Pytree checkpointing: npz shards + json manifest, step-indexed, with
+atomic writes and resume.  No external dependency (orbax unavailable
+offline); good enough for CPU-scale runs and structurally identical to a
+real multi-host checkpointer (per-leaf files keyed by tree path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(directory: str, step: int, tree: PyTree,
+         extra: Optional[Dict] = None) -> str:
+    """Atomically write checkpoint for `step`; returns its path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        leaves, _ = _flatten_with_paths(tree)
+        arrays, dtypes = {}, {}
+        for k, v in leaves.items():
+            a = np.asarray(v)
+            dtypes[k] = str(a.dtype)
+            if a.dtype == jnp.bfloat16:
+                a = a.astype(np.float32)      # npz has no bf16; manifest
+            arrays[k] = a                     # records the true dtype
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays.keys()),
+            "shapes": {k: list(a.shape) for k, a in arrays.items()},
+            "dtypes": dtypes,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: PyTree,
+            step: Optional[int] = None) -> Tuple[PyTree, int, Dict]:
+    """Restore into the structure of `like` (validates shapes/dtypes)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    want, treedef = _flatten_with_paths(like)
+    leaves = {}
+    for k, ref in want.items():
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = data[k]
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {arr.shape} vs {ref.shape}")
+        leaves[k] = jnp.asarray(arr, dtype=ref.dtype)
+    ordered = [leaves[k] for k in want.keys()]
+    tree = jax.tree_util.tree_unflatten(treedef, ordered)
+    return tree, manifest["step"], manifest.get("extra", {})
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

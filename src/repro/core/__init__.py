@@ -1,0 +1,11 @@
+# The paper's primary contribution: adaptive communication scheduling,
+# delayed weight compensation, buffer-based sync — plus the async federated
+# boosting engine and the mesh-integrated (pjit/shard_map) variant.
+from repro.core.scheduling import (  # noqa: F401
+    SchedulerState, adapt_interval, init_state, HostScheduler)
+from repro.core.compensation import (  # noqa: F401
+    adaboost_alpha, compensate, compensated_alpha)
+from repro.core.boosting import (  # noqa: F401
+    Ensemble, fit_adaboost, weighted_error, update_distribution,
+    ensemble_margin, ensemble_predict, accuracy)
+from repro.core.async_engine import FederatedBoostEngine, RunMetrics  # noqa: F401

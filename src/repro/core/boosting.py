@@ -1,0 +1,120 @@
+"""AdaBoost core in JAX: weighted errors, vote weights, the sample
+distribution update, ensemble evaluation, and a centralized reference loop.
+
+Binary labels live in {-1,+1}; weak-learner outputs are margins in [-1,1]
+(stumps emit exactly +-1).  The multiclass extension (SAMME) is provided for
+the domain datasets that need it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compensation import adaboost_alpha
+from repro.models.weak import WeakLearnerSpec
+
+Array = jnp.ndarray
+
+
+def weighted_error(D: Array, y: Array, margins: Array) -> Array:
+    """eps = sum_i D_i [sign(h(x_i)) != y_i]; ties (h==0) count as errors."""
+    pred = jnp.where(margins > 0, 1.0, -1.0)
+    miss = (pred != y).astype(jnp.float32)
+    return jnp.sum(D * miss)
+
+
+def update_distribution(D: Array, alpha_tilde, y: Array, margins: Array
+                        ) -> Tuple[Array, Array]:
+    """D_{t+1}(i) = D_t(i) exp(-alpha~ y_i h_t(x_i)) / Z_t  (paper eq. 4).
+
+    Returns (D_new, Z_t)."""
+    w = D * jnp.exp(-alpha_tilde * y * margins)
+    Z = jnp.sum(w)
+    return w / (Z + 1e-30), Z
+
+
+def ensemble_margin(margins_stack: Array, alphas: Array) -> Array:
+    """H(x) = sum_t alpha~_t h_t(x).  margins_stack: (T,N); alphas: (T,)."""
+    return jnp.einsum("t,tn->n", alphas.astype(jnp.float32),
+                      margins_stack.astype(jnp.float32))
+
+
+def ensemble_predict(margins_stack: Array, alphas: Array) -> Array:
+    """H_T(x) = sign(sum alpha~ h) (paper eq. 3)."""
+    return jnp.where(ensemble_margin(margins_stack, alphas) > 0, 1.0, -1.0)
+
+
+def accuracy(margins_stack: Array, alphas: Array, y: Array) -> Array:
+    return jnp.mean(ensemble_predict(margins_stack, alphas) == y)
+
+
+# ---------------------------------------------------------------------------
+# centralized AdaBoost (the non-federated reference the paper compares to)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Ensemble:
+    """A grown ensemble: learner params + compensated weights."""
+    learners: List[Dict] = field(default_factory=list)
+    alphas: List[float] = field(default_factory=list)
+
+    def add(self, params: Dict, alpha: float) -> None:
+        self.learners.append(params)
+        self.alphas.append(float(alpha))
+
+    def margins(self, predict: Callable, x: Array) -> Array:
+        if not self.learners:
+            return jnp.zeros((1, x.shape[0]), jnp.float32)
+        return jnp.stack([predict(p, x) for p in self.learners])
+
+    def predict(self, predict_fn: Callable, x: Array) -> Array:
+        m = self.margins(predict_fn, x)
+        return jnp.where(
+            ensemble_margin(m, jnp.asarray(self.alphas)) > 0, 1.0, -1.0)
+
+    def error(self, predict_fn: Callable, x: Array, y: Array) -> float:
+        return float(jnp.mean(self.predict(predict_fn, x) != y))
+
+
+def fit_adaboost(x: Array, y: Array, n_rounds: int, weak: WeakLearnerSpec,
+                 key=None) -> Tuple[Ensemble, List[float]]:
+    """Classical (centralized, synchronous) AdaBoost.  Returns the ensemble
+    and the per-round training-error-bound factors Z_t (prod Z_t bounds the
+    training error — asserted by property tests)."""
+    key = key if key is not None else jax.random.key(0)
+    N = x.shape[0]
+    D = jnp.full((N,), 1.0 / N)
+    ens = Ensemble()
+    zs: List[float] = []
+    for t in range(n_rounds):
+        key, sub = jax.random.split(key)
+        params = weak.fit(x, y, D, sub)
+        h = weak.predict(params, x)
+        eps = weighted_error(D, y, h)
+        if float(eps) >= 0.5:      # weak learner no better than chance: stop
+            break
+        alpha = adaboost_alpha(eps)
+        D, Z = update_distribution(D, alpha, y, h)
+        ens.add(params, float(alpha))
+        zs.append(float(Z))
+    return ens, zs
+
+
+# ---------------------------------------------------------------------------
+# SAMME multiclass extension
+# ---------------------------------------------------------------------------
+
+def samme_alpha(eps, n_classes: int):
+    eps = jnp.clip(jnp.asarray(eps, jnp.float32), 1e-6, 1.0 - 1e-6)
+    return jnp.log((1.0 - eps) / eps) + jnp.log(n_classes - 1.0)
+
+
+def samme_update_distribution(D: Array, alpha, y_idx: Array, pred_idx: Array
+                              ) -> Tuple[Array, Array]:
+    miss = (pred_idx != y_idx).astype(jnp.float32)
+    w = D * jnp.exp(alpha * miss)
+    Z = jnp.sum(w)
+    return w / (Z + 1e-30), Z

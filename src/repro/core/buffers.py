@@ -1,0 +1,39 @@
+"""Buffer-based synchronization (paper §Methodology).
+
+Each client accumulates ``(weak-learner params, local error eps, vote weight
+alpha, local round stamp)`` between synchronization events; at sync the
+whole buffer crosses the network once and the server applies delayed weight
+compensation to each entry based on its staleness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+
+@dataclass
+class BufferEntry:
+    params: Dict
+    eps: float
+    alpha: float
+    round_stamp: int          # client-local boosting round when trained
+
+
+@dataclass
+class ClientBuffer:
+    client_id: int
+    entries: List[BufferEntry] = field(default_factory=list)
+
+    def add(self, params: Dict, eps: float, alpha: float, stamp: int) -> None:
+        self.entries.append(BufferEntry(params, eps, alpha, stamp))
+
+    def flush(self) -> List[BufferEntry]:
+        out, self.entries = self.entries, []
+        return out
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def nbytes(self, param_bytes: Callable) -> int:
+        """Wire size of the buffered payload (params + eps/alpha/stamp)."""
+        return sum(int(param_bytes(e.params)) + 12 for e in self.entries)

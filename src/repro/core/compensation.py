@@ -1,0 +1,32 @@
+"""Delayed weight compensation — the paper's eq. (2).
+
+    alpha~_t = alpha_t * exp(-lambda * tau)
+
+where alpha_t = 1/2 ln((1 - eps_t)/eps_t) is the classical AdaBoost vote
+weight of weak learner h_t and tau is its staleness in rounds at the moment
+the server folds it into the global ensemble.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.paper_fedboost import CompensationConfig
+
+EPS_CLIP = 1e-6
+
+
+def adaboost_alpha(eps):
+    """alpha_t = 1/2 ln((1-eps)/eps), eps clipped away from {0, 1}."""
+    eps = jnp.clip(jnp.asarray(eps, jnp.float32), EPS_CLIP, 1.0 - EPS_CLIP)
+    return 0.5 * jnp.log((1.0 - eps) / eps)
+
+
+def compensate(alpha, tau, cfg: CompensationConfig):
+    """alpha~ = alpha * exp(-lambda * min(tau, tau_cap)); tau >= 0."""
+    tau = jnp.minimum(jnp.asarray(tau, jnp.float32), float(cfg.tau_cap))
+    tau = jnp.maximum(tau, 0.0)
+    return jnp.asarray(alpha, jnp.float32) * jnp.exp(-cfg.lam * tau)
+
+
+def compensated_alpha(eps, tau, cfg: CompensationConfig):
+    return compensate(adaboost_alpha(eps), tau, cfg)

@@ -1,0 +1,28 @@
+"""Sharding-aware batching helpers: place host numpy batches onto the mesh
+with the right PartitionSpec (batch over data/pod axes)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def batch_sharding(mesh, batch_axes=("data",)) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_axes))
+
+
+def place(batch: Dict[str, np.ndarray], mesh=None,
+          batch_axes=("data",)) -> Dict[str, jnp.ndarray]:
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    sh = batch_sharding(mesh, batch_axes)
+    return {k: jax.device_put(jnp.asarray(v), sh) for k, v in batch.items()}
+
+
+def sharded_iterator(it: Iterator[Dict[str, np.ndarray]], mesh=None,
+                     batch_axes=("data",)) -> Iterator[Dict[str, jnp.ndarray]]:
+    for b in it:
+        yield place(b, mesh, batch_axes)

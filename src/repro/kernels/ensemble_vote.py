@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused weighted ensemble vote H(x) = sum_t a~_t h_t(x).
+
+Fuses the (T-learner x N-sample) weighted reduction into one VMEM-resident
+pass — the XLA fallback materializes the full scaled-margin tensor in HBM
+(T x N x 4 bytes) before reducing; here each (block_t x block_n) tile is
+reduced on the fly into the (block_n,) output accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vote_kernel(m_ref, a_ref, out_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = m_ref[...].astype(jnp.float32)      # (bt, bn)
+    a = a_ref[...].astype(jnp.float32)      # (bt,)
+    out_ref[...] += jnp.einsum("t,tn->n", a, m,
+                               preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def ensemble_vote_kernel(margins: jnp.ndarray, alphas: jnp.ndarray, *,
+                         block_t: int = 128, block_n: int = 512,
+                         interpret: bool = True) -> jnp.ndarray:
+    """margins: (T,N); alphas: (T,) -> (N,) f32 ensemble margin.
+    T, N must be multiples of the block sizes (ops wrapper pads with zeros;
+    zero-alpha rows contribute nothing)."""
+    T, N = margins.shape
+    assert T % block_t == 0 and N % block_n == 0, (T, N, block_t, block_n)
+    grid = (N // block_n, T // block_t)   # T innermost: accumulate per n-block
+    return pl.pallas_call(
+        _vote_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_n), lambda n, t: (t, n)),
+            pl.BlockSpec((block_t,), lambda n, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda n, t: (n,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(margins, alphas)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention with online
+softmax — the optimized prefill path for the 32k-sequence shapes.
+
+TPU adaptation (DESIGN.md §4): a GPU flash kernel stages K/V tiles through
+shared memory per thread-block; here the grid is (batch*heads, q-blocks,
+k-blocks) with the k-block dimension innermost ("arbitrary" semantics —
+sequential on core), carrying the running max / denominator / accumulator
+in VMEM scratch across k-steps.  Block shapes default to (128, 128), MXU-
+aligned; head_dim is padded to 128 lanes by the ops wrapper.
+
+Causality is handled by masking inside the tile (fully-masked tiles are
+still visited; the cost model in benchmarks/kernel_bench.py accounts the
+factor-2 overhead vs a block-skipping schedule, a known trade-off of
+rectangular grids).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)              # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    correction = jnp.exp(m_prev - m_new)
+    l_new = correction * l_ref[...] + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * correction[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q,k,v: (BH, T, d) -> (BH, T, d).  T divisible by both block sizes;
+    d should be 128-lane padded (ops wrapper handles both)."""
+    BH, T, d = q.shape
+    assert T % block_q == 0 and T % block_k == 0, (T, block_q, block_k)
+    scale = 1.0 / math.sqrt(d)
+    grid = (BH, T // block_q, T // block_k)
+    kern = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                             block_k=block_k, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,110 @@
+"""Jit'd public wrappers for the Pallas kernels: padding to hardware-aligned
+block shapes, dtype handling, interpret-mode selection (CPU containers run
+the kernels in interpret mode; on a real TPU backend `interpret=False`
+compiles them to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stump_scan import stump_scan_kernel
+from repro.kernels.ensemble_vote import ensemble_vote_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def stump_scan(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+               thresholds: jnp.ndarray, *, block_n: int = 256,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Weighted stump errors over the (F, T) grid.  Pads N to block_n with
+    zero-weight rows (no contribution) and F to the 8-sublane boundary."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N, F = x.shape
+    T = thresholds.shape[1]
+    xp = _pad_to(x, 0, block_n)
+    yp = _pad_to(y, 0, block_n, value=1.0)
+    wp = _pad_to(w, 0, block_n, value=0.0)
+    xp = _pad_to(xp, 1, 8)
+    thr = _pad_to(_pad_to(thresholds, 0, 8, value=jnp.inf), 1, 8,
+                  value=jnp.inf)
+    err = stump_scan_kernel(xp, yp, wp, thr, block_n=block_n,
+                            interpret=interpret)
+    return err[:F, :T]
+
+
+def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
+                  block_t: int = 128, block_n: int = 512,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """H margins = sum_t alpha_t h_t.  Pads T with zero-alpha rows and N
+    with dummy columns."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    T, N = margins.shape
+    bt = min(block_t, max(8, 1 << (T - 1).bit_length()))
+    bn = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    mp = _pad_to(_pad_to(margins, 0, bt), 1, bn)
+    ap = _pad_to(alphas, 0, bt, value=0.0)
+    out = ensemble_vote_kernel(mp, ap, block_t=bt, block_n=bn,
+                               interpret=interpret)
+    return out[:N]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q,k,v: (B,H,T,d) -> (B,H,T,d).  Pads T to the block boundary (extra
+    keys masked out by causality / zero value) and d to 128 lanes."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, H, T, d = q.shape
+    bq = min(block_q, T) if T % min(block_q, T) == 0 else T
+    bk = min(block_k, T) if T % min(block_k, T) == 0 else T
+    qf = q.reshape(B * H, T, d)
+    kf = k.reshape(B * H, T, d)
+    vf = v.reshape(B * H, T, d)
+    dp = (-d) % 128
+    if dp:
+        # zero-pad head_dim: extra lanes contribute 0 to q.k and to output
+        qf = _pad_to(qf, 2, 128)
+        kf = _pad_to(kf, 2, 128)
+        vf = _pad_to(vf, 2, 128)
+    # NOTE: the kernel scales by 1/sqrt(d_padded); pre-scale q so the
+    # effective scale reflects the true head_dim
+    if dp:
+        qf = qf * (((d + dp) ** 0.5) / (d ** 0.5))
+    out = flash_attention_kernel(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+        interpret=interpret)
+    out = out[..., :d]
+    return out.reshape(B, H, T, d)
+
+
+def dist_update(alpha, D, y, h, *, block_n: int = 1024,
+                interpret: bool | None = None):
+    """Fused AdaBoost distribution update -> (D_normalized, Z).
+    Pads N with zero-mass rows (no contribution to Z)."""
+    from repro.kernels.dist_update import dist_update_kernel
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N = D.shape[0]
+    bn = min(block_n, max(256, 1 << (N - 1).bit_length()))
+    Dp = _pad_to(D, 0, bn, value=0.0)
+    yp = _pad_to(y, 0, bn, value=1.0)
+    hp = _pad_to(h, 0, bn, value=0.0)
+    w, Z = dist_update_kernel(jnp.asarray(alpha, jnp.float32), Dp, yp, hp,
+                              block_n=bn, interpret=interpret)
+    return (w / (Z[0] + 1e-30))[:N], Z[0]

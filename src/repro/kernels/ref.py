@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the semantics the kernel must match
+(asserted allclose in tests over shape/dtype sweeps, with the kernel run in
+interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def stump_scan_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+                   thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Weighted error of the polarity-(+1) stump for every (feature,
+    threshold) pair.
+
+    x: (N,F); y: (N,) in {-1,+1}; w: (N,); thresholds: (F,T) -> (F,T) f32.
+
+    err[f,t] = sum_i w_i * [ sign(x[i,f] - thr[f,t]) != y_i ]
+    (sign(0) counts as -1: strict `>` decides the +1 side.)
+    """
+    pred = jnp.where(x[:, :, None] > thresholds[None, :, :], 1.0, -1.0)
+    miss = (pred != y[:, None, None]).astype(jnp.float32)
+    return jnp.einsum("n,nft->ft", w.astype(jnp.float32), miss)
+
+
+def ensemble_vote_ref(margins: jnp.ndarray, alphas: jnp.ndarray) -> jnp.ndarray:
+    """Weighted ensemble margin: H(x) = sum_t alpha_t h_t(x).
+
+    margins: (T, N) per-learner predictions in [-1, 1]; alphas: (T,)
+    (already staleness-compensated) -> (N,) f32 ensemble margin.
+    """
+    return jnp.einsum("t,tn->n", alphas.astype(jnp.float32),
+                      margins.astype(jnp.float32))
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """Plain softmax attention.  q,k,v: (B,H,T,hd) -> (B,H,T,hd)."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    wts = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", wts, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def dist_update_ref(alpha, D, y, h):
+    """AdaBoost distribution update (paper eq. 4): returns normalized D'.
+
+    D'_i = D_i exp(-alpha y_i h_i) / Z,  Z = sum_i D_i exp(-alpha y_i h_i).
+    """
+    import jax.numpy as _jnp
+    w = D.astype(_jnp.float32) * _jnp.exp(
+        -_jnp.asarray(alpha, _jnp.float32) * y.astype(_jnp.float32)
+        * h.astype(_jnp.float32))
+    Z = _jnp.sum(w)
+    return w / (Z + 1e-30), Z

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: AdaBoost weighted-error sweep over the (feature x
+threshold) stump grid — the compute hot-spot of every boosting round.
+
+TPU adaptation (DESIGN.md §4): instead of the GPU one-thread-per-threshold
+mapping, the sample matrix is tiled into (block_n, F) VMEM blocks; each grid
+step broadcasts its block against the full (F, T) threshold grid on the VPU
+and accumulates the (F, T) weighted-error tile in the output block, which
+stays resident in VMEM across the sample-block grid (revisiting-output
+pattern).  F is padded to the 128-lane boundary by the ops wrapper.
+
+    err[f, t] = sum_i w_i * [ sign(x[i,f] - thr[f,t]) != y_i ]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stump_kernel(x_ref, y_ref, w_ref, thr_ref, err_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        err_ref[...] = jnp.zeros_like(err_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bn, F)
+    y = y_ref[...].astype(jnp.float32)          # (bn,)
+    w = w_ref[...].astype(jnp.float32)          # (bn,)
+    thr = thr_ref[...].astype(jnp.float32)      # (F, T)
+
+    pred = jnp.where(x[:, :, None] > thr[None, :, :], 1.0, -1.0)  # (bn,F,T)
+    miss = (pred != y[:, None, None]).astype(jnp.float32)
+    err_ref[...] += jnp.einsum(
+        "n,nft->ft", w, miss, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def stump_scan_kernel(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+                      thresholds: jnp.ndarray, *, block_n: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x: (N,F); y,w: (N,); thresholds: (F,T) -> (F,T) f32.
+    N must be a multiple of block_n (ops wrapper pads with w=0 rows)."""
+    N, F = x.shape
+    T = thresholds.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _stump_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((F, T), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((F, T), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, T), jnp.float32),
+        interpret=interpret,
+    )(x, y, w, thresholds)

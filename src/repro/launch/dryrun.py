@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production mesh and record the compiled
+artifact's cost/memory/collective statistics for §Roofline.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+jax import and locks the backend to 512 placeholder host devices):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --variant kv_shard_seq
+
+Artifacts go to artifacts/dryrun/<arch>__<shape>__<mesh>__<variant>.json and
+are skipped when present (delete to re-run).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+
+from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shape, shape_applicable
+from repro.launch import shardings as sh
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# sharding-policy variants for §Perf hillclimbing
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "kv_shard_seq": {"kv_shard_seq": True},
+    "no_fsdp": {"fsdp": False},
+    "moe_expert_parallel": {"moe_expert_parallel": True},
+    "moe_bf16_psum": {"moe_tensor_sm": True},
+    "moe_cap1": {"moe_capacity": 1.0},
+    "moe_ep_cap1": {"moe_expert_parallel": True, "moe_capacity": 1.0},
+    "kv_seq_model": {"kv_seq_model": True},
+    "serve_nofsdp": {"fsdp": False},
+    "serve_opt": {"fsdp": False, "kv_seq_model": True},
+    "mesh64x4": {"mesh_data": 64, "mesh_model": 4},
+    "mesh32x8": {"mesh_data": 32, "mesh_model": 8},
+    "mesh64x4_ep_cap1": {"mesh_data": 64, "mesh_model": 4,
+                         "moe_expert_parallel": True, "moe_capacity": 1.0},
+    "mesh32x8_ep_cap1": {"mesh_data": 32, "mesh_model": 8,
+                         "moe_expert_parallel": True, "moe_capacity": 1.0},
+    "mesh32x8_cap1": {"mesh_data": 32, "mesh_model": 8, "moe_capacity": 1.0},
+    "no_remat": {},          # handled via remat flag below
+}
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Sum result-buffer bytes of every collective op in the (post-SPMD,
+    per-device) HLO.  `-start` variants counted, `-done` skipped."""
+    out = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    # e.g.:  %ag = bf16[9,2048,688]{...} all-gather(...)
+    pat = re.compile(
+        r"=\s*(?:\([^)]*\)\s*)?([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(")
+    for mt in pat.finditer(hlo_text):
+        dt, dims, op = mt.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op]["count"] += 1
+        out[op]["bytes"] += n * DTYPE_BYTES[dt]
+    # tuple-shaped collectives:  ( bf16[..], bf16[..] ) all-reduce-start
+    tpat = re.compile(
+        r"=\s*\(([^)]*)\)\s*"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(")
+    spat = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+    for mt in tpat.finditer(hlo_text):
+        inner, op = mt.groups()
+        total = 0
+        for dt, dims in spat.findall(inner):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        if total:
+            out[op]["count"] += 1
+            out[op]["bytes"] += total
+    return out
+
+
+def run_one(arch_name: str, shape_name: str, *, multi_pod: bool,
+            variant: str = "baseline", force: bool = False) -> Dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(
+        ART_DIR, f"{arch_name}__{shape_name}__{mesh_name}__{variant}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "variant": variant, "status": "skipped",
+               "reason": "full-attention arch at 524k decode (DESIGN.md)"}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    vkw = dict(VARIANTS.get(variant, {}))
+    data_sz = vkw.pop("mesh_data", 16)
+    model_sz = vkw.pop("mesh_model", 16)
+    mesh = make_production_mesh(multi_pod=multi_pod, data=data_sz,
+                                model=model_sz)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    pol = sh.ShardingPolicy(batch_axes=batch_axes, **vkw)
+    remat = variant != "no_remat"
+
+    t0 = time.time()
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "n_devices": mesh.size}
+    try:
+        from repro.sharding_ctx import activation_sharding
+        built = build(cfg, shape, mesh, pol, remat=remat)
+        in_sh = sh.to_named(mesh, built["in_shardings"])
+        out_sh = sh.to_named(mesh, built["out_shardings"])
+        batch_ok = shape.global_batch % sh._axis_size(mesh, batch_axes) == 0
+        with mesh, activation_sharding(batch_axes, "model",
+                                       batch_shardable=batch_ok, mesh=mesh,
+                                       fsdp_axis="data" if pol.fsdp else None):
+            jitted = jax.jit(built["fn"], in_shardings=in_sh,
+                             out_shardings=out_sh)
+            lowered = jitted.lower(*built["args"])
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        cost = compiled.cost_analysis() or {}
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed_per_device"] = float(
+            cost.get("bytes accessed", 0.0))
+        rec["cost_analysis_keys"] = sorted(
+            k for k in cost.keys() if not k.startswith("bytes accessed"))[:40]
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes",
+                    "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis"] = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        ana = hlo_analyze(hlo)
+        rec["flops_corrected"] = ana["flops_corrected"]
+        rec["bytes_accessed_corrected"] = ana["bytes_accessed_corrected"]
+        rec["collectives"] = ana["collectives"]
+        rec["collective_bytes_total"] = ana["collective_bytes_total"]
+        rec["hlo_bytes"] = len(hlo)
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    ok = err = skip = 0
+    for a, s in combos:
+        rec = run_one(a, s, multi_pod=args.multi_pod, variant=args.variant,
+                      force=args.force)
+        st = rec["status"]
+        ok += st == "ok"
+        err += st == "error"
+        skip += st == "skipped"
+        msg = rec.get("error", "")[:120]
+        gf = rec.get("flops_corrected", rec.get("flops_per_device", 0)) / 1e9
+        cb = rec.get("collective_bytes_total", 0) / 1e6
+        print(f"[{st:7s}] {a:26s} {s:12s} {rec['mesh']:10s} "
+              f"{rec.get('compile_s', 0):7.1f}s  {gf:10.1f} GF/dev  "
+              f"{cb:10.1f} MB coll  {msg}", flush=True)
+    print(f"done: {ok} ok, {skip} skipped, {err} errors")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

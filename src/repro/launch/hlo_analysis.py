@@ -1,0 +1,248 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) visits every while-loop
+body ONCE, so a scan-over-layers model under-reports FLOPs/bytes/collective
+traffic by roughly the layer count.  The compiled HLO text, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on every while op — so an
+exact correction is possible by walking the call graph and multiplying each
+computation's costs by the product of enclosing trip counts.
+
+This module implements that walk plus a minimal per-op cost model:
+
+* FLOPs: 2 * prod(result_dims) * prod(contracted_dims) per ``dot`` op
+  (elementwise/reduce FLOPs are ignored — matmuls dominate every shape we
+  analyze; the roofline compute term is MXU-bound anyway).
+* collective bytes: result-buffer bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (incl. tuple-shaped and
+  ``-start`` async forms).
+* bytes accessed: sum of (operands + result) buffer bytes over ops in
+  non-fused computations — the same convention HloCostAnalysis uses, with
+  fusion internals attributed to the fusion call site.
+
+Validated against a fully-unrolled compile of qwen1.5-0.5b/train_4k
+(scan-corrected vs unrolled FLOPs agree; see tests/test_hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s+(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RES = [
+    re.compile(r"body=(%[\w.\-]+)"),
+    re.compile(r"condition=(%[\w.\-]+)"),
+    re.compile(r"calls=(%[\w.\-]+)"),
+    re.compile(r"to_apply=(%[\w.\-]+)"),
+    re.compile(r"branch_computations=\{([^}]*)\}"),
+]
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    dtype: Optional[str]
+    dims: Optional[Tuple[int, ...]]
+    tuple_shapes: List[Tuple[str, Tuple[int, ...]]]
+    rhs: str          # full right-hand side text
+
+
+def _parse_shape_prefix(rhs: str):
+    """Parse `f32[2,3]{...}` or `(f32[2], s32[])` result type prefix."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        close = rhs.find(")")
+        inner = rhs[1:close]
+        shapes = []
+        for dt, dims in _SHAPE_RE.findall(inner):
+            shapes.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+        return None, None, shapes, rhs[close + 1:]
+    m = _SHAPE_RE.match(rhs)
+    if not m:
+        return None, None, [], rhs
+    dt, dims = m.groups()
+    return (dt, tuple(int(d) for d in dims.split(",") if d), [],
+            rhs[m.end():])
+
+
+def _opcode_of(rest: str) -> str:
+    rest = rest.lstrip()
+    # strip layout `{...}` annotations
+    while rest.startswith("{"):
+        rest = rest[rest.find("}") + 1:].lstrip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    return m.group(1) if m else rest.split("(")[0].strip()
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            if line.strip() == "}":
+                cur = None
+            continue
+        name, rhs = md.groups()
+        dt, dims, tshapes, rest = _parse_shape_prefix(rhs)
+        opcode = _opcode_of(rest)
+        # drop `-start`/`-done` suffixes for classification
+        base = opcode
+        for suf in ("-start", "-done", "-update"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        comps[cur].append(Op(name, base, dt, dims, tshapes, rhs))
+    return comps
+
+
+def _bytes_of(dt, dims) -> int:
+    if dt is None or dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DTYPE_BYTES[dt]
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    shape_map: Dict[str, Tuple[Optional[str], Optional[Tuple[int, ...]]]] = {}
+    for ops in comps.values():
+        for op in ops:
+            shape_map[op.name] = (op.dtype, op.dims)
+
+    # call graph with while-trip multipliers
+    entry = None
+    for name in comps:
+        if "ENTRY" in name or entry is None:
+            pass
+    # the ENTRY computation is the one introduced by a line starting ENTRY
+    # _COMP_RE keeps its name in group 2; detect by re-scanning text:
+    m = re.search(r"^ENTRY\s+(%?[\w.\-]+)", text, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+
+    mult: Dict[str, float] = defaultdict(float)
+    fused_bodies = set()
+
+    def visit(comp: str, m_in: float):
+        if comp not in comps:
+            return
+        if mult[comp] >= m_in:   # already visited with >= multiplier
+            return
+        mult[comp] = m_in
+        for op in comps[comp]:
+            trip = 1
+            tm = _TRIP_RE.search(op.rhs)
+            if tm:
+                trip = int(tm.group(1))
+            for cre in _CALLEE_RES:
+                for cm in cre.finditer(op.rhs):
+                    targets = cm.group(1)
+                    for t in re.findall(r"%[\w.\-]+", targets):
+                        is_body = "body=" + t in op.rhs and op.opcode == "while"
+                        if "calls=" + t in op.rhs:
+                            fused_bodies.add(t)
+                        visit(t, m_in * (trip if is_body else 1))
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    flops_raw = 0.0
+    coll = {c: {"count": 0, "bytes": 0.0, "bytes_raw": 0.0}
+            for c in COLLECTIVES}
+    bytes_accessed = 0.0
+
+    for comp, ops in comps.items():
+        m_ = mult.get(comp, 0.0)
+        if m_ == 0.0:
+            continue
+        in_fused = comp in fused_bodies
+        for op in ops:
+            if op.opcode == "dot":
+                # contracted size from the lhs operand's shape
+                f = 0.0
+                rm = re.search(r"\(\s*(%[\w.\-]+)", op.rhs)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+                if rm and cm and op.dims is not None:
+                    lhs_dt, lhs_dims = shape_map.get(rm.group(1), (None, None))
+                    if lhs_dims is not None:
+                        contracted = 1
+                        for d in cm.group(1).split(","):
+                            if d:
+                                contracted *= lhs_dims[int(d)]
+                        n = 1
+                        for d in op.dims:
+                            n *= d
+                        f = 2.0 * n * contracted
+                flops += f * m_
+                flops_raw += f
+            if op.opcode in COLLECTIVES:
+                if op.dims is not None:
+                    b = _bytes_of(op.dtype, op.dims)
+                else:
+                    b = sum(_bytes_of(dt, dims) for dt, dims in op.tuple_shapes)
+                # `-done` variants were normalized away; `-start` ops carry
+                # the payload (async pair counted once via -start, and the
+                # sync form once via itself).  Skip the paired `-done`.
+                if "-done" in op.rhs.split("(")[0]:
+                    continue
+                coll[op.opcode]["count"] += 1
+                coll[op.opcode]["bytes"] += b * m_
+                coll[op.opcode]["bytes_raw"] += b
+            if (not in_fused and op.opcode not in _SKIP_BYTES_OPS
+                    and op.opcode not in ("while", "conditional", "call")):
+                b = (_bytes_of(op.dtype, op.dims) if op.dims is not None
+                     else sum(_bytes_of(dt, dims)
+                              for dt, dims in op.tuple_shapes))
+                # operands: only refs inside the op's argument parens (the
+                # text before the first close-paren) — attributes like
+                # body=%x / metadata would otherwise pollute the count
+                args = op.rhs.split("(", 1)[-1].split(")", 1)[0]
+                for ref in re.findall(r"%[\w.\-]+", args):
+                    dt, dims = shape_map.get(ref, (None, None))
+                    if dims is not None:
+                        b += _bytes_of(dt, dims)
+                bytes_accessed += b * m_
+
+    # async -start/-done double count: each async collective contributes its
+    # payload twice (start + its alias at done). Halve pairs heuristically:
+    # (the sync form dominates CPU HLO; keep simple and note the convention.)
+
+    return {
+        "flops_corrected": flops,
+        "flops_loop_body_once": flops_raw,
+        "collectives": {k: {"count": v["count"],
+                            "bytes": v["bytes"],
+                            "bytes_raw": v["bytes_raw"]}
+                        for k, v in coll.items()},
+        "collective_bytes_total": sum(v["bytes"] for v in coll.values()),
+        "bytes_accessed_corrected": bytes_accessed,
+        "n_computations": len(comps),
+    }

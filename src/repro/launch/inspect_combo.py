@@ -1,0 +1,116 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Hillclimb profiling tool: compile one (arch x shape x variant) combo and
+print the trip-count-weighted collective breakdown + biggest dots.
+
+    PYTHONPATH=src python -m repro.launch.inspect_combo --arch qwen3-moe-30b-a3b \
+        --shape train_4k [--variant baseline] [--multi-pod] [--top 15]
+"""
+import argparse
+
+import jax
+
+from repro.configs.registry import get_arch, get_shape
+from repro.launch import shardings as sh
+from repro.launch.dryrun import VARIANTS
+from repro.launch.hlo_analysis import analyze, parse_hlo, _bytes_of, _TRIP_RE
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build
+from repro.sharding_ctx import activation_sharding
+
+
+def compile_combo(arch: str, shape_name: str, variant: str = "baseline",
+                  multi_pod: bool = False):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    vkw = dict(VARIANTS.get(variant, {}))
+    data_sz = vkw.pop("mesh_data", 16)
+    model_sz = vkw.pop("mesh_model", 16)
+    mesh = make_production_mesh(multi_pod=multi_pod, data=data_sz,
+                                model=model_sz)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    pol = sh.ShardingPolicy(batch_axes=batch_axes, **vkw)
+    built = build(cfg, shape, mesh, pol, remat=(variant != "no_remat"))
+    batch_ok = shape.global_batch % sh._axis_size(mesh, batch_axes) == 0
+    with mesh, activation_sharding(batch_axes, "model",
+                                   batch_shardable=batch_ok, mesh=mesh,
+                                   fsdp_axis="data" if pol.fsdp else None):
+        compiled = jax.jit(
+            built["fn"],
+            in_shardings=sh.to_named(mesh, built["in_shardings"]),
+            out_shardings=sh.to_named(mesh, built["out_shardings"]),
+        ).lower(*built["args"]).compile()
+    return compiled
+
+
+def breakdown(hlo: str, top: int = 15):
+    comps = parse_hlo(hlo)
+    # multipliers from the analyzer's walk
+    res = analyze(hlo)
+    # re-walk to get per-op weighted rows
+    import re
+    from collections import defaultdict
+    mult = defaultdict(lambda: 1.0)
+    # reconstruct multiplier map (analyze doesn't export it; recompute)
+    entry_m = re.search(r"^ENTRY\s+(%?[\w.\-]+)", hlo, re.M)
+    entry = entry_m.group(1) if entry_m else next(iter(comps))
+    seen = {}
+
+    def visit(comp, m_in):
+        if comp not in comps or seen.get(comp, 0) >= m_in:
+            return
+        seen[comp] = m_in
+        for op in comps[comp]:
+            trip = 1
+            tm = _TRIP_RE.search(op.rhs)
+            if tm:
+                trip = int(tm.group(1))
+            for t in re.findall(
+                    r"(?:body|condition|calls|to_apply)=(%[\w.\-]+)", op.rhs):
+                visit(t, m_in * (trip if f"body={t}" in op.rhs
+                                 and op.opcode == "while" else 1))
+
+    visit(entry, 1.0)
+
+    rows = []
+    for cname, ops in comps.items():
+        m_ = seen.get(cname, 0)
+        if not m_:
+            continue
+        for op in ops:
+            if op.opcode in ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute"):
+                b = (_bytes_of(op.dtype, op.dims) if op.dims
+                     else sum(_bytes_of(d, s) for d, s in op.tuple_shapes))
+                meta = re.search(r'op_name="([^"]*)"', op.rhs)
+                rows.append((b * m_, b, m_, op.opcode, op.dtype or "tuple",
+                             str(op.dims or [t[1] for t in op.tuple_shapes])[:38],
+                             (meta.group(1)[-58:] if meta else "")))
+    rows.sort(reverse=True)
+    return res, rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    compiled = compile_combo(args.arch, args.shape, args.variant,
+                             args.multi_pod)
+    res, rows = breakdown(compiled.as_text(), args.top)
+    print(f"\n{args.arch} x {args.shape} x {args.variant}")
+    print(f"flops/dev {res['flops_corrected']/1e12:.2f} TF | "
+          f"collective {res['collective_bytes_total']/1e9:.1f} GB/dev")
+    print(f"{'GB(w)':>8} {'MB(1)':>9} {'x':>5}  {'op':<18} {'dt':<5} "
+          f"{'shape':<38} op_name")
+    for w, b, m_, opn, dt, dims, meta in rows:
+        print(f"{w/1e9:>8.1f} {b/1e6:>9.1f} {m_:>5.0f}  {opn:<18} {dt:<5} "
+              f"{dims:<38} {meta}")
+
+
+if __name__ == "__main__":
+    main()

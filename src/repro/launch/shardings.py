@@ -1,0 +1,211 @@
+"""Per-architecture sharding policy (DESIGN.md §6).
+
+Megatron-style tensor parallelism over the ``model`` axis + (optional) FSDP
+over ``data`` on the other weight dim, chosen per-tensor by *divisibility* —
+GQA configs whose kv-head count doesn't divide the model axis (qwen2.5-3b
+kv=2) silently fall back on that tensor instead of failing to lower.
+
+Every rule goes through :func:`_guard`, which drops an axis assignment
+whose dimension isn't divisible by the mesh axis size.  Stacked block
+leaves (leading ``n_periods`` axis from the scan-over-layers layout) get a
+leading ``None``.
+
+Variants (the §Perf hillclimb knobs) modulate the policy:
+  * ``kv_shard_seq``  — decode caches shard the sequence dim over ``data``
+    when the batch can't use it (long_500k), instead of replicating.
+  * ``no_fsdp``       — weights sharded over ``model`` only.
+  * (MoE expert-parallel lives in the model config: moe.sharding.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True
+    kv_shard_seq: bool = False        # variant: shard cache seq over data
+    moe_expert_parallel: bool = False  # variant: experts over model axis
+    moe_tensor_sm: bool = False       # variant: explicit bf16 psum (shard_map)
+    moe_capacity: float = 0.0         # variant: override capacity factor (0=keep)
+    kv_seq_model: bool = False        # variant: shard decode cache SEQ over model
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_axis: str = "data"
+
+
+def _axis_size(mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def _guard(mesh, shape: Tuple[int, ...], spec: Tuple) -> P:
+    """Drop axis assignments whose dim isn't divisible by the axis size,
+    or that repeat an axis already used."""
+    used = set()
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in axes):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, ax) != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(ax)
+    return P(*out)
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+               pol: ShardingPolicy) -> P:
+    name = path[-1]
+    in_moe = "moe" in path
+    lead = ()
+    body = shape
+    # stacked block leaves carry a leading n_periods / n_layers axis
+    if any(p in ("blocks", "enc_layers", "dec_layers") for p in path):
+        lead = (None,)
+        body = shape[1:]
+
+    m, f = pol.model_axis, (pol.fsdp_axis if pol.fsdp else None)
+
+    def mk(*spec):
+        return _guard(mesh, shape, lead + spec)
+
+    if name == "embed":
+        return _guard(mesh, shape, (m, f))
+    if name == "lm_head":
+        return _guard(mesh, shape, (f, m))
+    if name == "enc_pos":
+        return _guard(mesh, shape, (None, None))
+    if name in ("final_norm", "enc_norm", "norm", "norm1", "norm2", "norm_x",
+                "dt_bias", "conv_b", "A_log", "D"):
+        return P(*([None] * len(shape)))
+    if name in ("bq", "bk", "bv"):
+        return mk(m)
+    if in_moe and name in ("w_gate", "w_up"):
+        if pol.moe_expert_parallel:
+            return mk(m, f, None)       # (E->model, D->data, F)
+        return mk(None, f, m)           # (E, D->data, F->model)
+    if in_moe and name == "w_down":
+        if pol.moe_expert_parallel:
+            return mk(m, None, f)
+        return mk(None, m, f)
+    if name == "router":
+        return mk(f, None)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "wz", "wx",
+                "wB", "wC", "wdt"):
+        return mk(f, m)                 # (in -> data, out -> model)
+    if name in ("wo", "w_down"):
+        return mk(m, f)                 # (in -> model, out -> data)
+    if name == "conv_w":
+        return mk(None, m)
+    # fallback: replicate
+    return P(*([None] * len(shape)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(abstract_params, mesh, pol: ShardingPolicy):
+    """PartitionSpec pytree matching the (abstract) parameter tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        # route xattn projections through the attn rules
+        specs.append(_leaf_spec(names, leaf.shape, mesh, pol))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# inputs / caches
+# ---------------------------------------------------------------------------
+
+def input_spec_tree(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    pol: ShardingPolicy) -> Dict[str, P]:
+    B = shape.global_batch
+    batch_ok = B % _axis_size(mesh, pol.batch_axes) == 0
+    b = pol.batch_axes if batch_ok else None
+    out: Dict[str, P] = {}
+    if shape.mode == "train":
+        out["tokens"] = P(b, None)
+        out["labels"] = P(b, None)
+    elif shape.mode == "prefill":
+        out["tokens"] = P(b, None)
+    else:
+        out["tokens"] = P(b, None)
+        out["pos"] = P()
+    if cfg.frontend == "audio":
+        out["frames"] = P(b, None, None)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, abstract_caches, shape: ShapeConfig, mesh,
+                pol: ShardingPolicy):
+    """Decode-cache PartitionSpecs.
+
+    Priority per KV-cache leaf (np, B, S, Hkv, hd):
+      batch -> data when divisible; kv-heads -> model when divisible, else
+      head_dim -> model (hd is a multiple of 16 for every assigned arch);
+      with ``kv_shard_seq`` and an unshardable batch (long_500k B=1), the
+      sequence dim shards over data instead of idling the axis.
+    """
+    B = shape.global_batch
+    batch_ok = B % _axis_size(mesh, pol.batch_axes) == 0
+    b = pol.batch_axes if batch_ok else None
+    m = pol.model_axis
+
+    def leaf(path, l):
+        names = _path_names(path)
+        name = names[-1]
+        shp = l.shape
+        if name in ("k", "v"):
+            # (np_or_L, B, S, H, hd)
+            if pol.kv_seq_model:
+                # flash-decode layout: sequence over model, batch over data;
+                # softmax/attn reductions over the sharded S psum small stats
+                return _guard(mesh, shp, (None, b, m, None, None))
+            seq_ax = (pol.batch_axes if (pol.kv_shard_seq and not batch_ok)
+                      else None)
+            return _guard(mesh, shp, (None, b, seq_ax, m, m))
+        if name == "ssm":
+            # (np, B, H, hd, N)
+            return _guard(mesh, shp, (None, b, m, None, None))
+        if name == "conv":
+            # (np, B, k-1, conv_dim)
+            return _guard(mesh, shp, (None, b, None, m))
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_caches)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda v: isinstance(v, P))

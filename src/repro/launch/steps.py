@@ -1,0 +1,100 @@
+"""Step-function factories shared by the dry-run, the trainer and the
+server: build (fn, abstract inputs, in/out shardings) for one
+(architecture x input-shape x mesh x policy) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import Model, input_specs
+from repro.launch import shardings as sh
+from repro.optim import adamw, cosine_schedule
+
+
+def apply_policy_to_cfg(cfg: ArchConfig, pol: sh.ShardingPolicy) -> ArchConfig:
+    if cfg.moe is None:
+        return cfg
+    moe = cfg.moe
+    if pol.moe_expert_parallel:
+        moe = dataclasses.replace(moe, sharding="expert")
+    elif pol.moe_tensor_sm:
+        moe = dataclasses.replace(moe, sharding="tensor_sm")
+    if pol.moe_capacity > 0:
+        moe = dataclasses.replace(moe, capacity_factor=pol.moe_capacity)
+    return dataclasses.replace(cfg, moe=moe)
+
+
+def build(cfg: ArchConfig, shape: ShapeConfig, mesh, pol: sh.ShardingPolicy,
+          *, param_dtype=jnp.bfloat16, remat: bool = True):
+    """Returns dict with fn, args (abstract), in_shardings, out_shardings."""
+    cfg = apply_policy_to_cfg(cfg, pol)
+    model = Model(cfg)
+    aparams = model.abstract_params(param_dtype)
+    pspecs = sh.param_specs(aparams, mesh, pol)
+    ispecs = input_specs(cfg, shape)
+    ispec_tree = sh.input_spec_tree(cfg, shape, mesh, pol)
+
+    if shape.mode == "train":
+        opt = adamw(cosine_schedule(3e-4, 100, 10_000), b2=0.95,
+                    weight_decay=0.1, state_dtype=jnp.bfloat16)
+        aopt = jax.eval_shape(opt.init, aparams)
+        optspecs = {"m": pspecs, "v": pspecs}
+        astep = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def train_step(params, opt_state, step, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=remat), has_aux=True)(params)
+            new_params, new_opt = opt.update(grads, params, opt_state, step)
+            return new_params, new_opt, step + 1, {
+                "loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
+
+        return {
+            "fn": train_step,
+            "args": (aparams, aopt, astep, ispecs),
+            "in_shardings": (pspecs, optspecs, P(), ispec_tree),
+            "out_shardings": (pspecs, optspecs, P(),
+                              {"loss": P(), "ce": P(), "aux": P()}),
+        }
+
+    if shape.mode == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = model.prefill(params, batch)
+            return logits, caches
+
+        acaches = jax.eval_shape(
+            lambda p, b: model.prefill(p, b)[1], aparams, ispecs)
+        cspecs = sh.cache_specs(cfg, acaches, shape, mesh, pol)
+        B = shape.global_batch
+        batch_ok = B % sh._axis_size(mesh, pol.batch_axes) == 0
+        b = pol.batch_axes if batch_ok else None
+        return {
+            "fn": prefill_step,
+            "args": (aparams, ispecs),
+            "in_shardings": (pspecs, ispec_tree),
+            "out_shardings": (P(b, "model"), cspecs),
+        }
+
+    # decode: one token against a seq_len cache
+    def decode_fn(params, caches, batch):
+        logits, new_caches = model.decode_step(
+            params, batch["tokens"], caches, batch["pos"])
+        return logits, new_caches
+
+    acaches = model.abstract_caches(shape.global_batch, shape.seq_len)
+    cspecs = sh.cache_specs(cfg, acaches, shape, mesh, pol)
+    B = shape.global_batch
+    batch_ok = B % sh._axis_size(mesh, pol.batch_axes) == 0
+    b = pol.batch_axes if batch_ok else None
+    return {
+        "fn": decode_fn,
+        "args": (aparams, acaches, ispecs),
+        "in_shardings": (pspecs, cspecs, ispec_tree),
+        "out_shardings": (P(b, "model"), cspecs),
+    }

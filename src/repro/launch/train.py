@@ -1,0 +1,104 @@
+"""Training driver.
+
+CPU-scale (default): trains a reduced variant of any assigned architecture
+on the synthetic Markov token stream, with checkpointing and logging —
+the end-to-end path a real run would take.
+
+Production-scale flags mirror the dry-run: ``--preset full`` lowers the full
+config against the production mesh (requires the 512-device XLA flag, i.e.
+run dryrun.py instead for analysis; on real hardware this is the entry
+point).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-1.3b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save, restore, latest_step
+from repro.configs.base import reduced
+from repro.configs.registry import get_arch
+from repro.data.tokens import MarkovTokens
+from repro.models import Model
+from repro.optim import adamw, cosine_schedule
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float,
+               ckpt_dir=None, ckpt_every: int = 0, seed: int = 0,
+               log_every: int = 10):
+    model = Model(cfg)
+    key = jax.random.key(seed)
+    params = model.init(key)
+    opt = adamw(cosine_schedule(lr, max(steps // 20, 1), steps), b2=0.95,
+                weight_decay=0.01)
+    opt_state = opt.init(params)
+    step0 = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt_state), step0, _ = restore(
+            ckpt_dir, (params, opt_state))
+        print(f"resumed from step {step0}")
+
+    @jax.jit
+    def train_step(params, opt_state, step, batch_):
+        (loss, mets), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch_), has_aux=True)(params)
+        new_params, new_opt = opt.update(grads, params, opt_state, step)
+        return new_params, new_opt, loss, mets
+
+    stream = MarkovTokens(cfg.vocab_size, seed=seed)
+    losses = []
+    t0 = time.time()
+    for i, b in enumerate(stream.batches(batch, seq, steps - step0)):
+        step = step0 + i
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.frontend == "audio":
+            jb["frames"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        params, opt_state, loss, mets = train_step(
+            params, opt_state, jnp.asarray(step), jb)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {float(loss):7.4f}  "
+                  f"ce {float(mets['ce']):7.4f}  {dt:6.1f}s", flush=True)
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save(ckpt_dir, step + 1, (params, opt_state))
+    if ckpt_dir:
+        save(ckpt_dir, steps, (params, opt_state))
+    return params, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.preset == "smoke":
+        cfg = reduced(cfg, n_layers=args.layers, d_model=args.d_model)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    _, losses = train_loop(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every, seed=args.seed)
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean loss {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

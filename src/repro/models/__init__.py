@@ -1,0 +1,1 @@
+from repro.models.model_api import Model, input_specs, concrete_inputs  # noqa: F401

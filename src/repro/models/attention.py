@@ -1,0 +1,210 @@
+"""GQA attention with QKV bias, RoPE, sliding-window masks, logit softcap,
+chunked (memory-bounded) softmax, and KV-cache decode.
+
+The training/prefill path uses a q-chunked lazy-flash formulation — logits
+are materialized only per (block_q x T) tile — so 32k-sequence prefill
+lowers with bounded intermediates even without the Pallas kernel.  The
+Pallas `flash_attention` kernel (repro.kernels) is a drop-in replacement
+selected via ``impl="pallas"`` for the optimized path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, softcap
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, hq * hd, dtype),
+        "wk": dense_init(k2, d, hkv * hd, dtype),
+        "wv": dense_init(k3, d, hkv * hd, dtype),
+        "wo": dense_init(k4, hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                 positions: jnp.ndarray, rope: bool = True):
+    B, T, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, hq, hd)
+    k = k.reshape(B, T, hkv, hd)
+    v = v.reshape(B, T, hkv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: int) -> jnp.ndarray:
+    """(Tq, Tk) additive mask from absolute positions."""
+    dif = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(dif.shape, bool)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                  attn_cap: float, block_q: int = 512) -> jnp.ndarray:
+    """q:(B,Tq,Hq,hd) k,v:(B,Tk,Hkv,hd) -> (B,Tq,Hq,hd).
+
+    Scans over q blocks; each block materializes (B,Hq,block_q,Tk) logits
+    only.  GQA is handled by reshaping q heads into (Hkv, group) so the
+    einsum broadcasts without repeating K/V.
+    """
+    B, Tq, Hq, hd = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nblk = max(1, Tq // block_q)
+    bq = Tq // nblk if Tq % nblk == 0 else Tq  # fall back to single block
+    if Tq % bq != 0:
+        bq, nblk = Tq, 1
+
+    qg = q.reshape(B, Tq, Hkv, G, hd)
+    qs = qg.reshape(B, nblk, bq, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nblk, bq)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_block(carry, xs):
+        qb, qpb = xs                                 # (B,bq,Hkv,G,hd), (bq,)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32), kf)
+        logits = logits * scale
+        logits = softcap(logits, attn_cap)
+        bias = _mask_bias(qpb, k_pos, causal, window)        # (bq,Tk)
+        logits = logits + bias[None, None, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1)
+        ob = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+        return carry, ob.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_block, None, (qs, qp))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, Hq, hd)
+    return out
+
+
+def attn_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+               positions: jnp.ndarray, window: int = 0,
+               block_q: int = 512) -> jnp.ndarray:
+    """Full-sequence (train/prefill) attention; returns (B,T,D)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = _sdpa_chunked(q, k, v, positions, positions, causal=True,
+                        window=window, attn_cap=cfg.attn_softcap,
+                        block_q=block_q)
+    return out.reshape(B, T, cfg.n_heads * cfg.resolved_head_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    """Local (sliding-window) layers keep a window-capped ring cache."""
+    if kind == "attn_local" and cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    S = cache_len(cfg, kind, seq_len)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, S, hkv, hd), dtype),
+        "v": jnp.zeros((batch, S, hkv, hd), dtype),
+    }
+
+
+def attn_prefill(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                 positions: jnp.ndarray, kind: str, cache_seq: int,
+                 block_q: int = 512):
+    """Prefill: full attention + return a populated cache of cache_seq slots."""
+    B, T, _ = x.shape
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = _sdpa_chunked(q, k, v, positions, positions, causal=True,
+                        window=window, attn_cap=cfg.attn_softcap,
+                        block_q=block_q)
+    S = cache_len(cfg, kind, cache_seq)
+    if T >= S:
+        # keep the last S entries, laid out in ring order (slot = abs_pos % S)
+        # so attn_decode's ring-slot bookkeeping continues seamlessly
+        ck = jnp.roll(k[:, T - S:], shift=T % S, axis=1)
+        cv = jnp.roll(v[:, T - S:], shift=T % S, axis=1)
+    else:
+        pad = S - T
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)}
+    o = out.reshape(B, T, cfg.n_heads * cfg.resolved_head_dim) @ p["wo"]
+    return o, cache
+
+
+def attn_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                cfg: ArchConfig, *, pos: jnp.ndarray, kind: str):
+    """One-token decode. x: (B,1,D); cache k/v: (B,S,Hkv,hd); pos: scalar
+    int32 (number of tokens already in cache).  Returns (out, new_cache).
+
+    For sliding-window layers the cache is a ring buffer of window slots
+    (slot = pos % S); masking selects the valid window entries.
+    """
+    B = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    S = cache["k"].shape[1]
+    window = cfg.sliding_window if kind == "attn_local" else 0
+
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    slot = (pos % S).astype(jnp.int32)   # == pos for full-length caches
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    # absolute position of every cache slot (ring-aware)
+    idx = jnp.arange(S, dtype=jnp.int32)
+    # slots <= current slot hold positions (pos - slot + idx); slots beyond
+    # hold the previous wrap (pos - slot + idx - S)
+    abs_pos = pos - slot + idx + jnp.where(idx > slot, -S, 0)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window > 0:
+        valid &= (pos - abs_pos) < window
+
+    G = hq // hkv
+    qg = q.reshape(B, hkv, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, ck.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, hq * hd).astype(x.dtype) @ p["wo"]
+    return o, {"k": ck, "v": cv}

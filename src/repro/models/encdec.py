@@ -1,0 +1,246 @@
+"""Encoder-decoder stack (whisper-base).
+
+The audio frontend (mel spectrogram + conv feature extractor) is a STUB per
+the assignment carve-out: the encoder consumes precomputed frame embeddings
+of shape (B, encoder_seq, d_model) — ``input_specs()`` provides them.  The
+transformer encoder (bidirectional self-attention) and the decoder
+(causal self-attention + cross-attention + KV caches for both) are real.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    cross_entropy, dense_init, embed_apply, embed_init, lm_head_apply,
+    mlp_apply, mlp_init, rms_norm, rms_norm_init)
+from repro.sharding_ctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _xattn_init(key, cfg: ArchConfig, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, h * hd, dtype),
+        "wk": dense_init(k2, d, h * hd, dtype),
+        "wv": dense_init(k3, d, h * hd, dtype),
+        "wo": dense_init(k4, h * hd, d, dtype),
+    }
+
+
+def _enc_layer_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rms_norm_init(cfg.d_model, dtype),
+        "attn": attn_mod.attn_init(k1, cfg, dtype),
+        "norm2": rms_norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": rms_norm_init(cfg.d_model, dtype),
+        "attn": attn_mod.attn_init(k1, cfg, dtype),
+        "norm_x": rms_norm_init(cfg.d_model, dtype),
+        "xattn": _xattn_init(k2, cfg, dtype),
+        "norm2": rms_norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    stack = lambda mk, keys: jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[mk(k, cfg, dtype) for k in keys])
+    return {
+        "embed": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_pos": embed_init(ks[3], cfg.encoder_seq, cfg.d_model, dtype),
+        "enc_layers": stack(_enc_layer_init, enc_keys),
+        "enc_norm": rms_norm_init(cfg.d_model, dtype),
+        "dec_layers": stack(_dec_layer_init, dec_keys),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def _bidir_attn(p, x, cfg: ArchConfig, positions):
+    """Non-causal self attention (encoder)."""
+    B, T, _ = x.shape
+    q, k, v = attn_mod._project_qkv(p, x, cfg, positions, rope=False)
+    out = attn_mod._sdpa_chunked(q, k, v, positions, positions, causal=False,
+                                 window=0, attn_cap=0.0)
+    return out.reshape(B, T, cfg.n_heads * cfg.resolved_head_dim) @ p["wo"]
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stubbed conv-frontend output."""
+    B, S, D = frames.shape
+    x = frames + params["enc_pos"][None, :S]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        x = x + _bidir_attn(lp["attn"], h, cfg, positions)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act)
+        return constrain(x, "btd"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _cross_attn(p, x, enc_kv, cfg: ArchConfig):
+    """x: (B,T,D); enc_kv: precomputed (k,v) each (B,S_enc,H,hd)."""
+    B, T, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, T, h, hd)
+    k, v = enc_kv
+    tq = jnp.arange(T, dtype=jnp.int32)
+    tk = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = attn_mod._sdpa_chunked(q, k, v, tq, tk, causal=False, window=0,
+                                 attn_cap=0.0)
+    return out.reshape(B, T, h * hd) @ p["wo"]
+
+
+def enc_kv(params_layer, enc_out: jnp.ndarray, cfg: ArchConfig):
+    B, S, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = (enc_out @ params_layer["wk"]).reshape(B, S, h, hd)
+    v = (enc_out @ params_layer["wv"]).reshape(B, S, h, hd)
+    return k, v
+
+
+def _dec_block(lp, x, enc_out, cfg: ArchConfig, positions):
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + attn_mod.attn_apply(lp["attn"], h, cfg, positions=positions)
+    h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+    x = x + _cross_attn(lp["xattn"], h, enc_kv(lp["xattn"], enc_out, cfg), cfg)
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    x = x + mlp_apply(lp["mlp"], h, cfg.act)
+    return x
+
+
+def forward(params: Params, frames: jnp.ndarray, tokens: jnp.ndarray,
+            cfg: ArchConfig, *, remat: bool = True):
+    """Training forward: (frames (B,S_enc,D), tokens (B,T)) -> logits."""
+    enc_out = encode(params, frames, cfg)
+    B, T = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, lp):
+        return constrain(_dec_block(lp, x, enc_out, cfg, positions),
+                         "btd"), None
+
+    b = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(b, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(lm_head_apply(params["lm_head"], x, False, 0.0),
+                       "btv")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Params, batch, cfg: ArchConfig, *, remat: bool = True):
+    logits, aux = forward(params, batch["frames"], batch["tokens"], cfg,
+                          remat=remat)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Self-attn KV cache per decoder layer + precomputed cross K/V."""
+    L = cfg.n_layers
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    self_c = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (L,) + l.shape),
+        attn_mod.init_cache(cfg, "attn", batch, seq_len, dtype))
+    cross = {
+        "k": jnp.zeros((L, batch, cfg.encoder_seq, h, hd), dtype),
+        "v": jnp.zeros((L, batch, cfg.encoder_seq, h, hd), dtype),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, seq_len, dtype))
+
+
+def prefill(params: Params, frames: jnp.ndarray, tokens: jnp.ndarray,
+            cfg: ArchConfig, cache_seq: Optional[int] = None):
+    """Encode + consume prompt tokens; build decode caches."""
+    enc_out = encode(params, frames, cfg)
+    B, T = tokens.shape
+    S = cache_seq or T
+    x = embed_apply(params["embed"], tokens)
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        a, self_c = attn_mod.attn_prefill(lp["attn"], h, cfg,
+                                          positions=positions, kind="attn",
+                                          cache_seq=S)
+        x = x + a
+        ck, cv = enc_kv(lp["xattn"], enc_out, cfg)
+        h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        x = x + _cross_attn(lp["xattn"], h, (ck, cv), cfg)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act)
+        cross_c = {"k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)}
+        return constrain(x, "btd"), {"self": self_c, "cross": cross_c}
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head_apply(params["lm_head"], x[:, -1], False, 0.0)
+    return logits, caches
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, caches, pos, cfg):
+    """tokens: (B,1). caches: {"self": ..., "cross": ...} stacked over layers."""
+    x = embed_apply(params["embed"], tokens)
+
+    def body(x, xs):
+        lp, self_c, ck, cv = xs
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        a, c1 = attn_mod.attn_decode(lp["attn"], h, self_c, cfg, pos=pos,
+                                     kind="attn")
+        x = x + a
+        h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        x = x + _cross_attn(lp["xattn"], h, (ck, cv), cfg)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act)
+        return constrain(x, "btd"), c1
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["self"],
+                  caches["cross"]["k"], caches["cross"]["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head_apply(params["lm_head"], x[:, 0], False, 0.0)
+    return logits, {"self": self_new, "cross": caches["cross"]}

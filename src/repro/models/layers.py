@@ -1,0 +1,125 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over explicit parameter pytrees (dicts of
+jnp arrays) so they compose with jit/scan/shard_map without a framework
+dependency.  Initializers take an explicit PRNG key.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    # stored as (scale - 1) so zeros-init == identity, gemma-style
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# softcap (gemma2)
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, head_dim); positions: (..., T) or (T,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    gate = x @ p["w_gate"]
+    gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embed_apply(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def lm_head_apply(table_or_w: jnp.ndarray, x: jnp.ndarray, tied: bool,
+                  logit_cap: float = 0.0) -> jnp.ndarray:
+    if tied:
+        logits = x @ table_or_w.T
+    else:
+        logits = x @ table_or_w
+    return softcap(logits.astype(jnp.float32), logit_cap)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_true: int) -> jnp.ndarray:
+    """Mean token cross-entropy; positions >= vocab_true (padding vocab) masked."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad > vocab_true:
+        neg = jnp.full((vpad - vocab_true,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab_true:].add(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,214 @@
+"""Mamba2 SSD (state-space duality) block — chunked training scan + O(1)
+decode recurrence [arXiv:2405.21060].
+
+The training path evaluates the SSD dual form chunk-by-chunk inside one
+``lax.scan``: each chunk computes the quadratic intra-chunk term (an
+attention-like (L x L) product under the cumulative-decay mask) plus the
+inter-chunk term from the carried state, then updates the state.  Keeping
+the (B,H,L,L) score tile inside the scan body bounds transient memory to a
+single chunk regardless of sequence length — the TPU-VMEM-friendly
+formulation of the paper's blocked algorithm.
+
+Numerics: A < 0, so every exponent that appears (cum_t - cum_s for t>=s,
+total - cum_s, cum_t) is <= 0 and the exponentials are stable in fp32.
+
+Decode carries {ssm_state: (B,H,P,N), conv_state: (B,k-1,conv_dim)} — the
+SSM analogue of a KV cache, O(1) in sequence length (why mamba2 is the
+long_500k-eligible architecture).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MambaConfig
+from repro.models.layers import dense_init, rms_norm, rms_norm_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ArchConfig):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    return mc, d, di, nh, mc.head_dim, mc.d_state
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    mc, d, di, nh, hd, N = _dims(cfg)
+    return di + 2 * N          # conv runs over [x, B, C] (single group)
+
+
+def mamba_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    mc, d, di, nh, hd, N = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    cd = conv_dim(cfg)
+    return {
+        "wz": dense_init(ks[0], d, di, dtype),
+        "wx": dense_init(ks[1], d, di, dtype),
+        "wB": dense_init(ks[2], d, N, dtype),
+        "wC": dense_init(ks[3], d, N, dtype),
+        "wdt": dense_init(ks[4], d, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (mc.d_conv, cd), jnp.float32)
+                   * (1.0 / mc.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": rms_norm_init(di, dtype),
+        "wo": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time.  xbc: (B,T,Cd); w: (k,Cd)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):                       # k is 4: unrolled shifts
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i]
+    return out + b
+
+
+def _project(p: Params, x: jnp.ndarray, cfg: ArchConfig):
+    """x: (B,T,D) -> z,(conv-in xBC), dt."""
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    Bp = x @ p["wB"]
+    Cp = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    return z, xbc, dt
+
+
+def _split_conv(xbc: jnp.ndarray, cfg: ArchConfig):
+    mc, d, di, nh, hd, N = _dims(cfg)
+    xin, Bp, Cp = jnp.split(xbc, [di, di + N], axis=-1)
+    return jax.nn.silu(xin), Bp, Cp
+
+
+def _ssd_chunk_scan(xh, Bp, Cp, dt, A, h0):
+    """One-shot SSD over all chunks.
+
+    xh: (B,C,L,H,P); Bp,Cp: (B,C,L,N); dt: (B,C,L,H) fp32; A: (H,) negative.
+    h0: (B,H,P,N) initial state.  Returns (y: (B,C,L,H,P), h_final)."""
+
+    def body(h, inp):
+        xc, Bc, Cc, dtc = inp                # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        dA = dtc * A                          # (B,L,H) <= 0
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1]                    # (B,H)
+
+        # intra-chunk (dual / attention-like) term.  Mask the exponent (not
+        # the product): for t < s the difference is positive and exp would
+        # overflow to inf, poisoning the 0-mask with inf*0=nan.
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)                  # (B,L,L)
+        expo = cum[:, :, None, :] - cum[:, None, :, :]            # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], expo, -jnp.inf))
+        scores = CB[..., None] * decay * dtc[:, None, :, :]       # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, xh_f(xc))
+
+        # inter-chunk term from carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", Cc, h)
+
+        # state update
+        w = jnp.exp(total[:, None, :] - cum) * dtc                # (B,L,H)
+        S = jnp.einsum("blh,bln,blhp->bhpn", w, Bc, xh_f(xc))
+        h1 = jnp.exp(total)[:, :, None, None] * h + S
+        return h1, (y_intra + y_inter)
+
+    def xh_f(v):
+        return v.astype(jnp.float32)
+
+    xs = (jnp.swapaxes(xh, 0, 1), jnp.swapaxes(Bp, 0, 1),
+          jnp.swapaxes(Cp, 0, 1), jnp.swapaxes(dt, 0, 1))
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    return jnp.swapaxes(ys, 0, 1), h_final
+
+
+def _ssd(xin, Bp, Cp, dt, A, D, cfg: ArchConfig, h0=None):
+    """xin: (B,T,di) post-conv; returns (y: (B,T,di), h_final: (B,H,P,N))."""
+    mc, d, di, nh, hd, N = _dims(cfg)
+    B, T, _ = xin.shape
+    L = min(mc.chunk, T)
+    while T % L != 0:
+        L //= 2
+    L = max(L, 1)
+    C = T // L
+    xh = xin.reshape(B, C, L, nh, hd)
+    Bc = Bp.reshape(B, C, L, N).astype(jnp.float32)
+    Cc = Cp.reshape(B, C, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B, C, L, nh)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    y, h = _ssd_chunk_scan(xh, Bc, Cc, dtc, A, h0)
+    y = y.reshape(B, T, nh, hd) + D[None, None, :, None] * xh.reshape(B, T, nh, hd).astype(jnp.float32)
+    return y.reshape(B, T, di).astype(xin.dtype), h
+
+
+def mamba_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    y, _ = mamba_forward(p, x, cfg)
+    return y
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                  h0=None, conv0=None):
+    """Full-sequence forward.  Returns (out (B,T,D), states dict)."""
+    mc, d, di, nh, hd, N = _dims(cfg)
+    z, xbc, dt = _project(p, x, cfg)
+    if conv0 is not None:
+        # prepend carried conv state (used by chunked prefill continuation)
+        xbc_in = jnp.concatenate([conv0, xbc], axis=1)
+        conv_out = _causal_conv(xbc_in, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin, Bp, Cp = _split_conv(conv_out, cfg)
+    A = -jnp.exp(p["A_log"])
+    y, h = _ssd(xin, Bp, Cp, dt, A, p["D"], cfg, h0)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+    k = mc.d_conv
+    conv_state = xbc[:, -(k - 1):] if xbc.shape[1] >= k - 1 else jnp.pad(
+        xbc, ((0, 0), (k - 1 - xbc.shape[1], 0), (0, 0)))
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    mc, d, di, nh, hd, N = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, hd, N), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, conv_dim(cfg)), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, state: Dict, cfg: ArchConfig):
+    """One-token decode.  x: (B,1,D).  Returns (out (B,1,D), new_state)."""
+    mc, d, di, nh, hd, N = _dims(cfg)
+    B = x.shape[0]
+    z, xbc, dt = _project(p, x, cfg)                   # T=1
+    xbc1 = xbc[:, 0]                                    # (B,Cd)
+    window = jnp.concatenate([state["conv"], xbc1[:, None]], axis=1)  # (B,k,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xin, Bp, Cp = _split_conv(conv_out[:, None].astype(x.dtype), cfg)
+    xh = xin[:, 0].reshape(B, nh, hd).astype(jnp.float32)
+    Bv = Bp[:, 0].astype(jnp.float32)                   # (B,N)
+    Cv = Cp[:, 0].astype(jnp.float32)
+    dt1 = dt[:, 0]                                      # (B,H)
+
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * A)                               # (B,H)
+    h0 = state["ssm"]
+    upd = dt1[:, :, None, None] * xh[:, :, :, None] * Bv[:, None, None, :]
+    h1 = dA[:, :, None, None] * h0 + upd                # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h1, Cv) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+    return out, {"ssm": h1, "conv": window[:, 1:]}

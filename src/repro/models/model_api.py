@@ -1,0 +1,121 @@
+"""Public model API: one entry point per architecture family.
+
+``Model`` wraps init / loss / prefill / decode behind a uniform interface
+so the launcher, the dry-run, and the federated trainer don't branch on
+architecture family.  ``input_specs`` produces ShapeDtypeStruct stand-ins
+for every model input (weak-type-correct, shardable, no device allocation)
+— the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key, dtype=jnp.float32) -> Params:
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_params(key, self.cfg, dtype)
+        return transformer.init_params(key, self.cfg, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        if self.cfg.is_encoder_decoder:
+            return encdec.abstract_params(self.cfg, dtype)
+        return transformer.abstract_params(self.cfg, dtype)
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray], *,
+             remat: bool = True):
+        if self.cfg.is_encoder_decoder:
+            return encdec.loss_fn(params, batch, self.cfg, remat=remat)
+        return transformer.loss_fn(params, batch, self.cfg, remat=remat)
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                cache_seq: Optional[int] = None):
+        if self.cfg.is_encoder_decoder:
+            return encdec.prefill(params, batch["frames"], batch["tokens"],
+                                  self.cfg, cache_seq)
+        return transformer.prefill(params, batch["tokens"], self.cfg,
+                                   cache_seq)
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray, caches,
+                    pos: jnp.ndarray):
+        if self.cfg.is_encoder_decoder:
+            return encdec.decode_step(params, tokens, caches, pos, self.cfg)
+        return transformer.decode_step(params, tokens, caches, pos, self.cfg)
+
+    def init_caches(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_caches(self.cfg, batch, seq_len, dtype)
+        return transformer.init_caches(self.cfg, batch, seq_len, dtype)
+
+    def abstract_caches(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        if self.cfg.is_encoder_decoder:
+            return encdec.abstract_caches(self.cfg, batch, seq_len, dtype)
+        return transformer.abstract_caches(self.cfg, batch, seq_len, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this
+    (arch x input-shape) combination.
+
+    train   -> {tokens, labels} (+ frames for audio)
+    prefill -> {tokens} (+ frames)
+    decode  -> {tokens (B,1), pos scalar} (+ frames); caches are built via
+               Model.abstract_caches and passed alongside.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *s: jax.ShapeDtypeStruct(s, i32)
+    specs: Dict[str, Any] = {}
+    if shape.mode == "train":
+        specs["tokens"] = tok(B, S)
+        specs["labels"] = tok(B, S)
+    elif shape.mode == "prefill":
+        specs["tokens"] = tok(B, S)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = tok(B, 1)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    if cfg.frontend == "audio":
+        # stubbed conv frontend: precomputed frame embeddings
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    # vision early-fusion archs (chameleon, llama4) consume VQ/patch tokens
+    # through the same token stream — the tokenizer stub needs no extra input
+    return specs
+
+
+def concrete_inputs(cfg: ArchConfig, shape: ShapeConfig, key,
+                    batch_override: Optional[int] = None,
+                    seq_override: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Small concrete batches for smoke tests (reduced shapes)."""
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: Dict[str, jnp.ndarray] = {}
+    if shape.mode == "train":
+        out["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32)
+        out["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size, jnp.int32)
+    elif shape.mode == "prefill":
+        out["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(k1, (B, 1), 0, cfg.vocab_size, jnp.int32)
+        out["pos"] = jnp.array(S // 2, jnp.int32)
+    if cfg.frontend == "audio":
+        enc_s = cfg.encoder_seq
+        out["frames"] = jax.random.normal(k3, (B, enc_s, cfg.d_model),
+                                          jnp.float32).astype(jnp.bfloat16)
+    return out

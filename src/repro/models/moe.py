@@ -1,0 +1,196 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded scatter
+dispatch, routed independently per batch row.
+
+Two deliberate properties:
+
+* Dispatch is gather/scatter based (no (tokens x experts x capacity) one-hot
+  matmul), so HLO FLOPs reflect only the *active* expert compute — essential
+  for an honest roofline (a one-hot-dispatch einsum would inflate HLO_FLOPs
+  by ~num_experts/top_k and drown the MODEL_FLOPS/HLO_FLOPs ratio).
+
+* Routing/dispatch is vmapped over the batch axis, so under pjit with batch
+  sharded over `data` every shard dispatches its own rows locally — no
+  cross-shard cumsum/scatter semantics.
+
+Sharding modes (cfg.moe.sharding):
+  * "tensor": experts on every data shard, per-expert d_ff split over the
+    `model` axis.  No dispatch collectives; the down-proj all-reduce is the
+    standard Megatron pattern.  Robust default.
+  * "expert": expert dim split over `model` (expert parallelism); XLA SPMD
+    materializes the token exchange as collectives.  Compared against
+    "tensor" in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+from repro.sharding_ctx import constrain, current as ctx_current, current_mesh
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def init(k, di, do):
+        keys = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk, di, do, dtype) for kk in keys])
+
+    return {
+        "router": dense_init(k1, d, e, jnp.float32),
+        "w_gate": init(k2, d, f),       # (E, D, F)
+        "w_up": init(k3, d, f),
+        "w_down": init(k4, f, d),       # (E, F, D)
+    }
+
+
+def capacity(m: MoEConfig, tokens_per_row: int) -> int:
+    cap = int(m.capacity_factor * tokens_per_row * m.top_k / m.num_experts)
+    return max(m.top_k, min(tokens_per_row, max(1, cap)))
+
+
+def _topk_iterative(probs: jnp.ndarray, k: int):
+    """Top-k via k argmax passes.  ``lax.top_k`` lowers to a sort, which the
+    SPMD partitioner refuses to batch-partition (it all-gathers the operand
+    — the global-batch gathers seen in the qwen3-moe HLO).  argmax is a
+    plain partitionable reduce, and k is small (<=8) for every assigned MoE."""
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        v = jnp.take_along_axis(p, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i)
+        p = p - jax.nn.one_hot(i, probs.shape[-1], dtype=p.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def _dispatch_row(x_row: jnp.ndarray, expert_idx: jnp.ndarray, m: MoEConfig,
+                  cap: int):
+    """Scatter one row of T tokens into its (E, C, D) expert buffer, given
+    the (already batched) top-k expert choices."""
+    T, D = x_row.shape
+    E, K = m.num_experts, m.top_k
+
+    flat_e = expert_idx.reshape(-1)                           # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+
+    keep = pos_in_e < cap
+    dst = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)   # E*cap = drop
+    tok = jnp.repeat(jnp.arange(T), K)
+
+    buf = jnp.zeros((E * cap, D), x_row.dtype)
+    xe = buf.at[dst].set(x_row[tok], mode="drop").reshape(E, cap, D)
+    return keep, dst, tok, xe
+
+
+def _expert_compute(p: Params, xe: jnp.ndarray, m: MoEConfig, act: str):
+    """(B,E,C,D) -> (B,E,C,D) through the per-expert SwiGLU.
+
+    "tensor_sm" mode (§Perf hillclimb): the Megatron down-proj partial sum
+    is made an EXPLICIT bf16 ``psum`` inside ``shard_map`` — under plain jit
+    the partitioner places the all-reduce on the dot output, which the CPU
+    backend has promoted to f32 (2x the wire bytes of the logical dtype).
+    FSDP weight gathers are likewise explicit (bf16 all_gather over the
+    fsdp axis, transposed to a reduce-scatter for the weight grads).
+    """
+
+    def dense_path(xe):
+        g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+        return constrain(
+            jnp.einsum("becf,efd->becd", g * u, p["w_down"]), "b4")
+
+    ctx = ctx_current()
+    mesh = current_mesh()
+    if m.sharding != "tensor_sm" or mesh is None or ctx is None:
+        return dense_path(xe)
+
+    from jax.sharding import PartitionSpec as P
+    model_ax = ctx["model"]
+    fsdp_ax = ctx.get("fsdp")
+    batch_ax = ctx.get("batch")
+
+    def body(xe_l, wg_l, wu_l, wd_l):
+        if fsdp_ax is not None:
+            wg_l = jax.lax.all_gather(wg_l, fsdp_ax, axis=1, tiled=True)
+            wu_l = jax.lax.all_gather(wu_l, fsdp_ax, axis=1, tiled=True)
+            wd_l = jax.lax.all_gather(wd_l, fsdp_ax, axis=2, tiled=True)
+        g = jnp.einsum("becd,edf->becf", xe_l, wg_l)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        u = jnp.einsum("becd,edf->becf", xe_l, wu_l)
+        ye_part = jnp.einsum("becf,efd->becd", g * u, wd_l)
+        # cast the partial to bf16 BEFORE the psum and pin it there: without
+        # the barrier XLA's algebraic simplifier hoists the convert across
+        # the all-reduce (f32 accumulation), doubling the wire bytes
+        ye_part = jax.lax.optimization_barrier(ye_part.astype(xe_l.dtype))
+        return jax.lax.psum(ye_part, model_ax)
+
+    w_spec_gu = P(None, fsdp_ax, model_ax)
+    w_spec_d = P(None, model_ax, fsdp_ax)
+    xe_spec = P(batch_ax, None, None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xe_spec, w_spec_gu, w_spec_gu, w_spec_d),
+        out_specs=xe_spec, check_vma=False,
+    )(xe, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+              act: str = "silu") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,T,D) -> (out, aux_loss).  Capacity-overflow tokens fall back to
+    the residual path (standard Switch drop behaviour)."""
+    m = cfg.moe
+    B, T, D = x.shape
+    E, K = m.num_experts, m.top_k
+    C = capacity(m, T)
+
+    # routing is BATCHED (not inside the per-row vmap): a vmapped top_k was
+    # observed to make the partitioner gather the global batch per device
+    # ((256,4096,128) f32 all-gathers, ~51 GB/step in qwen3-moe train)
+    probs = constrain(
+        jax.nn.softmax(x.astype(jnp.float32) @ p["router"], axis=-1), "b3")
+    gate_vals, expert_idx = _topk_iterative(probs, K)         # (B, T, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    gate_vals = constrain(gate_vals, "b3")
+    expert_idx = constrain(expert_idx, "b3")
+
+    def route(x_row, idx_row):
+        return _dispatch_row(x_row, idx_row, m, C)
+
+    keep, dst, tok, xe = jax.vmap(route)(x, expert_idx)
+    # anchor the dispatch intermediates: without these the SPMD partitioner
+    # replicates the per-row scatter subgraph across the batch
+    keep = constrain(keep, "b2")
+    dst = constrain(dst, "b2")
+    xe = constrain(xe, "b4")   # (B, E, C, D)
+
+    # load-balance auxiliary loss (Switch eq. 4), global over batch
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx.reshape(-1, K), E,
+                               dtype=jnp.float32), axis=1), axis=0)
+    aux = m.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # expert compute, batched over rows: (B,E,C,D) @ (E,D,F)
+    ye = _expert_compute(p, xe, m, act)                          # (B,E,C,D)
+
+    def combine(ye_row, keep_row, dst_row, tok_row, gates_row):
+        yf = ye_row.reshape(E * C, D)
+        picked = yf[jnp.minimum(dst_row, E * C - 1)]
+        picked = jnp.where(keep_row[:, None], picked, 0.0)
+        contrib = picked * gates_row.reshape(-1)[:, None].astype(ye_row.dtype)
+        return jnp.zeros((T, D), ye_row.dtype).at[tok_row].add(contrib)
+
+    out = constrain(jax.vmap(combine)(ye, keep, dst, tok, gate_vals), "btd")
+    return out.reshape(B, T, D), aux

@@ -1,0 +1,269 @@
+"""Unified decoder stack: builds any assigned architecture from ArchConfig.
+
+Design notes
+------------
+* Layers are stacked per *pattern slot*: a config with pattern period p
+  (jamba: 8, gemma2: 2, dense: 1) stores its parameters as a tuple of p
+  slot-pytrees whose leaves carry a leading ``n_periods`` axis.  The forward
+  pass is one ``lax.scan`` over periods whose body applies the p
+  (heterogeneous, python-level) slots in order — so a 72-layer hybrid
+  compiles to the same small HLO as a 2-layer one, which keeps the
+  40-combination dry-run tractable.
+* Three entry points per model: ``forward`` (train: full logits),
+  ``prefill`` (returns last-token logits + populated caches) and
+  ``decode_step`` (one token against the caches).  Caches are per-slot
+  pytrees with the same leading ``n_periods`` axis, scanned alongside.
+* MoE layers contribute a load-balance aux loss, accumulated in the scan
+  carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ArchConfig, ATTN, ATTN_LOCAL, MAMBA, MLP_DENSE, MLP_MOE)
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    cross_entropy, dense_init, embed_apply, embed_init, lm_head_apply,
+    mlp_apply, mlp_init, rms_norm, rms_norm_init, softcap)
+from repro.sharding_ctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _slot_kinds(cfg: ArchConfig):
+    """(mixer_kind, mlp_kind) for each of the p slots in a period."""
+    p = cfg.pattern_period
+    return [(cfg.layer_kind(i), cfg.mlp_kind(i)) for i in range(p)]
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    p = cfg.pattern_period
+    if cfg.n_layers % p != 0:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} not divisible "
+                         f"by pattern period {p}")
+    return cfg.n_layers // p
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig, mixer: str, mlp: str, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": rms_norm_init(cfg.d_model, dtype)}
+    if mixer in (ATTN, ATTN_LOCAL):
+        p["attn"] = attn_mod.attn_init(k1, cfg, dtype)
+    else:
+        p["mamba"] = mamba_mod.mamba_init(k1, cfg, dtype)
+    if cfg.d_ff > 0 or mlp == MLP_MOE:
+        p["norm2"] = rms_norm_init(cfg.d_model, dtype)
+        if mlp == MLP_MOE:
+            p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    np_ = n_periods(cfg)
+    slots = _slot_kinds(cfg)
+    keys = jax.random.split(key, 3 + len(slots))
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.padded_vocab,
+                                       dtype)
+
+    blocks = []
+    for s, (mixer, mlp) in enumerate(slots):
+        layer_keys = jax.random.split(keys[3 + s], np_)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_layer_init(layer_keys[i], cfg, mixer, mlp, dtype)
+              for i in range(np_)])
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _block_apply(lp: Params, x, cfg: ArchConfig, mixer: str, mlp: str, *,
+                 positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if mixer in (ATTN, ATTN_LOCAL):
+        window = cfg.sliding_window if mixer == ATTN_LOCAL else 0
+        h = attn_mod.attn_apply(lp["attn"], h, cfg, positions=positions,
+                                window=window)
+    else:
+        h = mamba_mod.mamba_apply(lp["mamba"], h, cfg)
+    x = x + h
+    if "norm2" in lp:
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if mlp == MLP_MOE:
+            h, a = moe_mod.moe_apply(lp["moe"], h, cfg, cfg.act)
+            aux = aux + a
+        else:
+            h = mlp_apply(lp["mlp"], h, cfg.act)
+        x = x + h
+    return x, aux
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ArchConfig, *,
+            remat: bool = True, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward.  tokens: (B,T) -> (logits (B,T,Vpad) f32, aux)."""
+    B, T = tokens.shape
+    slots = _slot_kinds(cfg)
+    x = constrain(embed_apply(params["embed"], tokens), "btd")
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def period_body(carry, slot_params):
+        x, aux = carry
+        for s, (mixer, mlp) in enumerate(slots):
+            x, a = _block_apply(slot_params[s], x, cfg, mixer, mlp,
+                                positions=positions)
+            aux = aux + a
+        return (constrain(x, "btd"), aux), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"],
+                               unroll=n_periods(cfg) if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(
+        lm_head_apply(head, x, cfg.tie_embeddings, cfg.logit_softcap), "btv")
+    return logits, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            *, remat: bool = True, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, batch["tokens"], cfg, remat=remat,
+                          unroll=unroll)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches (decode)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int,
+                dtype=jnp.bfloat16) -> Tuple:
+    """Per-slot cache pytrees, leaves stacked over n_periods."""
+    np_ = n_periods(cfg)
+    slots = _slot_kinds(cfg)
+    caches = []
+    for mixer, _ in slots:
+        if mixer in (ATTN, ATTN_LOCAL):
+            c = attn_mod.init_cache(cfg, mixer, batch, seq_len, dtype)
+        else:
+            c = mamba_mod.init_mamba_state(cfg, batch, dtype)
+        caches.append(jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (np_,) + l.shape), c))
+    return tuple(caches)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, seq_len, dtype))
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, caches: Tuple,
+                pos: jnp.ndarray, cfg: ArchConfig):
+    """One decode step.  tokens: (B,1); caches from init_caches/prefill;
+    pos: scalar int32 count of tokens already generated.
+    Returns (logits (B,Vpad) f32, new_caches)."""
+    slots = _slot_kinds(cfg)
+    x = constrain(embed_apply(params["embed"], tokens), "btd")
+
+    def period_body(x, xs):
+        slot_params, slot_caches = xs
+        new_caches = []
+        for s, (mixer, mlp) in enumerate(slots):
+            lp, c = slot_params[s], slot_caches[s]
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if mixer in (ATTN, ATTN_LOCAL):
+                h, c1 = attn_mod.attn_decode(lp["attn"], h, c, cfg, pos=pos,
+                                             kind=mixer)
+            else:
+                h, c1 = mamba_mod.mamba_decode(lp["mamba"], h, c, cfg)
+            x = x + h
+            if "norm2" in lp:
+                h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+                if mlp == MLP_MOE:
+                    h, _ = moe_mod.moe_apply(lp["moe"], h, cfg, cfg.act)
+                else:
+                    h = mlp_apply(lp["mlp"], h, cfg.act)
+                x = x + h
+            new_caches.append(c1)
+        return constrain(x, "btd"), tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x,
+                                 (params["blocks"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(lm_head_apply(head, x[:, 0], cfg.tie_embeddings,
+                                     cfg.logit_softcap), "bv")
+    return logits, new_caches
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+            cache_seq: Optional[int] = None):
+    """Prefill: consume (B,T) prompt, return (last logits (B,Vpad), caches
+    sized for cache_seq (default T) further decode)."""
+    B, T = tokens.shape
+    S = cache_seq or T
+    slots = _slot_kinds(cfg)
+    x = constrain(embed_apply(params["embed"], tokens), "btd")
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def period_body(x, slot_params):
+        new_caches = []
+        for s, (mixer, mlp) in enumerate(slots):
+            lp = slot_params[s]
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if mixer in (ATTN, ATTN_LOCAL):
+                h, c1 = attn_mod.attn_prefill(lp["attn"], h, cfg,
+                                              positions=positions, kind=mixer,
+                                              cache_seq=S)
+            else:
+                h, st = mamba_mod.mamba_forward(lp["mamba"], h, cfg)
+                c1 = st
+            x = x + h
+            if "norm2" in lp:
+                h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+                if mlp == MLP_MOE:
+                    h, _ = moe_mod.moe_apply(lp["moe"], h, cfg, cfg.act)
+                else:
+                    h = mlp_apply(lp["mlp"], h, cfg.act)
+                x = x + h
+            new_caches.append(c1)
+        return constrain(x, "btd"), tuple(new_caches)
+
+    x, caches = jax.lax.scan(period_body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain(lm_head_apply(head, x[:, -1], cfg.tie_embeddings,
+                                     cfg.logit_softcap), "bv")
+    return logits, caches

@@ -1,0 +1,175 @@
+"""Weak learners for (federated) AdaBoost.
+
+Three families, all pure-JAX and all trained against a *weighted* sample
+distribution D_t(i) as the paper's boosting loop requires:
+
+* ``stump``   — decision stumps: exhaustive search over (feature, threshold,
+                polarity) minimizing weighted error.  The classical AdaBoost
+                weak learner; compute hot-spot served by the
+                ``stump_scan`` Pallas kernel (repro.kernels).
+* ``logistic``— weighted logistic regression, a few Newton/GD steps.
+* ``mlp``     — one-hidden-layer MLP trained by weighted SGD.
+
+A weak learner is represented by a (params, predict_fn_name) pair where
+params is a flat pytree of small arrays — this is exactly what crosses the
+network at a synchronization event, so its byte size is what the paper's
+communication accounting measures.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# decision stump
+# ---------------------------------------------------------------------------
+
+def stump_thresholds(x: Array, n_thresholds: int = 16) -> Array:
+    """Per-feature threshold grid from feature quantiles.  x: (N,F)."""
+    qs = jnp.linspace(0.0, 1.0, n_thresholds + 2)[1:-1]
+    return jnp.quantile(x, qs, axis=0).T          # (F, T)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def fit_stump(x: Array, y: Array, w: Array, thresholds: Array,
+              use_kernel: bool = False) -> Dict[str, Array]:
+    """Weighted-error-optimal stump.
+
+    x: (N,F); y: (N,) in {-1,+1}; w: (N,) distribution; thresholds: (F,T).
+    Returns {"feature", "threshold", "polarity"} scalars.
+
+    err(f,t,+) = sum_i w_i * [sign(x_if - t) != y_i]; polarity flips sign.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        err_pos = kops.stump_scan(x, y, w, thresholds)
+    else:
+        from repro.kernels import ref as kref
+        err_pos = kref.stump_scan_ref(x, y, w, thresholds)
+    # (F,T) weighted error of polarity +1; polarity -1 error is 1 - err.
+    err_neg = 1.0 - err_pos
+    best_pos = jnp.unravel_index(jnp.argmin(err_pos), err_pos.shape)
+    best_neg = jnp.unravel_index(jnp.argmin(err_neg), err_neg.shape)
+    take_pos = err_pos[best_pos] <= err_neg[best_neg]
+    f = jnp.where(take_pos, best_pos[0], best_neg[0])
+    t_idx = jnp.where(take_pos, best_pos[1], best_neg[1])
+    thr = thresholds[f, t_idx]
+    pol = jnp.where(take_pos, 1.0, -1.0)
+    return {"feature": f.astype(jnp.int32), "threshold": thr,
+            "polarity": pol}
+
+
+def predict_stump(p: Dict[str, Array], x: Array) -> Array:
+    """-> (N,) margins in {-1,+1}."""
+    xv = x[:, p["feature"]]
+    return p["polarity"] * jnp.sign(xv - p["threshold"] + 1e-12)
+
+
+STUMP_BYTES = 3 * 4   # feature idx + threshold + polarity
+
+
+# ---------------------------------------------------------------------------
+# weighted logistic regression
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def fit_logistic(x: Array, y: Array, w: Array, key, steps: int = 50,
+                 lr: float = 0.5) -> Dict[str, Array]:
+    N, F = x.shape
+    y01 = (y + 1.0) / 2.0
+
+    def loss(params):
+        z = x @ params["w"] + params["b"]
+        p = jax.nn.sigmoid(z)
+        ll = y01 * jnp.log(p + 1e-9) + (1 - y01) * jnp.log(1 - p + 1e-9)
+        return -jnp.sum(w * ll)
+
+    params = {"w": jnp.zeros((F,)), "b": jnp.zeros(())}
+    g = jax.grad(loss)
+
+    def step(params, _):
+        grads = g(params)
+        return jax.tree.map(lambda p, gr: p - lr * gr, params, grads), None
+
+    params, _ = jax.lax.scan(step, params, None, length=steps)
+    return params
+
+
+def predict_logistic(p: Dict[str, Array], x: Array) -> Array:
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+# ---------------------------------------------------------------------------
+# tiny MLP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("steps", "hidden"))
+def fit_mlp(x: Array, y: Array, w: Array, key, steps: int = 80,
+            hidden: int = 16, lr: float = 0.1) -> Dict[str, Array]:
+    N, F = x.shape
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": jax.random.normal(k1, (F, hidden)) / jnp.sqrt(F),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden,)) / jnp.sqrt(hidden),
+        "b2": jnp.zeros(()),
+    }
+
+    def fwd(params, x):
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        return jnp.tanh(h @ params["w2"] + params["b2"])
+
+    def loss(params):
+        m = fwd(params, x)
+        return jnp.sum(w * jnp.square(m - y))
+
+    g = jax.grad(loss)
+
+    def step(params, _):
+        grads = g(params)
+        return jax.tree.map(lambda p, gr: p - lr * gr, params, grads), None
+
+    params, _ = jax.lax.scan(step, params, None, length=steps)
+    return params
+
+
+def predict_mlp(p: Dict[str, Array], x: Array) -> Array:
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return jnp.tanh(h @ p["w2"] + p["b2"])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WeakLearnerSpec:
+    name: str
+    fit: Callable              # (x, y, w, key) -> params
+    predict: Callable          # (params, x) -> margins (N,)
+    param_bytes: Callable      # params -> bytes on the wire
+
+
+def _pytree_bytes(p) -> int:
+    return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p)))
+
+
+def get_weak_learner(name: str, n_thresholds: int = 16) -> WeakLearnerSpec:
+    if name == "stump":
+        def fit(x, y, w, key):
+            return fit_stump(x, y, w, stump_thresholds(x, n_thresholds))
+        return WeakLearnerSpec("stump", fit, predict_stump,
+                               lambda p: STUMP_BYTES)
+    if name == "logistic":
+        return WeakLearnerSpec("logistic", fit_logistic, predict_logistic,
+                               _pytree_bytes)
+    if name == "mlp":
+        return WeakLearnerSpec("mlp", fit_mlp, predict_mlp, _pytree_bytes)
+    raise KeyError(name)

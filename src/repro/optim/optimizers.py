@@ -1,0 +1,158 @@
+"""Optimizers from scratch (no optax): SGD, momentum, Adam, AdamW, with
+global-norm clipping and LR schedules.  The optimizer-state dtype is
+configurable — the dry-run uses bfloat16 moments so the 398B-parameter
+hybrid fits the pod HBM budget (DESIGN.md §6); CPU training uses float32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], PyTree]
+    update: Callable[[PyTree, Params, PyTree, jnp.ndarray], Tuple[Params, PyTree]]
+    # update(grads, params, state, step) -> (new_params, new_state)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def linear_schedule(lr: float, warmup: int, total: int) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return jnp.where(step < warmup, warm, lr * (1 - frac))
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Callable | float, momentum: float = 0.0,
+        clip_norm: Optional[float] = None,
+        state_dtype=jnp.float32) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+    def update(grads, params, state, step):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        lr_t = sched(step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        m = jax.tree.map(
+            lambda mm, g: (momentum * mm.astype(jnp.float32)
+                           + g.astype(jnp.float32)).astype(state_dtype),
+            state["m"], grads)
+        new = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32)
+                           - lr_t * mm.astype(jnp.float32)).astype(p.dtype),
+            params, m)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, params, state, step):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step_f
+        bc2 = 1.0 - b2 ** step_f
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m1 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v1 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m1 / bc1
+            vhat = v1 / bc2
+            p32 = p.astype(jnp.float32)
+            step_d = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32
+            return ((p32 - lr_t * step_d).astype(p.dtype),
+                    m1.astype(state_dtype), v1.astype(state_dtype))
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = jax.tree.leaves(grads)
+        mflat = jax.tree.leaves(state["m"])
+        vflat = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "momentum":
+        return sgd(lr, momentum=kw.pop("momentum", 0.9), **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise KeyError(name)

@@ -1,0 +1,72 @@
+"""Activation-sharding context: lets model code pin activation shardings
+(batch -> data axes, vocab/heads -> model axis) without a hard dependency
+on the launch layer.
+
+The launcher/dry-run installs a context (batch axes + model axis); model
+forward passes call :func:`constrain` at anchor points (embedding output,
+per-period carry, logits).  Without an installed context — unit tests,
+single-device runs — constrain is a no-op, so the model code runs anywhere.
+
+This is the standard fix for XLA SPMD propagation drift: with only
+input/output shardings on a rematerialized scan-over-layers graph, the
+partitioner can decide to gather the batch onto every device mid-graph
+(observed: (256, 4096, vocab/16) all-gathers in the qwen1.5 train HLO —
+global batch materialized per device).  Anchoring the carry kills that
+family of solutions.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current() -> Optional[dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Tuple[str, ...] = ("data",),
+                        model_axis: str = "model",
+                        batch_shardable: bool = True,
+                        mesh=None, fsdp_axis: Optional[str] = "data"):
+    prev = current()
+    _STATE.ctx = {"batch": batch_axes if batch_shardable else None,
+                  "model": model_axis, "mesh": mesh, "fsdp": fsdp_axis,
+                  "all_batch_axes": batch_axes}
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh():
+    ctx = current()
+    return ctx.get("mesh") if ctx else None
+
+
+def constrain(x, kind: str):
+    """kind: 'btd' (batch, seq, d_model) | 'btv' (batch, seq, vocab) |
+    'bv' (batch, vocab) | 'bd' (batch, d_model)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    b, m = ctx["batch"], ctx["model"]
+    spec = {
+        "btd": P(b, None, None),
+        "btv": P(b, None, m),
+        "bv": P(b, m),
+        "bd": P(b, None),
+        "b2": P(b, None),
+        "b3": P(b, None, None),
+        "b4": P(b, None, None, None),
+    }[kind]
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x

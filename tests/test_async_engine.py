@@ -1,0 +1,93 @@
+"""End-to-end behaviour of the async federated boosting engine — including
+the paper's headline claims on a representative domain (full five-domain
+validation lives in benchmarks/domains.py)."""
+import dataclasses
+
+import pytest
+
+from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.core import FederatedBoostEngine
+from repro.core.metrics import common_target, time_to_error
+from repro.data import make_domain_data
+
+
+@pytest.fixture(scope="module")
+def edge_runs():
+    dom = DOMAINS["edge_vision"]
+    data = make_domain_data(dom, seed=0)
+    cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=25,
+                         straggler_factor=dom.straggler_factor,
+                         dropout_prob=dom.dropout_prob,
+                         link_mbps=dom.link_mbps)
+    return {m: FederatedBoostEngine(cfg, data, m).run()
+            for m in ("baseline", "enhanced")}
+
+
+def test_both_modes_learn(edge_runs):
+    for m in edge_runs.values():
+        assert m.final_val_error < 0.35
+
+
+def test_comm_overhead_reduced(edge_runs):
+    b, e = edge_runs["baseline"], edge_runs["enhanced"]
+    assert e.total_bytes < b.total_bytes * 0.8          # >= 20% reduction
+    assert e.n_messages < b.n_messages * 0.7
+
+
+def test_fewer_syncs_than_baseline_messages(edge_runs):
+    b, e = edge_runs["baseline"], edge_runs["enhanced"]
+    # baseline syncs every round for every client; enhanced batches rounds
+    assert e.n_syncs < b.n_syncs * len(
+        [1]) * 25 or e.n_syncs < b.n_messages
+
+
+def test_accuracy_within_band(edge_runs):
+    b, e = edge_runs["baseline"], edge_runs["enhanced"]
+    # paper: accuracy maintained or improved (+-2pp band)
+    assert e.final_test_error <= b.final_test_error + 0.02
+
+
+def test_time_to_common_target_reduced(edge_runs):
+    b, e = edge_runs["baseline"], edge_runs["enhanced"]
+    target = common_target([b.val_error_curve, e.val_error_curve])
+    tb = time_to_error(b.val_error_curve, target)
+    te = time_to_error(e.val_error_curve, target)
+    assert tb is not None and te is not None
+    assert te[0] < tb[0]
+
+
+def test_deterministic_given_seed():
+    dom = DOMAINS["iot"]
+    data = make_domain_data(dom, seed=1)
+    cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=8)
+    a = FederatedBoostEngine(cfg, data, "enhanced").run()
+    b = FederatedBoostEngine(cfg, data, "enhanced").run()
+    assert a.total_bytes == b.total_bytes
+    assert a.final_val_error == b.final_val_error
+    assert a.sim_time_s == b.sim_time_s
+
+
+def test_compensation_handles_staleness():
+    """With heavy dropout, compensated merging must not blow up accuracy."""
+    dom = dataclasses.replace(DOMAINS["mobile"], n_clients=8)
+    data = make_domain_data(dom, seed=2)
+    cfg = FedBoostConfig(n_clients=8, n_rounds=15, dropout_prob=0.3,
+                         straggler_factor=6.0)
+    e = FederatedBoostEngine(cfg, data, "enhanced").run()
+    assert e.final_val_error < 0.45
+
+
+def test_relevance_filter_saves_bytes():
+    """Beyond-paper knob: filtering low-weight buffered learners cuts bytes
+    without collapsing accuracy."""
+    dom = DOMAINS["mobile"]
+    data = make_domain_data(dom, seed=0)
+    base = FedBoostConfig(n_clients=dom.n_clients, n_rounds=15,
+                          straggler_factor=dom.straggler_factor,
+                          dropout_prob=dom.dropout_prob,
+                          link_mbps=dom.link_mbps)
+    filt = dataclasses.replace(base, relevance_filter=0.75)
+    m0 = FederatedBoostEngine(base, data, "enhanced").run()
+    m1 = FederatedBoostEngine(filt, data, "enhanced").run()
+    assert m1.total_bytes < m0.total_bytes
+    assert m1.final_test_error < m0.final_test_error + 0.08

@@ -1,0 +1,96 @@
+"""AdaBoost core: distribution update, error bound, ensemble behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.boosting import (
+    Ensemble, accuracy, ensemble_margin, fit_adaboost, update_distribution,
+    weighted_error)
+from repro.models.weak import get_weak_learner
+
+
+def _toy(seed=0, n=400, f=8):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, f).astype(np.float32)
+    y = np.where(x[:, 0] + 0.5 * x[:, 1] - 0.2 * x[:, 2] > 0, 1.0, -1.0)
+    flip = rng.rand(n) < 0.05
+    y[flip] *= -1
+    return jnp.asarray(x), jnp.asarray(y.astype(np.float32))
+
+
+def test_distribution_stays_normalized():
+    x, y = _toy()
+    D = jnp.full((x.shape[0],), 1.0 / x.shape[0])
+    h = jnp.sign(x[:, 0])
+    D2, Z = update_distribution(D, 0.7, y, h)
+    assert float(jnp.sum(D2)) == pytest.approx(1.0, abs=1e-5)
+    assert float(jnp.min(D2)) >= 0.0
+
+
+def test_update_upweights_mistakes():
+    x, y = _toy()
+    D = jnp.full((x.shape[0],), 1.0 / x.shape[0])
+    h = jnp.sign(x[:, 0])
+    D2, _ = update_distribution(D, 0.7, y, h)
+    miss = jnp.sign(h) != y
+    assert float(jnp.mean(D2[miss])) > float(jnp.mean(D2[~miss]))
+
+
+def test_training_error_bound():
+    """AdaBoost guarantee: training error <= prod_t Z_t."""
+    x, y = _toy()
+    weak = get_weak_learner("stump")
+    ens, zs = fit_adaboost(x, y, 12, weak)
+    bound = float(np.prod(zs))
+    train_err = ens.error(weak.predict, x, y)
+    assert train_err <= bound + 1e-6
+    assert bound < 1.0
+
+
+def test_ensemble_beats_single_stump():
+    x, y = _toy()
+    weak = get_weak_learner("stump")
+    ens1, _ = fit_adaboost(x, y, 1, weak)
+    ens20, _ = fit_adaboost(x, y, 20, weak)
+    assert ens20.error(weak.predict, x, y) < ens1.error(weak.predict, x, y)
+
+
+def test_error_decreases_with_rounds():
+    x, y = _toy(seed=3)
+    weak = get_weak_learner("stump")
+    errs = [fit_adaboost(x, y, t, weak)[0].error(weak.predict, x, y)
+            for t in (2, 8, 24)]
+    assert errs[2] <= errs[0]
+
+
+@pytest.mark.parametrize("name", ["stump", "logistic", "mlp"])
+def test_weak_learners_better_than_chance(name):
+    x, y = _toy(seed=1)
+    weak = get_weak_learner(name)
+    D = jnp.full((x.shape[0],), 1.0 / x.shape[0])
+    params = weak.fit(x, y, D, jax.random.key(0))
+    h = weak.predict(params, x)
+    assert float(weighted_error(D, y, h)) < 0.5
+    assert weak.param_bytes(params) > 0
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=30, deadline=None)
+def test_weighted_error_in_unit_interval(seed):
+    rng = np.random.RandomState(seed % 2**31)
+    n = 50
+    D = rng.dirichlet(np.ones(n)).astype(np.float32)
+    y = np.where(rng.rand(n) > 0.5, 1.0, -1.0).astype(np.float32)
+    h = np.where(rng.rand(n) > 0.5, 1.0, -1.0).astype(np.float32)
+    e = float(weighted_error(jnp.asarray(D), jnp.asarray(y), jnp.asarray(h)))
+    assert -1e-6 <= e <= 1.0 + 1e-6
+
+
+def test_ensemble_margin_linearity():
+    m = jnp.asarray(np.random.RandomState(0).randn(5, 30), jnp.float32)
+    a = jnp.asarray([0.5, 0.2, 0.9, 0.1, 0.3])
+    lhs = ensemble_margin(m, a)
+    rhs = sum(float(a[i]) * m[i] for i in range(5))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5)

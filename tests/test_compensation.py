@@ -1,0 +1,53 @@
+"""Delayed weight compensation (paper eq. 2)."""
+import math
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_fedboost import CompensationConfig
+from repro.core.compensation import adaboost_alpha, compensate, compensated_alpha
+
+CFG = CompensationConfig(lam=0.15, tau_cap=32)
+
+
+def test_zero_delay_is_identity():
+    assert float(compensate(1.3, 0, CFG)) == pytest.approx(1.3)
+
+
+def test_exponential_decay_law():
+    a = 0.8
+    for tau in (1, 3, 7):
+        assert float(compensate(a, tau, CFG)) == pytest.approx(
+            a * math.exp(-CFG.lam * tau), rel=1e-5)
+
+
+def test_alpha_formula():
+    # alpha = 1/2 ln((1-eps)/eps)
+    assert float(adaboost_alpha(0.5)) == pytest.approx(0.0, abs=1e-5)
+    assert float(adaboost_alpha(0.1)) == pytest.approx(
+        0.5 * math.log(9.0), rel=1e-5)
+    assert float(adaboost_alpha(0.9)) < 0       # worse than chance flips
+
+
+def test_tau_cap():
+    assert float(compensate(1.0, 1000, CFG)) == pytest.approx(
+        math.exp(-CFG.lam * CFG.tau_cap), rel=1e-5)
+
+
+@given(st.floats(min_value=0.0, max_value=5.0),
+       st.integers(min_value=0, max_value=100),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=80, deadline=None)
+def test_staler_never_heavier(a, t1, t2):
+    """Property: compensation is monotone non-increasing in staleness."""
+    lo, hi = sorted((t1, t2))
+    assert float(compensate(a, hi, CFG)) <= float(compensate(a, lo, CFG)) + 1e-7
+
+
+@given(st.floats(min_value=0.01, max_value=0.49))
+@settings(max_examples=50, deadline=None)
+def test_compensated_bounded_by_original(eps):
+    a = float(adaboost_alpha(eps))
+    for tau in (0, 1, 5):
+        assert 0 <= float(compensated_alpha(eps, tau, CFG)) <= a + 1e-7

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) runs one forward/train step and one
+prefill+decode step on CPU; output shapes asserted, no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py and tests/test_dryrun_subprocess.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ShapeConfig, reduced
+from repro.configs.registry import ARCHS
+from repro.models import Model, concrete_inputs
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    out = {}
+    for name in ARCH_NAMES:
+        cfg = reduced(ARCHS[name])
+        m = Model(cfg)
+        out[name] = (cfg, m, m.init(jax.random.key(0)))
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_is_reduced(name):
+    cfg = reduced(ARCHS[name])
+    assert cfg.n_layers <= 2 or cfg.n_encoder_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step(smoke_models, name):
+    cfg, model, params = smoke_models[name]
+    batch = concrete_inputs(cfg, ShapeConfig("t", 32, 2, "train"),
+                            jax.random.key(1), batch_override=2,
+                            seq_override=32)
+    loss, mets = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert float(mets["ce"]) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_and_decode(smoke_models, name):
+    cfg, model, params = smoke_models[name]
+    B, T = 2, 32
+    pb = concrete_inputs(cfg, ShapeConfig("p", T, B, "prefill"),
+                         jax.random.key(2), batch_override=B,
+                         seq_override=T)
+    logits, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_seq=2 * T))(params, pb)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    dlogits, new_caches = jax.jit(model.decode_step)(
+        params, tok, caches, jnp.asarray(T, jnp.int32))
+    assert dlogits.shape == (B, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(dlogits)))
+    # cache structure unchanged
+    assert (jax.tree_util.tree_structure(caches)
+            == jax.tree_util.tree_structure(new_caches))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_gradients_flow(smoke_models, name):
+    cfg, model, params = smoke_models[name]
+    batch = concrete_inputs(cfg, ShapeConfig("t", 16, 2, "train"),
+                            jax.random.key(3), batch_override=2,
+                            seq_override=16)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads)]
+    assert all(not jnp.isnan(n) for n in norms)
+    assert sum(norms) > 0            # something learns

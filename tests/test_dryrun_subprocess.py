@@ -1,0 +1,59 @@
+"""Dry-run integration: one representative (arch x shape) per mode lowers
+and compiles against the production mesh in a subprocess (512 placeholder
+devices; the main pytest process keeps 1 device).
+
+The full 10-arch x 4-shape x 2-mesh sweep is run by
+``python -m repro.launch.dryrun --all [--multi-pod]`` and recorded in
+EXPERIMENTS.md §Dry-run; this test guards the machinery.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(arch, shape, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--force", *extra]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900, cwd=REPO)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    mesh = "pod2x16x16" if "--multi-pod" in extra else "pod16x16"
+    with open(os.path.join(art, f"{arch}__{shape}__{mesh}__baseline.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_dryrun_train_single_pod():
+    rec = _run("qwen1.5-0.5b", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["flops_corrected"] > 1e12          # ~19 TF/device expected
+    assert rec["collective_bytes_total"] > 0
+    assert rec["memory_analysis"].get("argument_size_in_bytes", 0) > 0
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi_pod():
+    rec = _run("qwen1.5-0.5b", "decode_32k", ("--multi-pod",))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 512
+
+
+def test_skip_rule_encoded():
+    """Full-attention archs skip long_500k (no subprocess needed)."""
+    from repro.configs.registry import ARCHS, SHAPES, shape_applicable
+    skipped = [a for a in ARCHS
+               if not shape_applicable(ARCHS[a], SHAPES["long_500k"])]
+    assert set(skipped) == {
+        "qwen2.5-3b", "yi-9b", "qwen1.5-0.5b", "qwen3-moe-30b-a3b",
+        "llama4-scout-17b-a16e", "whisper-base", "chameleon-34b"}
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert all(shape_applicable(ARCHS[a], SHAPES[s]) for a in ARCHS)

@@ -1,0 +1,112 @@
+"""Extended coverage: SAMME multiclass boosting invariants and the
+sliding-window ring-cache prefill->decode continuity (gemma2's local
+layers), plus generation-loop integration for three arch families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, reduced, ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.core.boosting import samme_alpha, samme_update_distribution
+from repro.models import Model, attention as attn_mod
+
+
+# ------------------------------------------------------------------ SAMME
+
+def test_samme_alpha_multiclass_chance_level():
+    """SAMME's alpha is zero exactly at multiclass chance error
+    1 - 1/K (Zhu et al. 2009)."""
+    K = 5
+    chance = 1.0 - 1.0 / K
+    assert float(samme_alpha(chance, K)) == pytest.approx(0.0, abs=1e-4)
+    assert float(samme_alpha(chance - 0.1, K)) > 0
+    assert float(samme_alpha(chance + 0.1, K)) < 0
+
+
+def test_samme_update_normalizes_and_upweights_misses():
+    n = 64
+    rng = np.random.RandomState(0)
+    D = jnp.full((n,), 1.0 / n)
+    y = jnp.asarray(rng.randint(0, 4, n))
+    pred = jnp.asarray(rng.randint(0, 4, n))
+    a = samme_alpha(0.4, 4)
+    D2, Z = samme_update_distribution(D, a, y, pred)
+    assert float(jnp.sum(D2)) == pytest.approx(1.0, abs=1e-5)
+    miss = pred != y
+    assert float(jnp.mean(D2[miss])) > float(jnp.mean(D2[~miss]))
+
+
+# ------------------------------------------- sliding-window ring cache
+
+def test_window_ring_cache_prefill_decode_continuity():
+    """For a local (sliding-window) layer, decoding right after a prefill
+    longer than the window must agree with full-sequence attention."""
+    cfg = ArchConfig(name="w", family="dense", source="", n_layers=1,
+                     d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                     vocab_size=64, head_dim=16, sliding_window=8)
+    p = attn_mod.attn_init(jax.random.key(0), cfg)
+    T = 21          # prompt longer than the window, not aligned to it
+    x = jax.random.normal(jax.random.key(1), (2, T + 1, cfg.d_model))
+    pos = jnp.arange(T + 1, dtype=jnp.int32)
+    full = attn_mod.attn_apply(p, x, cfg, positions=pos, window=8)
+
+    _, cache = attn_mod.attn_prefill(p, x[:, :T], cfg, positions=pos[:T],
+                                     kind="attn_local", cache_seq=T)
+    assert cache["k"].shape[1] == 8          # window-capped ring
+    cache = {k: v.astype(jnp.float32) for k, v in cache.items()}
+    out, cache2 = attn_mod.attn_decode(p, x[:, T:], cache, cfg,
+                                       pos=jnp.asarray(T),
+                                       kind="attn_local")
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=3e-2, atol=3e-2)
+    assert cache2["k"].shape == cache["k"].shape
+
+
+def test_ring_cache_multi_step_decode():
+    """Ring cache stays correct across several decode steps (wrap-around)."""
+    cfg = ArchConfig(name="w", family="dense", source="", n_layers=1,
+                     d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                     vocab_size=64, head_dim=16, sliding_window=4)
+    p = attn_mod.attn_init(jax.random.key(0), cfg)
+    T = 12
+    x = jax.random.normal(jax.random.key(1), (1, T, cfg.d_model))
+    pos = jnp.arange(T, dtype=jnp.int32)
+    full = attn_mod.attn_apply(p, x, cfg, positions=pos, window=4)
+
+    cache = {k: v.astype(jnp.float32)
+             for k, v in attn_mod.init_cache(cfg, "attn_local", 1, T,
+                                             jnp.float32).items()}
+    outs = []
+    for t in range(T):
+        o, cache = attn_mod.attn_decode(p, x[:, t:t + 1], cache, cfg,
+                                        pos=jnp.asarray(t),
+                                        kind="attn_local")
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=3e-2, atol=3e-2)
+
+
+# -------------------------------------------------- generation integration
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "mamba2-1.3b",
+                                  "whisper-base"])
+def test_generation_loop(arch):
+    """Prefill + multi-token greedy decode through the serve path."""
+    from repro.launch.serve import generate
+    cfg = reduced(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, T0, NEW = 2, 8, 4
+    prompts = jax.random.randint(jax.random.key(1), (B, T0), 0,
+                                 cfg.vocab_size, jnp.int32)
+    frames = (jnp.zeros((B, cfg.encoder_seq, cfg.d_model))
+              if cfg.is_encoder_decoder else None)
+    seqs = generate(model, params, prompts, NEW, cache_len=T0 + NEW,
+                    frames=frames)
+    assert seqs.shape == (B, T0 + NEW)
+    assert int(jnp.max(seqs)) < cfg.vocab_size

@@ -1,0 +1,86 @@
+"""Mesh-integrated federated boosting (shard_map) — run in a subprocess with
+8 placeholder devices so the main pytest process keeps its 1-device view."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.configs.paper_fedboost import FedBoostConfig, DOMAINS
+    from repro.core import fed_mesh
+    from repro.data import make_domain_data
+    from repro.models.weak import stump_thresholds
+
+    K = 8
+    dom = dataclasses.replace(DOMAINS['edge_vision'], n_clients=K)
+    data = make_domain_data(dom, seed=0)
+    n_local = min(c[0].shape[0] for c in data['clients'])
+    x = jnp.stack([c[0][:n_local] for c in data['clients']])
+    y = jnp.stack([c[1][:n_local] for c in data['clients']])
+    xv_full, yv_full = data['val']
+    nvl = xv_full.shape[0] // K
+    xv = xv_full[:K*nvl].reshape(K, nvl, -1)
+    yv = yv_full[:K*nvl].reshape(K, nvl)
+
+    mesh = jax.make_mesh((K,), ("clients",))
+    cfg = FedBoostConfig(n_clients=K)
+    thr = stump_thresholds(x.reshape(-1, x.shape[-1]))
+    step = fed_mesh.make_fed_boost_step(cfg, mesh, "clients", thr)
+    state = fed_mesh.init_state(cfg, K, n_local, nvl, buffer_cap=8,
+                                ens_cap=1024, key=jax.random.key(0))
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      fed_mesh.state_shardings(mesh, "clients"),
+                      is_leaf=lambda v: isinstance(v, P))
+    dsh = NamedSharding(mesh, P("clients"))
+    state = jax.device_put(state, sh)
+    x, y, xv, yv = (jax.device_put(a, dsh) for a in (x, y, xv, yv))
+    jstep = jax.jit(step, donate_argnums=0)
+    intervals = []
+    for r in range(40):
+        state = jstep(state, x, y, xv, yv)
+        intervals.append(float(state.interval))
+    print(json.dumps({
+        "ens_count": int(state.ens_count),
+        "syncs": int(state.sync_count),
+        "interval_first": intervals[0],
+        "interval_last": intervals[-1],
+        "val_err": float(state.prev_err),
+        "counter": int(state.counter),
+    }))
+""")
+
+
+@pytest.fixture(scope="module")
+def fed_mesh_result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_fed_mesh_learns(fed_mesh_result):
+    # well below chance (0.5) and the majority-class floor (~0.39 for this
+    # dataset); the mesh mode holds up to i_max*cap learners unflushed at
+    # the horizon, so it trails the event-driven engine slightly
+    assert fed_mesh_result["val_err"] < 0.38
+
+
+def test_fed_mesh_adaptive_interval_grows(fed_mesh_result):
+    # on a converging problem the plateau must widen the interval
+    assert fed_mesh_result["interval_last"] > fed_mesh_result["interval_first"]
+
+
+def test_fed_mesh_syncs_fewer_than_rounds(fed_mesh_result):
+    # scheduled skipping: far fewer collectives than boosting rounds
+    assert fed_mesh_result["syncs"] < fed_mesh_result["counter"]
+    assert fed_mesh_result["ens_count"] > 0

@@ -1,0 +1,62 @@
+"""dist_update kernel vs oracle: shape sweep + boosting invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("N", [64, 300, 1024, 5000])
+@pytest.mark.parametrize("alpha", [0.0, 0.3, 1.5])
+def test_dist_update_matches_ref(N, alpha):
+    k = jax.random.split(jax.random.key(N), 3)
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    got_D, got_Z = ops.dist_update(alpha, D, y, h)
+    want_D, want_Z = ref.dist_update_ref(alpha, D, y, h)
+    np.testing.assert_allclose(np.asarray(got_D), np.asarray(want_D),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(got_Z), float(want_Z), rtol=1e-5)
+
+
+def test_dist_update_agrees_with_core_boosting():
+    from repro.core.boosting import update_distribution
+    k = jax.random.split(jax.random.key(0), 3)
+    N = 777
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    got_D, got_Z = ops.dist_update(0.7, D, y, h)
+    want_D, want_Z = update_distribution(D, 0.7, y, h)
+    np.testing.assert_allclose(np.asarray(got_D), np.asarray(want_D),
+                               rtol=1e-5, atol=1e-7)
+
+
+@given(st.integers(min_value=8, max_value=2000),
+       st.floats(min_value=0.0, max_value=3.0))
+@settings(max_examples=25, deadline=None)
+def test_dist_update_normalized_property(N, alpha):
+    """Property: output always sums to 1 and stays non-negative."""
+    k = jax.random.split(jax.random.key(N), 3)
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    got_D, _ = ops.dist_update(alpha, D, y, h)
+    assert float(jnp.sum(got_D)) == pytest.approx(1.0, abs=1e-4)
+    assert float(jnp.min(got_D)) >= 0.0
+
+
+def test_dist_update_block_sweep():
+    k = jax.random.split(jax.random.key(3), 3)
+    N = 3000
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    want, _ = ref.dist_update_ref(1.1, D, y, h)
+    for bn in (256, 512, 1024):
+        got, _ = ops.dist_update(1.1, D, y, h, block_n=bn)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)

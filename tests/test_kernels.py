@@ -1,0 +1,108 @@
+"""Per-kernel allclose vs the pure-jnp oracles (ref.py), swept over shapes
+and dtypes, kernels executed in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- stump_scan
+
+@pytest.mark.parametrize("N,F,T", [(64, 4, 3), (300, 20, 9), (513, 33, 16),
+                                   (1024, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stump_scan_matches_ref(N, F, T, dtype):
+    k = jax.random.split(jax.random.key(N * F + T), 4)
+    x = jax.random.normal(k[0], (N, F), jnp.float32).astype(dtype)
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    w = jax.nn.softmax(jax.random.normal(k[2], (N,)))
+    thr = jnp.sort(jax.random.normal(k[3], (F, T)), axis=1)
+    got = ops.stump_scan(x.astype(jnp.float32), y, w, thr)
+    want = ref.stump_scan_ref(x.astype(jnp.float32), y, w, thr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stump_scan_block_sweep():
+    k = jax.random.split(jax.random.key(0), 4)
+    x = jax.random.normal(k[0], (700, 24))
+    y = jnp.sign(jax.random.normal(k[1], (700,)))
+    w = jax.nn.softmax(jax.random.normal(k[2], (700,)))
+    thr = jnp.sort(jax.random.normal(k[3], (24, 8)), axis=1)
+    want = ref.stump_scan_ref(x, y, w, thr)
+    for bn in (128, 256, 512):
+        got = ops.stump_scan(x, y, w, thr, block_n=bn)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- ensemble_vote
+
+@pytest.mark.parametrize("T,N", [(1, 16), (37, 1000), (128, 512),
+                                 (200, 4096)])
+def test_ensemble_vote_matches_ref(T, N):
+    k = jax.random.split(jax.random.key(T * N), 2)
+    m = jnp.sign(jax.random.normal(k[0], (T, N)))
+    a = jax.random.normal(k[1], (T,))
+    got = ops.ensemble_vote(m, a)
+    want = ref.ensemble_vote_ref(m, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(min_value=1, max_value=50),
+       st.integers(min_value=1, max_value=300))
+@settings(max_examples=20, deadline=None)
+def test_ensemble_vote_property(T, N):
+    k = jax.random.split(jax.random.key(T * 1000 + N), 2)
+    m = jnp.sign(jax.random.normal(k[0], (T, N)))
+    a = jax.random.normal(k[1], (T,))
+    got = ops.ensemble_vote(m, a)
+    want = ref.ensemble_vote_ref(m, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- flash_attention
+
+@pytest.mark.parametrize("B,H,T,d", [(1, 1, 128, 64), (2, 3, 256, 64),
+                                     (1, 2, 512, 128), (2, 1, 384, 80)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, T, d, causal):
+    k = jax.random.split(jax.random.key(B * H * T + d), 3)
+    q = jax.random.normal(k[0], (B, H, T, d))
+    kk = jax.random.normal(k[1], (B, H, T, d))
+    v = jax.random.normal(k[2], (B, H, T, d))
+    got = ops.flash_attention(q, kk, v, causal=causal)
+    want = ref.flash_attention_ref(q, kk, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    k = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(k[0], (1, 2, 256, 64)).astype(dtype)
+    kk = jax.random.normal(k[1], (1, 2, 256, 64)).astype(dtype)
+    v = jax.random.normal(k[2], (1, 2, 256, 64)).astype(dtype)
+    got = ops.flash_attention(q, kk, v)
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   kk.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_block_sweep():
+    k = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(k[0], (1, 1, 512, 64))
+    kk = jax.random.normal(k[1], (1, 1, 512, 64))
+    v = jax.random.normal(k[2], (1, 1, 512, 64))
+    want = ref.flash_attention_ref(q, kk, v)
+    for bq, bk in [(64, 64), (128, 256), (256, 128), (512, 512)]:
+        got = ops.flash_attention(q, kk, v, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,92 @@
+"""Adaptive communication scheduling (paper eq. 1): unit + property tests."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_fedboost import SchedulerConfig
+from repro.core.scheduling import (
+    HostScheduler, SchedulerState, adapt_interval, init_state)
+
+CFG = SchedulerConfig(alpha=1.0, beta=2.0, theta1=0.001, theta2=0.01,
+                      i_min=1, i_max=8, i_init=1)
+
+
+def test_improving_error_widens_interval():
+    s = HostScheduler(CFG)
+    s.observe(0.5)
+    s.observe(0.4)          # de = -0.1 < theta1 -> widen
+    assert s.interval == 2.0
+
+
+def test_regressing_error_shrinks_interval():
+    s = HostScheduler(CFG)
+    s.interval = 5.0
+    s.observe(0.3)
+    s.observe(0.5)          # de = +0.2 > theta2 -> shrink by beta
+    assert s.interval == 3.0
+
+
+def test_stable_error_widens():
+    # a plateau (|de| < theta1) must widen -- that's when syncs stop paying
+    s = HostScheduler(CFG)
+    s.observe(0.3)
+    s.observe(0.3)
+    assert s.interval == 2.0
+
+
+def test_dead_zone_keeps_interval():
+    s = HostScheduler(CFG)
+    s.observe(0.3)
+    s.observe(0.305)        # theta1 < de < theta2 -> unchanged
+    assert s.interval == 1.0
+
+
+def test_bounded_interval():
+    s = HostScheduler(CFG)
+    s.observe(0.9)
+    for _ in range(50):
+        s.observe(0.1)      # keeps improving/stable
+    assert s.interval == CFG.i_max
+    for _ in range(50):
+        s.observe(1.0)      # worst possible regressions
+        s.prev_error = 0.0  # force de large positive every time
+    assert s.interval >= CFG.i_min
+
+
+def test_jax_and_host_equivalence():
+    # error values chosen away from the theta thresholds: the host runs
+    # float64, the jax path float32, and a delta landing exactly on theta2
+    # (e.g. 0.31-0.30) classifies differently across precisions
+    host = HostScheduler(CFG)
+    state = init_state(CFG)
+    errs = [0.5, 0.45, 0.45, 0.47, 0.3, 0.325, 0.29, 0.5, 0.1]
+    for e in errs:
+        host.observe(e)
+        state = adapt_interval(state, e, CFG)
+        assert abs(float(state.interval) - host.interval) < 1e-6
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+                max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_interval_always_in_bounds(errors):
+    """Property: under any error sequence the interval stays in
+    [i_min, i_max] (paper's bounded-interval constraint)."""
+    s = HostScheduler(CFG)
+    for e in errors:
+        s.observe(e)
+        assert CFG.i_min <= s.interval <= CFG.i_max
+
+
+@given(st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=60, deadline=None)
+def test_monotone_response(e0, e1):
+    """Property: a bigger error increase never yields a bigger interval."""
+    s1, s2 = HostScheduler(CFG), HostScheduler(CFG)
+    s1.interval = s2.interval = 4.0
+    s1.observe(e0)
+    s2.observe(e0)
+    s1.observe(e1)
+    s2.observe(min(e1 + 0.1, 1.0))
+    assert s2.interval <= s1.interval

@@ -1,0 +1,152 @@
+"""Data / optimizer / checkpoint substrate tests."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, prune, restore, save
+from repro.configs.paper_fedboost import DOMAINS
+from repro.data import make_domain_data, dirichlet_partition, iid_partition
+from repro.data.tokens import MarkovTokens
+from repro.optim import (adamw, clip_by_global_norm, cosine_schedule,
+                         global_norm, sgd)
+
+
+# ---------------------------------------------------------------------- data
+
+@pytest.mark.parametrize("name", sorted(DOMAINS))
+def test_domain_datasets_well_formed(name):
+    dom = DOMAINS[name]
+    data = make_domain_data(dom, seed=0)
+    assert len(data["clients"]) == dom.n_clients
+    for x, y in data["clients"]:
+        assert x.shape[0] == y.shape[0] >= 8
+        assert x.shape[1] == dom.n_features
+        assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+    xv, yv = data["val"]
+    assert xv.shape[0] > 50
+
+
+def test_domain_data_deterministic():
+    a = make_domain_data(DOMAINS["iot"], seed=3)
+    b = make_domain_data(DOMAINS["iot"], seed=3)
+    np.testing.assert_array_equal(np.asarray(a["val"][0]),
+                                  np.asarray(b["val"][0]))
+
+
+def test_dirichlet_partition_covers_all_points():
+    rng = np.random.RandomState(0)
+    x = rng.randn(500, 4).astype(np.float32)
+    y = np.where(rng.rand(500) > 0.5, 1.0, -1.0).astype(np.float32)
+    parts = dirichlet_partition(x, y, 7, 0.3, rng)
+    assert len(parts) == 7
+    assert all(len(px) >= 8 for px, _ in parts)
+
+
+def test_dirichlet_skew_increases_with_lower_alpha():
+    rng = np.random.RandomState(0)
+    x = rng.randn(2000, 4).astype(np.float32)
+    y = np.where(rng.rand(2000) > 0.5, 1.0, -1.0).astype(np.float32)
+
+    def skew(alpha):
+        parts = dirichlet_partition(x, y, 8, alpha, np.random.RandomState(1))
+        fracs = [float(np.mean(py > 0)) for _, py in parts]
+        return np.std(fracs)
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_markov_tokens_learnable_structure():
+    mt = MarkovTokens(vocab=64, seed=0, branching=2)
+    s = mt.stream(2000)
+    # successors of every token restricted to its branching set
+    for t in range(0, 60):
+        idx = np.where(s[:-1] == t)[0]
+        if len(idx) > 3:
+            succ = set(s[idx + 1].tolist())
+            assert len(succ) <= 2
+
+
+# --------------------------------------------------------------------- optim
+
+def _quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - target))
+    return target, loss
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9), lambda: adamw(0.1)])
+def test_optimizers_converge_on_quadratic(make):
+    target, loss = _quad_problem()
+    opt = make()
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, params, state, jnp.asarray(step))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((9,), -10.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # under the limit -> unchanged
+    g2 = {"a": jnp.asarray([0.1, 0.1])}
+    c2 = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), np.asarray(g2["a"]))
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup=10, total=100, final_frac=0.1)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(sched(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(sched(55)) < float(sched(12))
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.full((3,), 5.0)}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(3)}
+    p2, _ = opt.update(zero_g, params, state, jnp.asarray(0))
+    assert float(jnp.max(p2["w"])) < 5.0
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)},
+            "d": (jnp.ones((2,)), jnp.zeros((3,), jnp.bfloat16))}
+    save(str(tmp_path), 7, tree, extra={"note": "x"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    got, step, extra = restore(str(tmp_path), like)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_and_prune(tmp_path):
+    tree = {"w": jnp.ones(2)}
+    for s in (1, 5, 9, 12):
+        save(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 12
+    prune(str(tmp_path), keep=2)
+    assert latest_step(str(tmp_path)) == 12
+    assert len(os.listdir(tmp_path)) == 2
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"w": jnp.ones((3, 3))})
