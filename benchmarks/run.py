@@ -29,7 +29,8 @@ def main() -> None:
 
     from benchmarks import (controller_compare, domains, fedavg_compare,
                             kernel_bench, multipod_compare, relevance_filter,
-                            roofline, scheduler_ablation, staleness)
+                            roofline, scheduler_ablation, serving_load,
+                            staleness)
 
     # Table 1 (the paper's main quantitative claim)
     tab1 = timed("table1_domains",
@@ -47,6 +48,9 @@ def main() -> None:
     timed("roofline_report", roofline.main)
     # single- vs multi-pod scaling census
     timed("multipod_compare", multipod_compare.main)
+    # serving: adaptive micro-batch window vs fixed under closed-loop load
+    serve_rows = timed("serving_load",
+                       lambda: serving_load.main(quick=args.quick))
 
     print("\n--- kernel microbench + harness CSV ---")
     for name, us, derived in kernel_bench.rows():
@@ -56,6 +60,12 @@ def main() -> None:
             f"table1_{d['domain']}", 0.0,
             f"time_down={d['time_down']:.1f}%;comm_down={d['comm_down']:.1f}%;"
             f"conv_down={d['conv_down']:.1f}%;acc_delta={d['acc_delta_pp']:+.1f}pp"))
+    for r in serve_rows:
+        csv_rows.append((
+            f"serve_{r['policy']}_{r['rate']:.0f}rps", 0.0,
+            f"thr={r['throughput_rps']:.0f}rps;p50={r['p50_ms']:.2f}ms;"
+            f"p99={r['p99_ms']:.2f}ms;batch={r['mean_batch']:.1f};"
+            f"rej={r['rejected']}"))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
 

@@ -107,6 +107,11 @@ class FederatedBoostEngine:
         self._val_margin = None       # running sum alpha~*h over val set
         self._test_margin = None
         self._key = jax.random.key(cfg.seed)
+        # serving hook (attach_registry): snapshot publication mid-training
+        self._registry = None
+        self._tenant: Optional[str] = None
+        self._publish_every = 1
+        self._syncs_since_publish = 0
 
         n = len(data["clients"])
         speeds = np.exp(self.rng.uniform(
@@ -128,6 +133,37 @@ class FederatedBoostEngine:
                 cid=cid, x=x, y=y, D=D,
                 speed=float(speeds[cid]),
                 buffer=ClientBuffer(cid)))
+
+    # ------------------------------------------------------- serving hook
+    def attach_registry(self, registry, tenant: str,
+                        publish_every: int = 1) -> None:
+        """Publish an immutable ensemble snapshot into a serving
+        :class:`~repro.serve.registry.EnsembleRegistry` after every
+        ``publish_every``-th synchronization, stamped with the simulated
+        clock — serving hot-swaps versions while training keeps running."""
+        assert publish_every >= 1
+        self._registry = registry
+        self._tenant = tenant
+        self._publish_every = publish_every
+        self._syncs_since_publish = 0
+
+    def publish(self, clock: float) -> None:
+        """The publish() hook: snapshot the current global ensemble."""
+        if self._registry is None or not self.ensemble.learners:
+            return
+        self._registry.publish(
+            self._tenant, list(self.ensemble.learners),
+            list(self.ensemble.alphas), clock=float(clock),
+            train_progress=self.metrics.learners_merged,
+            weak_name=self.weak.name)
+
+    def _maybe_publish(self, clock: float) -> None:
+        if self._registry is None:
+            return
+        self._syncs_since_publish += 1
+        if self._syncs_since_publish >= self._publish_every:
+            self._syncs_since_publish = 0
+            self.publish(clock)
 
     # ------------------------------------------------------------ helpers
     def _next_key(self):
@@ -266,6 +302,7 @@ class FederatedBoostEngine:
                 m.n_messages += 1
                 self._client_catch_up(c, delta)
             m.n_syncs += 1
+            self._maybe_publish(t)
             self._record(t)
         m.sim_time_s = t
 
@@ -319,6 +356,7 @@ class FederatedBoostEngine:
             m.n_messages += 1
             self._client_catch_up(c, delta)
             c.known_interval = self.scheduler.current
+            self._maybe_publish(t)
             self._record(t)
             if not finished[cid]:
                 advance(c)

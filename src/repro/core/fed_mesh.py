@@ -37,6 +37,13 @@ from repro.core.compensation import adaboost_alpha, compensate
 
 Array = jnp.ndarray
 
+if hasattr(jax, "shard_map"):        # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:                                # older jax: experimental home, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 class FedMeshState(NamedTuple):
     """Replicated-logical state; leaves with a leading client axis are
@@ -100,7 +107,8 @@ def init_state(cfg: FedBoostConfig, n_clients: int, n_local: int,
         ens_alpha=jnp.zeros((ens_cap,)),
         ens_count=jnp.zeros((), jnp.int32),
         val_margin=jnp.zeros((n_clients, n_val_local)),
-        interval=jnp.asarray(float(cfg.scheduler.i_init), jnp.float32),
+        interval=jnp.asarray(scheduling._clipped_init(cfg.scheduler),
+                             jnp.float32),
         prev_err=jnp.asarray(1.0, jnp.float32),
         counter=jnp.zeros((), jnp.int32),
         last_sync=jnp.zeros((), jnp.int32),
@@ -216,9 +224,9 @@ def make_fed_boost_step(cfg: FedBoostConfig, mesh, client_axis: str,
                     P(client_axis), P(client_axis), P(client_axis),
                     P(client_axis), P(client_axis), P(client_axis))
         specs_out = (P(), P(), P(), P(client_axis), P(client_axis), P())
-        ens_p, ens_a, n_new, D, val_margin, g_err = jax.shard_map(
+        ens_p, ens_a, n_new, D, val_margin, g_err = _shard_map(
             gather_merge, mesh=mesh, in_specs=specs_in, out_specs=specs_out,
-            check_vma=False)(
+            **_SHARD_MAP_KW)(
                 state.buf_params, state.buf_stamp, state.buf_count,
                 state.D, x, y, state.val_margin, xv, yv)
 
@@ -246,6 +254,23 @@ def make_fed_boost_step(cfg: FedBoostConfig, mesh, client_axis: str,
         return jax.lax.cond(due, sync, lambda s, *a: s, state, x, y, xv, yv)
 
     return step
+
+
+def publish_snapshot(state: FedMeshState, registry, tenant: str, *,
+                     clock: float = 0.0):
+    """Host-side publish() hook: snapshot the replicated ensemble arrays of
+    a (possibly mid-training) :class:`FedMeshState` into a serving
+    :class:`~repro.serve.registry.EnsembleRegistry`.
+
+    ``ens_params`` is already the packed ``(T, 4)`` stump wire format, so
+    this is a device_get + slice — the compiled train step never blocks on
+    serving, and readers only ever see the frozen snapshot."""
+    n = int(jax.device_get(state.ens_count))
+    params = jnp.asarray(jax.device_get(state.ens_params)[:n])
+    alphas = jnp.asarray(jax.device_get(state.ens_alpha)[:n])
+    return registry.publish_packed(
+        tenant, params, alphas, clock=float(clock),
+        train_progress=int(jax.device_get(state.counter)))
 
 
 def state_shardings(mesh, client_axis: str) -> FedMeshState:

@@ -30,9 +30,15 @@ class SchedulerState(NamedTuple):
     initialized: jnp.ndarray  # bool scalar (first observation sets prev only)
 
 
+def _clipped_init(cfg: SchedulerConfig) -> float:
+    """i_init clipped into [i_min, i_max] — the invariant eq. (1) maintains
+    must hold from construction, not only after the first observation."""
+    return min(max(float(cfg.i_init), float(cfg.i_min)), float(cfg.i_max))
+
+
 def init_state(cfg: SchedulerConfig) -> SchedulerState:
     return SchedulerState(
-        interval=jnp.asarray(float(cfg.i_init), jnp.float32),
+        interval=jnp.asarray(_clipped_init(cfg), jnp.float32),
         prev_error=jnp.asarray(1.0, jnp.float32),
         initialized=jnp.asarray(False),
     )
@@ -59,7 +65,7 @@ class HostScheduler:
 
     def __init__(self, cfg: SchedulerConfig):
         self.cfg = cfg
-        self.interval = float(cfg.i_init)
+        self.interval = _clipped_init(cfg)
         self.prev_error = None
 
     def observe(self, error: float) -> int:

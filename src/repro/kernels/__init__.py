@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the framework's compute hot-spots.
 # <name>.py: pl.pallas_call + BlockSpec; ops.py: jit'd wrappers (padding,
 # interpret-mode selection); ref.py: pure-jnp oracles asserted in tests.
-from repro.kernels.ops import stump_scan, ensemble_vote, flash_attention  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    stump_scan, ensemble_vote, ensemble_vote_batched, stump_vote_batched,
+    flash_attention)

@@ -4,6 +4,16 @@ Fuses the (T-learner x N-sample) weighted reduction into one VMEM-resident
 pass — the XLA fallback materializes the full scaled-margin tensor in HBM
 (T x N x 4 bytes) before reducing; here each (block_t x block_n) tile is
 reduced on the fly into the (block_n,) output accumulator.
+
+Two batched variants serve the `repro.serve` hot path, where requests from
+B tenants are packed into one padded (B, T, N) block:
+
+* :func:`ensemble_vote_batched_kernel` — per-tenant weighted vote over
+  precomputed margins (generic weak learners).
+* :func:`stump_vote_batched_kernel`    — the stump fast path: the weak-
+  learner prediction margin pol*sign(x[feat] - thr) and the weighted vote
+  are fused in a single VMEM-resident pass, so the (T, N) margin tensor is
+  never materialized in HBM.
 """
 from __future__ import annotations
 
@@ -48,3 +58,89 @@ def ensemble_vote_kernel(margins: jnp.ndarray, alphas: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
         interpret=interpret,
     )(margins, alphas)
+
+
+# ---------------------------------------------------------------------------
+# batched variants (serving hot path: one tenant per leading-axis slot)
+# ---------------------------------------------------------------------------
+
+def _batched_vote_kernel(m_ref, a_ref, out_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = m_ref[0].astype(jnp.float32)        # (bt, bn)
+    a = a_ref[0].astype(jnp.float32)        # (bt,)
+    out_ref[0, :] += jnp.einsum("t,tn->n", a, m,
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def ensemble_vote_batched_kernel(margins: jnp.ndarray, alphas: jnp.ndarray, *,
+                                 block_t: int = 128, block_n: int = 512,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """margins: (B,T,N); alphas: (B,T) -> (B,N) f32 per-tenant ensemble
+    margins.  T, N must be multiples of the block sizes (the ops wrapper
+    pads with zero-alpha rows / dummy columns)."""
+    B, T, N = margins.shape
+    assert T % block_t == 0 and N % block_n == 0, (B, T, N, block_t, block_n)
+    grid = (B, N // block_n, T // block_t)  # T innermost: accumulate per (b,n)
+    return pl.pallas_call(
+        _batched_vote_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_n), lambda b, n, t: (b, t, n)),
+            pl.BlockSpec((1, block_t), lambda b, n, t: (b, t)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, n, t: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(margins, alphas)
+
+
+def _stump_vote_kernel(x_ref, thr_ref, pol_ref, a_ref, out_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (bt, bn) gathered features
+    thr = thr_ref[0].astype(jnp.float32)    # (bt,)
+    pol = pol_ref[0].astype(jnp.float32)    # (bt,)
+    a = a_ref[0].astype(jnp.float32)        # (bt,)
+    # weak-learner margin and weighted vote fused in VMEM; the 1e-12
+    # tiebreak matches fed_mesh._predict_stumps / models.weak.predict_stump
+    m = pol[:, None] * jnp.sign(x - thr[:, None] + 1e-12)
+    out_ref[0, :] += jnp.einsum("t,tn->n", a, m,
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def stump_vote_batched_kernel(xsel: jnp.ndarray, thr: jnp.ndarray,
+                              pol: jnp.ndarray, alphas: jnp.ndarray, *,
+                              block_t: int = 128, block_n: int = 512,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Fused stump prediction + weighted vote.
+
+    xsel: (B,T,N) pre-gathered features xsel[b,t,n] = x_b[n, feat_{b,t}];
+    thr, pol, alphas: (B,T) -> (B,N) f32 ensemble margins.  Zero-alpha
+    padding rows contribute nothing regardless of thr/pol."""
+    B, T, N = xsel.shape
+    assert T % block_t == 0 and N % block_n == 0, (B, T, N, block_t, block_n)
+    grid = (B, N // block_n, T // block_t)
+    return pl.pallas_call(
+        _stump_vote_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_n), lambda b, n, t: (b, t, n)),
+            pl.BlockSpec((1, block_t), lambda b, n, t: (b, t)),
+            pl.BlockSpec((1, block_t), lambda b, n, t: (b, t)),
+            pl.BlockSpec((1, block_t), lambda b, n, t: (b, t)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, n, t: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(xsel, thr, pol, alphas)

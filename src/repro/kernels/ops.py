@@ -11,7 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.stump_scan import stump_scan_kernel
-from repro.kernels.ensemble_vote import ensemble_vote_kernel
+from repro.kernels.ensemble_vote import (
+    ensemble_vote_kernel, ensemble_vote_batched_kernel,
+    stump_vote_batched_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 
 
@@ -55,13 +57,56 @@ def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
     with dummy columns."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     T, N = margins.shape
-    bt = min(block_t, max(8, 1 << (T - 1).bit_length()))
-    bn = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    bt, bn = _vote_blocks(T, N, block_t, block_n)
     mp = _pad_to(_pad_to(margins, 0, bt), 1, bn)
     ap = _pad_to(alphas, 0, bt, value=0.0)
     out = ensemble_vote_kernel(mp, ap, block_t=bt, block_n=bn,
                                interpret=interpret)
     return out[:N]
+
+
+def _vote_blocks(T: int, N: int, block_t: int, block_n: int):
+    bt = min(block_t, max(8, 1 << (max(T, 1) - 1).bit_length()))
+    bn = min(block_n, max(128, 1 << (max(N, 1) - 1).bit_length()))
+    return bt, bn
+
+
+def ensemble_vote_batched(margins: jnp.ndarray, alphas: jnp.ndarray, *,
+                          block_t: int = 128, block_n: int = 512,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Per-tenant H margins for packed serving batches.
+
+    margins: (B,T,N); alphas: (B,T) -> (B,N).  Pads T with zero-alpha rows
+    and N with dummy columns (sliced off)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, T, N = margins.shape
+    bt, bn = _vote_blocks(T, N, block_t, block_n)
+    mp = _pad_to(_pad_to(margins, 1, bt), 2, bn)
+    ap = _pad_to(alphas, 1, bt, value=0.0)
+    out = ensemble_vote_batched_kernel(mp, ap, block_t=bt, block_n=bn,
+                                       interpret=interpret)
+    return out[:, :N]
+
+
+def stump_vote_batched(xsel: jnp.ndarray, thr: jnp.ndarray, pol: jnp.ndarray,
+                       alphas: jnp.ndarray, *, block_t: int = 128,
+                       block_n: int = 512,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Fused stump-margin + weighted-vote for packed serving batches.
+
+    xsel: (B,T,N) gathered features; thr/pol/alphas: (B,T) -> (B,N).
+    Pads T with zero-alpha rows (thr/pol padding is irrelevant: alpha=0
+    nullifies the row) and N with dummy columns."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, T, N = xsel.shape
+    bt, bn = _vote_blocks(T, N, block_t, block_n)
+    xp = _pad_to(_pad_to(xsel, 1, bt), 2, bn)
+    tp = _pad_to(thr, 1, bt, value=0.0)
+    pp = _pad_to(pol, 1, bt, value=1.0)
+    ap = _pad_to(alphas, 1, bt, value=0.0)
+    out = stump_vote_batched_kernel(xp, tp, pp, ap, block_t=bt, block_n=bn,
+                                    interpret=interpret)
+    return out[:, :N]
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,

@@ -37,6 +37,32 @@ def ensemble_vote_ref(margins: jnp.ndarray, alphas: jnp.ndarray) -> jnp.ndarray:
                       margins.astype(jnp.float32))
 
 
+def ensemble_vote_batched_ref(margins: jnp.ndarray, alphas: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """Per-tenant weighted ensemble margins (serving batch path).
+
+    margins: (B, T, N) per-learner predictions for B packed tenants;
+    alphas: (B, T) -> (B, N) f32 ensemble margins.
+    """
+    return jnp.einsum("bt,btn->bn", alphas.astype(jnp.float32),
+                      margins.astype(jnp.float32))
+
+
+def stump_vote_batched_ref(xsel: jnp.ndarray, thr: jnp.ndarray,
+                           pol: jnp.ndarray, alphas: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Fused stump prediction + weighted vote (serving stump fast path).
+
+    xsel: (B, T, N) gathered features xsel[b,t,n] = x_b[n, feat_{b,t}];
+    thr, pol, alphas: (B, T) -> (B, N) f32 ensemble margins.  The 1e-12
+    sign tiebreak matches the stump predictors used at training time.
+    """
+    m = (pol[:, :, None].astype(jnp.float32)
+         * jnp.sign(xsel.astype(jnp.float32)
+                    - thr[:, :, None].astype(jnp.float32) + 1e-12))
+    return jnp.einsum("bt,btn->bn", alphas.astype(jnp.float32), m)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True) -> jnp.ndarray:
     """Plain softmax attention.  q,k,v: (B,H,T,hd) -> (B,H,T,hd)."""

@@ -156,6 +156,8 @@ def run_one(arch_name: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time()
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+            cost = cost[0] if cost else {}
         rec["flops_per_device"] = float(cost.get("flops", 0.0))
         rec["bytes_accessed_per_device"] = float(
             cost.get("bytes accessed", 0.0))

@@ -186,9 +186,13 @@ def analyze(text: str) -> Dict:
         in_fused = comp in fused_bodies
         for op in ops:
             if op.opcode == "dot":
-                # contracted size from the lhs operand's shape
+                # contracted size from the lhs operand's shape; the operand
+                # may carry a type prefix (`dot(f32[8,16]{1,0} %lhs, ...)`,
+                # older XLA text) or not (`dot(%lhs, ...)`)
                 f = 0.0
-                rm = re.search(r"\(\s*(%[\w.\-]+)", op.rhs)
+                rm = re.search(
+                    r"\(\s*(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s+)?"
+                    r"(%[\w.\-]+)", op.rhs)
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
                 if rm and cm and op.dims is not None:
                     lhs_dt, lhs_dims = shape_map.get(rm.group(1), (None, None))

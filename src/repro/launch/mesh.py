@@ -12,7 +12,15 @@ Mesh shapes (TPU v5e pods):
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                 # jax >= 0.5
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:                  # older jax: Auto is the only behaviour
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
@@ -22,14 +30,12 @@ def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
     assert data * model == 256, (data, model)
     shape = (2, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (cpu) devices exist — for tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kwargs(2))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,0 +1,12 @@
+# Serving subsystem for federated boosted ensembles: training publishes
+# immutable versioned snapshots into a multi-tenant registry; an adaptive
+# micro-batcher (the paper's eq.-1 controller on a latency signal) packs
+# request traffic across tenants into padded blocks for the batched Pallas
+# ensemble-vote kernels.
+from repro.serve.registry import (  # noqa: F401
+    EnsembleRegistry, EnsembleSnapshot, pack_stumps)
+from repro.serve.batching import (  # noqa: F401
+    AdaptiveWindow, BatchConfig, MicroBatchQueue, Request, SERVE_SCHEDULER)
+from repro.serve.engine import BatchEvaluator, Response  # noqa: F401
+from repro.serve.metrics import ServeMetrics, TenantMetrics  # noqa: F401
+from repro.serve.service import EnsembleServer  # noqa: F401

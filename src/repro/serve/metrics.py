@@ -1,0 +1,146 @@
+"""Serving observability: per-tenant latency quantiles, queue depth, batch
+sizes, snapshot staleness — the operational counters the load benchmark and
+the `serve_ensemble` driver report.
+
+Latencies are kept in a bounded reservoir per tenant (uniform-ish by keeping
+every k-th sample once full) so a long soak doesn't grow memory unboundedly.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency on the hot path)."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[idx]
+
+
+@dataclass
+class TenantMetrics:
+    completed: int = 0
+    rejected: int = 0
+    latencies: List[float] = field(default_factory=list)
+    staleness_sum: float = 0.0       # snapshot age summed at completion time
+    last_version: int = 0
+    _reservoir: int = 4096
+    _skip: int = 0
+
+    def record(self, latency_s: float, staleness_s: float, version: int
+               ) -> None:
+        self.completed += 1
+        self.staleness_sum += max(0.0, staleness_s)
+        self.last_version = version
+        if len(self.latencies) < self._reservoir:
+            self.latencies.append(latency_s)
+        else:                        # thin the stream: keep every 8th sample
+            self._skip += 1
+            if self._skip % 8 == 0:
+                # dedicated write cursor so successive writes sweep the whole
+                # reservoir (completed % size would revisit only size/8 slots)
+                self.latencies[(self._skip // 8) % self._reservoir] = latency_s
+
+    @property
+    def p50(self) -> float:
+        return percentile(self.latencies, 50.0)
+
+    @property
+    def p99(self) -> float:
+        return percentile(self.latencies, 99.0)
+
+    @property
+    def mean_staleness(self) -> float:
+        return self.staleness_sum / self.completed if self.completed else 0.0
+
+
+@dataclass
+class ServeMetrics:
+    """Aggregated serving counters (per tenant + fleet-wide)."""
+    tenants: Dict[str, TenantMetrics] = field(default_factory=dict)
+    batch_size_hist: Counter = field(default_factory=Counter)
+    window_units_hist: Counter = field(default_factory=Counter)
+    queue_depth_peak: int = 0
+    n_batches: int = 0
+    first_submit_t: Optional[float] = None
+    last_finish_t: Optional[float] = None
+
+    def tenant(self, name: str) -> TenantMetrics:
+        return self.tenants.setdefault(name, TenantMetrics())
+
+    # ------------------------------------------------------------- records
+    def record_submit(self, now: float, depth: int) -> None:
+        if self.first_submit_t is None:
+            self.first_submit_t = now
+        self.queue_depth_peak = max(self.queue_depth_peak, depth)
+
+    def record_rejected(self, tenant: str) -> None:
+        self.tenant(tenant).rejected += 1
+
+    def record_batch(self, size: int, window_units: int, finish_t: float
+                     ) -> None:
+        self.n_batches += 1
+        self.batch_size_hist[size] += 1
+        self.window_units_hist[window_units] += 1
+        self.last_finish_t = (finish_t if self.last_finish_t is None
+                              else max(self.last_finish_t, finish_t))
+
+    def record_completion(self, tenant: str, latency_s: float,
+                          staleness_s: float, version: int) -> None:
+        self.tenant(tenant).record(latency_s, staleness_s, version)
+
+    # ------------------------------------------------------------- reports
+    @property
+    def completed(self) -> int:
+        return sum(t.completed for t in self.tenants.values())
+
+    @property
+    def rejected(self) -> int:
+        return sum(t.rejected for t in self.tenants.values())
+
+    @property
+    def mean_batch(self) -> float:
+        n = sum(self.batch_size_hist.values())
+        return (sum(k * v for k, v in self.batch_size_hist.items()) / n
+                if n else 0.0)
+
+    def throughput(self) -> float:
+        """Completed requests per second of serving makespan."""
+        if (self.first_submit_t is None or self.last_finish_t is None
+                or self.last_finish_t <= self.first_submit_t):
+            return 0.0
+        return self.completed / (self.last_finish_t - self.first_submit_t)
+
+    def all_latencies(self) -> List[float]:
+        out: List[float] = []
+        for t in self.tenants.values():
+            out.extend(t.latencies)
+        return out
+
+    def report(self) -> Dict:
+        lats = self.all_latencies()
+        return {
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "throughput_rps": self.throughput(),
+            "p50_ms": 1e3 * percentile(lats, 50.0),
+            "p99_ms": 1e3 * percentile(lats, 99.0),
+            "mean_batch": self.mean_batch,
+            "n_batches": self.n_batches,
+            "queue_depth_peak": self.queue_depth_peak,
+            "tenants": {
+                name: {
+                    "completed": t.completed,
+                    "rejected": t.rejected,
+                    "p50_ms": 1e3 * t.p50,
+                    "p99_ms": 1e3 * t.p99,
+                    "mean_staleness_s": t.mean_staleness,
+                    "snapshot_version": t.last_version,
+                }
+                for name, t in sorted(self.tenants.items())
+            },
+        }

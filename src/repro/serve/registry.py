@@ -1,0 +1,145 @@
+"""Multi-tenant ensemble registry: immutable, versioned serving snapshots.
+
+Training (the event-driven :class:`~repro.core.async_engine.FederatedBoostEngine`
+or the compiled :mod:`~repro.core.fed_mesh` step) publishes a snapshot of the
+current global ensemble whenever it merges learners; serving reads whatever
+the latest snapshot is.  Because a snapshot is a frozen value built *before*
+the registry pointer is swapped (under a lock), readers never observe a
+half-merged ensemble, and training never blocks on serving traffic.
+
+Stump ensembles — the paper's weak learner and the ``fed_mesh`` wire format —
+are stored packed as a ``(T, 4)`` float array (feature, threshold, polarity,
+spare), which feeds the fused ``stump_vote_batched`` Pallas kernel directly.
+Generic weak learners (logistic / mlp) keep their parameter pytrees and go
+through the per-learner-predict + ``ensemble_vote_batched`` path instead.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class EnsembleSnapshot:
+    """One immutable published version of a tenant's ensemble."""
+    tenant: str
+    version: int               # monotonically increasing per tenant, from 1
+    published_at: float        # publisher's clock (sim seconds or wall time)
+    train_progress: int        # learners merged / rounds done when published
+    weak_name: str             # weak-learner family ("stump" | "logistic" | ...)
+    alphas: jnp.ndarray        # (T,) f32 compensated vote weights
+    stump_params: Optional[jnp.ndarray] = None   # (T, 4) packed stump fast path
+    learners: Tuple = ()       # generic params pytrees (non-stump families)
+
+    @property
+    def n_learners(self) -> int:
+        return int(self.alphas.shape[0])
+
+
+def pack_stumps(learners: Sequence[Dict]) -> jnp.ndarray:
+    """Pack stump param dicts {feature, threshold, polarity} -> (T, 4) f32."""
+    if not learners:
+        return jnp.zeros((0, 4), jnp.float32)
+    rows = [jnp.stack([jnp.asarray(p["feature"], jnp.float32),
+                       jnp.asarray(p["threshold"], jnp.float32),
+                       jnp.asarray(p["polarity"], jnp.float32),
+                       jnp.zeros((), jnp.float32)])
+            for p in learners]
+    return jnp.stack(rows)
+
+
+class EnsembleRegistry:
+    """Thread-safe tenant -> snapshot-history map (bounded history).
+
+    ``publish*`` builds the immutable snapshot outside the lock and swaps it
+    in atomically; ``latest``/``get`` return whatever version is current —
+    serving hot-swaps ensembles without ever blocking a publisher.
+    """
+
+    def __init__(self, history: int = 4):
+        assert history >= 1
+        self._history = history
+        self._lock = threading.Lock()
+        self._snaps: Dict[str, List[EnsembleSnapshot]] = {}
+
+    # ------------------------------------------------------------- publish
+    def publish(self, tenant: str, learners: Sequence, alphas: Sequence[float],
+                *, clock: float = 0.0, train_progress: int = 0,
+                weak_name: str = "stump") -> EnsembleSnapshot:
+        """Publish from a list of weak-learner params + vote weights (the
+        :class:`Ensemble` representation the async engine grows)."""
+        alphas = jnp.asarray(list(alphas), jnp.float32)
+        if weak_name == "stump":
+            return self.publish_packed(
+                tenant, pack_stumps(list(learners)), alphas, clock=clock,
+                train_progress=train_progress)
+        snap = self._stamp(tenant, EnsembleSnapshot(
+            tenant=tenant, version=0, published_at=float(clock),
+            train_progress=int(train_progress), weak_name=weak_name,
+            alphas=alphas, stump_params=None, learners=tuple(learners)))
+        return snap
+
+    def publish_packed(self, tenant: str, stump_params: jnp.ndarray,
+                       alphas: jnp.ndarray, *, clock: float = 0.0,
+                       train_progress: int = 0) -> EnsembleSnapshot:
+        """Publish a packed (T, 4) stump ensemble — the fed_mesh wire format."""
+        stump_params = jnp.asarray(stump_params, jnp.float32)
+        alphas = jnp.asarray(alphas, jnp.float32)
+        assert stump_params.shape == (alphas.shape[0], 4), (
+            stump_params.shape, alphas.shape)
+        return self._stamp(tenant, EnsembleSnapshot(
+            tenant=tenant, version=0, published_at=float(clock),
+            train_progress=int(train_progress), weak_name="stump",
+            alphas=alphas, stump_params=stump_params))
+
+    def _stamp(self, tenant: str, snap: EnsembleSnapshot) -> EnsembleSnapshot:
+        with self._lock:
+            hist = self._snaps.setdefault(tenant, [])
+            snap = replace(snap, version=(hist[-1].version + 1 if hist else 1))
+            hist.append(snap)
+            del hist[:-self._history]
+        return snap
+
+    # --------------------------------------------------------------- reads
+    def latest(self, tenant: str) -> Optional[EnsembleSnapshot]:
+        with self._lock:
+            hist = self._snaps.get(tenant)
+            return hist[-1] if hist else None
+
+    def get(self, tenant: str, version: Optional[int] = None
+            ) -> Optional[EnsembleSnapshot]:
+        if version is None:
+            return self.latest(tenant)
+        with self._lock:
+            for s in self._snaps.get(tenant, ()):
+                if s.version == version:
+                    return s
+        return None
+
+    def tenants(self) -> List[str]:
+        with self._lock:
+            return sorted(self._snaps)
+
+    def version_count(self, tenant: str) -> int:
+        """Total versions ever published for a tenant (not history length)."""
+        s = self.latest(tenant)
+        return s.version if s else 0
+
+    def staleness(self, tenant: str, now: float) -> float:
+        """Seconds since the tenant's serving snapshot was published (the
+        snapshot-freshness analogue of the paper's staleness tau)."""
+        s = self.latest(tenant)
+        return max(0.0, float(now) - s.published_at) if s else float("inf")
+
+    def rebase_clock(self, clock: float = 0.0) -> None:
+        """Re-stamp every latest snapshot's publish time onto a new clock
+        epoch.  Training simulators and serving load generators run separate
+        simulated clocks; rebasing at the hand-off keeps the staleness metric
+        meaningful without mutating any published snapshot (new frozen
+        snapshots are swapped in)."""
+        with self._lock:
+            for tenant, hist in self._snaps.items():
+                hist[-1] = replace(hist[-1], published_at=float(clock))

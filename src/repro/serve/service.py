@@ -1,0 +1,109 @@
+"""EnsembleServer: the serving front door.
+
+Composes the admission-controlled :class:`MicroBatchQueue`, the eq.-(1)
+:class:`AdaptiveWindow`, the packed-batch :class:`BatchEvaluator`, and
+:class:`ServeMetrics` into a single clock-agnostic server:
+
+* ``submit(tenant, x, now)`` enqueues one request and opportunistically
+  dispatches any batches already due; it returns ``(accepted, responses)``
+  where ``accepted=False`` signals admission-control rejection
+  (backpressure) to the caller.
+* ``advance(now)`` dispatches every batch whose window has expired (or that
+  hit the size cap) up to ``now``; a batch dispatches no earlier than the
+  previous batch finished (single-server discipline).
+* ``drain()`` flushes the queue regardless of ``now``.
+
+Timestamps are supplied by the caller, so the same server runs under a real
+wall clock (the `serve_ensemble` launch driver) and under the simulated
+clock of the closed-loop load benchmark.  Service time per dispatched batch
+is either measured (wall-clock mode, default) or produced by an injected
+``service_model(batch_size) -> seconds`` (simulation mode).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
+from repro.serve.engine import BatchEvaluator, Response
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import EnsembleRegistry
+
+
+class EnsembleServer:
+    def __init__(self, registry: EnsembleRegistry,
+                 cfg: Optional[BatchConfig] = None, *,
+                 service_model: Optional[Callable[[int], float]] = None,
+                 metrics: Optional[ServeMetrics] = None,
+                 interpret: Optional[bool] = None):
+        self.cfg = cfg or BatchConfig()
+        self.registry = registry
+        self.queue = MicroBatchQueue(self.cfg)
+        self.window = AdaptiveWindow(self.cfg)
+        self.evaluator = BatchEvaluator(registry, interpret=interpret)
+        self.metrics = metrics or ServeMetrics()
+        self.service_model = service_model
+        self._busy_until = -math.inf     # single server: one batch in flight
+
+    # ------------------------------------------------------------- intake
+    def submit(self, tenant: str, x, now: float
+               ) -> Tuple[bool, List[Response]]:
+        """Enqueue one request.  Returns ``(accepted, responses)``:
+        ``accepted`` is False when admission control rejected the request
+        (backpressure — the caller must retry or shed it), and
+        ``responses`` holds any batches that came due at or before ``now``
+        (possibly including this request, if it filled a batch)."""
+        out = self.advance(now)          # free queue slots already due
+        req = self.queue.submit(tenant, x, now)
+        if req is None:
+            self.metrics.record_rejected(tenant)
+        else:
+            self.metrics.record_submit(now, self.queue.depth)
+            out += self.advance(now)     # dispatch a batch this one filled
+        return req is not None, out
+
+    # ----------------------------------------------------------- dispatch
+    def _next_due(self) -> Optional[float]:
+        """Earliest instant the head batch may dispatch, or None if empty."""
+        oldest = self.queue.oldest_t()
+        if oldest is None:
+            return None
+        full_t = self.queue.full_batch_t()
+        due = full_t if full_t is not None else oldest + self.window.window_s
+        return max(due, self._busy_until)
+
+    def advance(self, now: float) -> List[Response]:
+        """Dispatch every batch due at or before ``now``."""
+        out: List[Response] = []
+        while True:
+            due = self._next_due()
+            if due is None or due > now:
+                return out
+            out.extend(self._dispatch(due))
+
+    def drain(self) -> List[Response]:
+        """Flush the queue: dispatch remaining batches as their windows (or
+        the server) free up, regardless of the caller's clock."""
+        return self.advance(math.inf)
+
+    def _dispatch(self, at: float) -> List[Response]:
+        batch = self.queue.pop_batch()
+        if self.service_model is not None:
+            responses = self.evaluator.evaluate(batch)
+            service_s = float(self.service_model(len(batch)))
+        else:
+            t0 = time.perf_counter()
+            responses = self.evaluator.evaluate(batch)
+            service_s = time.perf_counter() - t0
+        finish = at + service_s
+        self._busy_until = finish
+        self.metrics.record_batch(len(batch), self.window.units, finish)
+        for r in responses:
+            latency = finish - r.t_submit
+            self.window.record(latency)
+            self.metrics.record_completion(
+                r.tenant, latency,
+                staleness_s=self.registry.staleness(r.tenant, finish),
+                version=r.snapshot_version)
+        return responses

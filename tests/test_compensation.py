@@ -3,6 +3,7 @@ import math
 
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # property tests; CI installs requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_fedboost import CompensationConfig

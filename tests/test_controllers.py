@@ -1,5 +1,6 @@
 """Beyond-paper controllers satisfy the same safety properties as eq. 1."""
 import pytest
+pytest.importorskip("hypothesis")  # property tests; CI installs requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_fedboost import SchedulerConfig

@@ -1,6 +1,7 @@
 """Adaptive communication scheduling (paper eq. 1): unit + property tests."""
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # property tests; CI installs requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_fedboost import SchedulerConfig

@@ -1,0 +1,261 @@
+"""repro.serve: registry snapshots, publish hooks, adaptive micro-batching,
+admission control, end-to-end served-prediction correctness."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_fedboost import (
+    DOMAINS, FedBoostConfig, SchedulerConfig)
+from repro.core import FederatedBoostEngine
+from repro.core.scheduling import HostScheduler, init_state
+from repro.data import make_domain_data
+from repro.serve import (
+    AdaptiveWindow, BatchConfig, EnsembleRegistry, EnsembleServer,
+    MicroBatchQueue, pack_stumps)
+
+
+def _small_data(name="edge_vision", n=600, k=4, seed=0):
+    dom = dataclasses.replace(DOMAINS[name], n_samples=n, n_clients=k)
+    return make_domain_data(dom, seed=seed)
+
+
+def _stump_snapshot(registry, tenant="t", T=5, F=8, seed=0, clock=0.0):
+    rng = np.random.RandomState(seed)
+    params = np.zeros((T, 4), np.float32)
+    params[:, 0] = rng.randint(0, F, size=T)
+    params[:, 1] = rng.randn(T)
+    params[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    alphas = rng.rand(T).astype(np.float32) + 0.1
+    return registry.publish_packed(tenant, jnp.asarray(params),
+                                   jnp.asarray(alphas), clock=clock)
+
+
+def _direct_margin(snap, x):
+    sp = np.asarray(snap.stump_params)
+    al = np.asarray(snap.alphas)
+    xv = np.asarray(x)[sp[:, 0].astype(int)]
+    return float(np.dot(al, sp[:, 2] * np.sign(xv - sp[:, 1] + 1e-12)))
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_versioning_and_reads():
+    reg = EnsembleRegistry(history=2)
+    s1 = _stump_snapshot(reg, T=3, seed=1)
+    s2 = _stump_snapshot(reg, T=5, seed=2)
+    s3 = _stump_snapshot(reg, T=7, seed=3)
+    assert (s1.version, s2.version, s3.version) == (1, 2, 3)
+    assert reg.latest("t").version == 3
+    assert reg.latest("t").n_learners == 7
+    assert reg.version_count("t") == 3
+    assert reg.get("t", 2).n_learners == 5      # within history window
+    assert reg.get("t", 1) is None              # evicted (history=2)
+    assert reg.latest("missing") is None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        reg.latest("t").version = 99            # snapshots are immutable
+
+
+def test_registry_staleness_and_rebase():
+    reg = EnsembleRegistry()
+    _stump_snapshot(reg, clock=10.0)
+    assert reg.staleness("t", 12.5) == pytest.approx(2.5)
+    assert math.isinf(reg.staleness("nope", 0.0))
+    reg.rebase_clock(0.0)
+    assert reg.staleness("t", 1.0) == pytest.approx(1.0)
+    assert reg.latest("t").version == 1         # rebase keeps the version
+
+
+def test_pack_stumps_roundtrip():
+    learners = [{"feature": jnp.asarray(3, jnp.int32),
+                 "threshold": jnp.asarray(0.25),
+                 "polarity": jnp.asarray(-1.0)}]
+    packed = pack_stumps(learners)
+    assert packed.shape == (1, 4)
+    np.testing.assert_allclose(np.asarray(packed[0, :3]), [3.0, 0.25, -1.0])
+    assert pack_stumps([]).shape == (0, 4)
+
+
+# -------------------------------------------------------------- publish hook
+
+def test_engine_publishes_snapshots_mid_training():
+    reg = EnsembleRegistry()
+    data = _small_data()
+    eng = FederatedBoostEngine(FedBoostConfig(n_clients=4, n_rounds=5,
+                                              seed=0), data, "enhanced")
+    eng.attach_registry(reg, "edge_vision")
+    eng.run()
+    n_versions = reg.version_count("edge_vision")
+    assert n_versions >= 2                      # published more than once
+    snap = reg.latest("edge_vision")
+    assert snap.weak_name == "stump"
+    assert snap.n_learners == len(eng.ensemble.learners)
+    assert snap.train_progress == eng.metrics.learners_merged
+    # snapshot margins agree with the live ensemble on a test row
+    x = np.asarray(data["test"][0][0])
+    from repro.models.weak import get_weak_learner
+    weak = get_weak_learner("stump")
+    live = float(sum(a * float(weak.predict(p, jnp.asarray(x)[None])[0])
+                     for p, a in zip(eng.ensemble.learners,
+                                     eng.ensemble.alphas)))
+    assert _direct_margin(snap, x) == pytest.approx(live, abs=1e-4)
+
+
+def test_fed_mesh_publish_snapshot_slices_live_ensemble():
+    from repro.core import fed_mesh
+    reg = EnsembleRegistry()
+    state = fed_mesh.init_state(FedBoostConfig(n_clients=2), 2, 16, 8,
+                                buffer_cap=4, ens_cap=32,
+                                key=jax.random.key(0))
+    params = jnp.zeros((32, 4)).at[0].set(jnp.asarray([1.0, 0.5, 1.0, 0.0]))
+    state = state._replace(ens_params=params,
+                           ens_alpha=jnp.zeros((32,)).at[0].set(0.8),
+                           ens_count=jnp.asarray(1, jnp.int32),
+                           counter=jnp.asarray(7, jnp.int32))
+    snap = fed_mesh.publish_snapshot(state, reg, "mesh", clock=3.0)
+    assert snap.n_learners == 1                 # only the valid prefix
+    assert snap.train_progress == 7
+    np.testing.assert_allclose(np.asarray(snap.stump_params),
+                               [[1.0, 0.5, 1.0, 0.0]])
+    assert reg.latest("mesh").version == 1
+
+
+# ------------------------------------------------- scheduler construction fix
+
+def test_scheduler_i_init_clipped_at_construction():
+    cfg = SchedulerConfig(i_min=2, i_max=8, i_init=50)
+    host = HostScheduler(cfg)
+    assert host.interval == 8.0                 # clipped before first observe
+    assert float(init_state(cfg).interval) == 8.0
+    low = SchedulerConfig(i_min=2, i_max=8, i_init=0)
+    assert HostScheduler(low).interval == 2.0
+    assert float(init_state(low).interval) == 2.0
+    # fed_mesh state construction stays in lockstep
+    from repro.core import fed_mesh
+    fb = FedBoostConfig(scheduler=cfg)
+    st = fed_mesh.init_state(fb, 2, 8, 4, buffer_cap=2, ens_cap=8,
+                             key=jax.random.key(0))
+    assert float(st.interval) == 8.0
+
+
+# --------------------------------------------------------- adaptive batching
+
+def test_window_grows_when_latency_regresses_and_shrinks_when_stable():
+    cfg = BatchConfig()
+    w = AdaptiveWindow(cfg)
+    w.observe_p99(0.010)                        # first obs: records baseline
+    start = w.units
+    w.observe_p99(0.020)                        # +40% of target -> grow
+    assert w.units > start
+    grown = w.units
+    w.observe_p99(0.020)                        # stable -> drift back down
+    assert w.units < grown
+    # stays within the eq.-1 clip bounds under any observation stream
+    for p99 in (1.0, 1.0, 0.0, 0.0, 5.0, 5.0, 5.0):
+        w.observe_p99(p99)
+        assert cfg.scheduler.i_min <= w.units <= cfg.scheduler.i_max
+
+
+def test_fixed_window_ignores_observations():
+    w = AdaptiveWindow(BatchConfig(adaptive=False, fixed_window_units=6))
+    w.observe_p99(9.9)
+    w.observe_p99(0.0)
+    assert w.units == 6
+    assert w.window_s == pytest.approx(6e-3)
+
+
+def test_admission_control_backpressure():
+    q = MicroBatchQueue(BatchConfig(queue_budget=3))
+    assert all(q.submit("t", [0.0], 0.0) is not None for _ in range(3))
+    assert q.submit("t", [0.0], 0.0) is None    # over budget: rejected
+    assert q.rejected == 1
+    assert q.depth == 3
+    # the rejection reaches the server's caller as accepted=False
+    reg = EnsembleRegistry()
+    _stump_snapshot(reg, T=2, F=3)
+    server = EnsembleServer(
+        reg, BatchConfig(queue_budget=2, max_batch=8, adaptive=False,
+                         fixed_window_units=1000),
+        service_model=lambda n: 1e-4)
+    assert server.submit("t", np.zeros(3), now=0.0)[0] is True
+    assert server.submit("t", np.zeros(3), now=0.0)[0] is True
+    accepted, out = server.submit("t", np.zeros(3), now=0.0)
+    assert accepted is False and out == []
+    assert server.metrics.rejected == 1
+
+
+def test_batch_dispatch_timing_and_size_cap():
+    reg = EnsembleRegistry()
+    snap = _stump_snapshot(reg, T=4, F=3)
+    cfg = BatchConfig(adaptive=False, fixed_window_units=4,
+                      base_window_s=1e-3, max_batch=2)
+    server = EnsembleServer(reg, cfg, service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(0)
+    accepted, out = server.submit("t", rng.randn(3), now=0.0)
+    assert accepted and out == []
+    assert server.advance(0.003) == []          # window (4ms) not expired
+    out = server.advance(0.0041)                # expired -> dispatched
+    assert len(out) == 1
+    # size cap: the submit that fills max_batch dispatches immediately
+    _, out = server.submit("t", rng.randn(3), now=0.01)
+    assert out == []
+    _, out = server.submit("t", rng.randn(3), now=0.01001)
+    assert len(out) == 2
+    assert server.metrics.batch_size_hist[2] == 1
+
+
+def test_served_predictions_match_direct_eval_multi_tenant():
+    reg = EnsembleRegistry()
+    snaps = {name: _stump_snapshot(reg, tenant=name, T=3 + i, F=6,
+                                   seed=i)
+             for i, name in enumerate(["a", "b", "c"])}
+    server = EnsembleServer(reg, BatchConfig(max_batch=32),
+                            service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(7)
+    xs, responses = [], []
+    for i in range(30):
+        tenant = "abc"[i % 3]
+        x = rng.randn(6).astype(np.float32)
+        xs.append((tenant, x))
+        accepted, done = server.submit(tenant, x, now=1e-4 * i)
+        assert accepted
+        responses += done
+    responses += server.drain()
+    assert len(responses) == 30
+    for r in responses:
+        tenant, x = xs[r.rid]
+        want = _direct_margin(snaps[tenant], x)
+        assert r.margin == pytest.approx(want, abs=1e-5)
+        assert r.label == (1.0 if want > 0 else -1.0)
+        assert r.snapshot_version == snaps[tenant].version
+
+
+def test_generic_weak_learner_path():
+    reg = EnsembleRegistry()
+    rng = np.random.RandomState(3)
+    learners = tuple({"w": jnp.asarray(rng.randn(4), jnp.float32),
+                      "b": jnp.asarray(rng.randn(), jnp.float32)}
+                     for _ in range(3))
+    alphas = [0.5, 0.3, 0.9]
+    reg.publish(n := "log", learners, alphas, weak_name="logistic")
+    server = EnsembleServer(reg, BatchConfig(), service_model=lambda n: 1e-4)
+    x = rng.randn(4).astype(np.float32)
+    server.submit(n, x, now=0.0)
+    (resp,) = server.drain()
+    want = sum(a * float(np.tanh(x @ np.asarray(p["w"]) + float(p["b"])))
+               for p, a in zip(learners, alphas))
+    assert resp.margin == pytest.approx(want, abs=1e-5)
+
+
+def test_cold_tenant_abstains_and_metrics_report():
+    reg = EnsembleRegistry()
+    server = EnsembleServer(reg, BatchConfig(), service_model=lambda n: 1e-4)
+    server.submit("unknown", np.zeros(4, np.float32), now=0.0)
+    (resp,) = server.drain()
+    assert resp.margin == 0.0 and resp.snapshot_version == 0
+    rep = server.metrics.report()
+    assert rep["completed"] == 1
+    assert rep["tenants"]["unknown"]["p99_ms"] >= 0.0

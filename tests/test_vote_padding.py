@@ -1,0 +1,122 @@
+"""kernels/ops.py padding contract for the ensemble-vote family, incl. the
+batched serving variants: padded zero-alpha learner rows and padded sample
+columns must not perturb the result vs the kernels/ref.py oracles.
+
+Deliberately hypothesis-free: this coverage must run even in containers
+without the property-testing extras."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _case(key, B, T, N):
+    k = jax.random.split(key, 4)
+    m = jnp.sign(jax.random.normal(k[0], (B, T, N)))
+    a = jax.random.normal(k[1], (B, T))
+    xsel = jax.random.normal(k[2], (B, T, N))
+    thr = jax.random.normal(k[3], (B, T))
+    pol = jnp.sign(jax.random.normal(k[0], (B, T)) + 0.1)
+    return m, a, xsel, thr, pol
+
+
+# --------------------------------------------------- 2-D wrapper (existing)
+
+@pytest.mark.parametrize("T,N", [(1, 1), (7, 100), (128, 512), (130, 513),
+                                 (200, 4096)])
+def test_ensemble_vote_padding_vs_ref(T, N):
+    m, a, *_ = _case(jax.random.key(T * N + 1), 1, T, N)
+    got = ops.ensemble_vote(m[0], a[0])
+    want = ref.ensemble_vote_ref(m[0], a[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ensemble_vote_explicit_zero_padding_invariance():
+    """Manually appending zero-alpha rows and dummy columns must reproduce
+    the unpadded result on the original region."""
+    m, a, *_ = _case(jax.random.key(0), 1, 37, 210)
+    m, a = m[0], a[0]
+    base = np.asarray(ops.ensemble_vote(m, a))
+    mp = jnp.pad(m, ((0, 11), (0, 46)), constant_values=7.7)  # junk columns
+    ap = jnp.pad(a, (0, 11))                                  # zero alphas
+    padded = np.asarray(ops.ensemble_vote(mp, ap))
+    np.testing.assert_allclose(padded[:210], base, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        padded[:210], np.asarray(ref.ensemble_vote_ref(m, a)),
+        rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- batched serving variants
+
+@pytest.mark.parametrize("B,T,N", [(1, 1, 1), (2, 37, 100), (3, 128, 512),
+                                   (4, 129, 513), (2, 200, 1500)])
+def test_ensemble_vote_batched_matches_ref(B, T, N):
+    m, a, *_ = _case(jax.random.key(B * T * N), B, T, N)
+    got = ops.ensemble_vote_batched(m, a)
+    want = ref.ensemble_vote_batched_ref(m, a)
+    assert got.shape == (B, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,T,N", [(1, 5, 40), (3, 64, 640), (2, 77, 333)])
+def test_stump_vote_batched_matches_ref(B, T, N):
+    _, a, xsel, thr, pol = _case(jax.random.key(B + T + N), B, T, N)
+    got = ops.stump_vote_batched(xsel, thr, pol, a)
+    want = ref.stump_vote_batched_ref(xsel, thr, pol, a)
+    assert got.shape == (B, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_explicit_zero_padding_invariance():
+    B, T, N = 2, 23, 77
+    m, a, xsel, thr, pol = _case(jax.random.key(9), B, T, N)
+    base_vote = np.asarray(ops.ensemble_vote_batched(m, a))
+    base_stump = np.asarray(ops.stump_vote_batched(xsel, thr, pol, a))
+    # zero-alpha learner rows with junk margins/thresholds + junk columns
+    mp = jnp.pad(m, ((0, 0), (0, 9), (0, 51)), constant_values=-3.3)
+    ap = jnp.pad(a, ((0, 0), (0, 9)))
+    xp = jnp.pad(xsel, ((0, 0), (0, 9), (0, 51)), constant_values=5.5)
+    tp = jnp.pad(thr, ((0, 0), (0, 9)), constant_values=-2.0)
+    pp = jnp.pad(pol, ((0, 0), (0, 9)), constant_values=-1.0)
+    np.testing.assert_allclose(
+        np.asarray(ops.ensemble_vote_batched(mp, ap))[:, :N], base_vote,
+        rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.stump_vote_batched(xp, tp, pp, ap))[:, :N],
+        base_stump, rtol=1e-6, atol=1e-6)
+
+
+def test_batched_agrees_with_2d_per_slot():
+    """Each slot of the batched vote equals the 2-D kernel on that slot."""
+    B, T, N = 3, 50, 300
+    m, a, *_ = _case(jax.random.key(4), B, T, N)
+    batched = np.asarray(ops.ensemble_vote_batched(m, a))
+    for b in range(B):
+        np.testing.assert_allclose(
+            batched[b], np.asarray(ops.ensemble_vote(m[b], a[b])),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_stump_vote_matches_training_predictor():
+    """The fused kernel reproduces models.weak.predict_stump margins."""
+    from repro.models.weak import predict_stump
+    key = jax.random.key(11)
+    x = jax.random.normal(key, (60, 12))
+    params = [{"feature": jnp.asarray(f % 12, jnp.int32),
+               "threshold": jnp.asarray(0.1 * f - 0.4),
+               "polarity": jnp.asarray(1.0 if f % 2 else -1.0)}
+              for f in range(7)]
+    a = jnp.linspace(0.2, 1.4, 7)
+    want = sum(float(a[i]) * np.asarray(predict_stump(p, x))
+               for i, p in enumerate(params))
+    feat = jnp.asarray([int(p["feature"]) for p in params], jnp.int32)
+    xsel = x[:, feat].T[None]                       # (1, 7, 60)
+    thr = jnp.asarray([[float(p["threshold"]) for p in params]])
+    pol = jnp.asarray([[float(p["polarity"]) for p in params]])
+    got = np.asarray(ops.stump_vote_batched(xsel, thr, pol, a[None]))[0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
