@@ -30,7 +30,7 @@ def main() -> None:
     from benchmarks import (controller_compare, domains, fedavg_compare,
                             kernel_bench, multipod_compare, relevance_filter,
                             roofline, scheduler_ablation, serving_load,
-                            staleness)
+                            shard_gossip, staleness)
 
     # Table 1 (the paper's main quantitative claim)
     tab1 = timed("table1_domains",
@@ -51,6 +51,9 @@ def main() -> None:
     # serving: adaptive micro-batch window vs fixed under closed-loop load
     serve_rows = timed("serving_load",
                        lambda: serving_load.main(quick=args.quick))
+    # sharded registry: gossip convergence + result-cache p99 A/B
+    shard_rows = timed("shard_gossip",
+                       lambda: shard_gossip.main(quick=args.quick))
 
     print("\n--- kernel microbench + harness CSV ---")
     for name, us, derived in kernel_bench.rows():
@@ -66,6 +69,12 @@ def main() -> None:
             f"thr={r['throughput_rps']:.0f}rps;p50={r['p50_ms']:.2f}ms;"
             f"p99={r['p99_ms']:.2f}ms;batch={r['mean_batch']:.1f};"
             f"rej={r['rejected']}"))
+    for r in shard_rows:
+        csv_rows.append((
+            f"shard_{r['mode']}_{r['rate']:.0f}rps", 0.0,
+            f"p99={r['p99_ms']:.2f}ms;hit={r['hit_rate']:.2f};"
+            f"identical={int(r['identical_predictions'])};"
+            f"lag={r['mean_lag_rounds']:.1f}r"))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
 

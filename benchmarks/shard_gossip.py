@@ -1,0 +1,201 @@
+"""Sharded-registry benchmark: gossip convergence lag + result-cache A/B.
+
+Phase 1 — convergence: publish bursts of snapshot versions for every tenant
+into a rendezvous-sharded cluster (each publish lands only on the tenant's
+owning host), then run anti-entropy rounds until quiescence and report the
+convergence lag (rounds / digest exchanges / snapshots pulled) plus a
+check that every host ends on the identical newest version vector.  A
+deliberately injected concurrent-version conflict (two hosts publish the
+same version number for one tenant, as happens across a partition)
+demonstrates the staleness-weighted reconciliation path.
+
+Phase 2 — caching: the same bursty closed-loop trace (hot-keyed: requests
+draw from a small per-tenant pool of feature vectors, the regime dashboards
+and retries create) runs against two sharded serve fleets over the *same*
+converged cluster — one with the per-(tenant, version, x-hash) result
+cache, one without — at three arrival rates.  The simulated service model
+``c0 + c1 * n_kernel`` only charges for requests that reach the vote
+kernel, so cache hits translate directly into shorter batches.  The table
+reports p99 with/without caching, the hit rate, and verifies the two
+fleets returned identical predictions request-for-request.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
+                         ShardedEnsembleServer)
+
+SERVICE_C0 = 1.2e-3
+SERVICE_C1 = 2.0e-4
+
+
+def service_model(n_kernel: int) -> float:
+    return SERVICE_C0 + SERVICE_C1 * n_kernel
+
+
+def synth_ensemble(T: int, F: int, rng) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    params = np.zeros((T, 4), np.float32)
+    params[:, 0] = rng.randint(0, F, size=T)
+    params[:, 1] = rng.randn(T)
+    params[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    alphas = (rng.rand(T) + 0.1).astype(np.float32)
+    return jnp.asarray(params), jnp.asarray(alphas)
+
+
+# --------------------------------------------------------------- phase 1
+def convergence_phase(n_hosts: int, tenants: Sequence[str], versions: int,
+                      F: int, seed: int) -> Tuple[ShardCluster, Dict]:
+    cluster = ShardCluster(n_hosts, GossipConfig(seed=seed))
+    rng = np.random.RandomState(seed)
+    lags: List[int] = []
+    for v in range(versions):
+        for i, t in enumerate(tenants):
+            p, a = synth_ensemble(T=4 + v + i % 3, F=F, rng=rng)
+            cluster.publish_packed(t, p, a, clock=float(v),
+                                   train_progress=8 * (v + 1))
+        lags.append(cluster.run_until_quiescent(now=float(v)))
+
+    # concurrent-version conflict: two replicas race to the same version
+    # number for one tenant (partition scenario); the fresher, further-
+    # trained snapshot must win everywhere via s(dt) weighting
+    t0 = tenants[0]
+    hosts = list(cluster.hosts.values())
+    base = cluster.latest(t0).version
+    p1, a1 = synth_ensemble(6, F, rng)
+    p2, a2 = synth_ensemble(6, F, rng)
+    hosts[0].registry.publish_packed(t0, p1, a1, clock=float(versions),
+                                     train_progress=10)
+    hosts[1].registry.publish_packed(t0, p2, a2, clock=float(versions) + 0.5,
+                                     train_progress=40)
+    conflict_lag = cluster.run_until_quiescent(now=float(versions) + 1.0)
+    winners = {h.registry.latest(t0).fingerprint
+               for h in cluster.hosts.values()}
+    assert len(winners) == 1, "conflict left hosts disagreeing"
+    assert cluster.latest(t0).version == base + 1
+    assert cluster.latest(t0).train_progress == 40, (
+        "staleness-weighted reconciliation picked the wrong snapshot")
+
+    digests = list(cluster.digests().values())
+    newest = {t: max(d.get(t, (0, ""))[0] for d in digests) for t in tenants}
+    all_newest = all(d.get(t, (0, ""))[0] == newest[t]
+                     for d in digests for t in tenants)
+    info = {
+        "mean_lag_rounds": float(np.mean(lags)),
+        "max_lag_rounds": int(np.max(lags)),
+        "conflict_lag_rounds": conflict_lag,
+        "reconciled": cluster.stats.reconciled,
+        "pulled": cluster.stats.pulled,
+        "exchanges": cluster.stats.exchanges,
+        "all_hosts_newest": bool(all_newest and cluster.converged()),
+    }
+    cluster.rebase_clock(0.0)
+    return cluster, info
+
+
+# --------------------------------------------------------------- phase 2
+def gen_arrivals(tenants: Sequence[str], pools: Dict[str, np.ndarray],
+                 rate: float, duration_s: float, seed: int
+                 ) -> List[Tuple[float, str, np.ndarray]]:
+    """Bursty hot-keyed trace: Poisson bursts, feature vectors drawn from
+    the small per-tenant pool with a skewed (geometric-ish) distribution."""
+    rng = np.random.RandomState(seed)
+    out: List[Tuple[float, str, np.ndarray]] = []
+    t = 0.0
+    while t < duration_s:
+        lam = rate * (3.0 if (t % 0.5) < 0.25 else 0.1)
+        t += rng.exponential(1.0 / max(lam, 1e-9))
+        if t >= duration_s:
+            break
+        tenant = tenants[rng.randint(len(tenants))]
+        pool = pools[tenant]
+        # skewed hot keys: floor of an exponential, clipped to the pool
+        idx = min(pool.shape[0] - 1, int(rng.exponential(pool.shape[0] / 8)))
+        out.append((t, tenant, pool[idx]))
+    return out
+
+
+def run_fleet(cluster: ShardCluster, arrivals, cache_capacity: int) -> Dict:
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(cache_capacity=cache_capacity),
+        service_model=service_model)
+    responses = []
+    for t, tenant, x in arrivals:
+        _, done = server.submit(tenant, x, t)
+        responses += done
+    responses += server.drain()
+    rep = server.report()
+    rep["margins"] = {r.rid: r.margin for r in responses}
+    server.close()        # detach cache subscriptions from the shared cluster
+    return rep
+
+
+def main(quick: bool = False, seed: int = 0) -> List[Dict]:
+    n_hosts = 3
+    tenants = ["edge_vision", "iot", "healthcare", "finance"]
+    versions = 3 if quick else 5
+    F = 12
+    duration = 2.0 if quick else 4.0
+    rates = (120.0, 1500.0) if quick else (60.0, 400.0, 1500.0)
+    pool_size = 48
+
+    print("=" * 86)
+    print(f"sharded registry — {n_hosts} hosts, {len(tenants)} tenants, "
+          f"{versions} publish bursts, then cached-vs-uncached serve")
+    print("=" * 86)
+    cluster, conv = convergence_phase(n_hosts, tenants, versions, F, seed)
+    print(f"gossip convergence lag: mean {conv['mean_lag_rounds']:.1f} / "
+          f"max {conv['max_lag_rounds']} rounds per burst; "
+          f"conflict reconciled in {conv['conflict_lag_rounds']} round(s) "
+          f"({conv['reconciled']} reconciliations, {conv['pulled']} pulls, "
+          f"{conv['exchanges']} exchanges)")
+    print(f"every host on the newest version vector: "
+          f"{conv['all_hosts_newest']}")
+
+    rng = np.random.RandomState(seed + 1)
+    pools = {t: rng.randn(pool_size, F).astype(np.float32) for t in tenants}
+
+    hdr = (f"{'rate':>6} {'mode':<9} {'done':>6} {'p50 ms':>7} {'p99 ms':>7} "
+           f"{'batch':>6} {'hit rate':>9}")
+    print(hdr)
+    print("-" * 86)
+    rows: List[Dict] = []
+    wins = []
+    for rate in rates:
+        arrivals = gen_arrivals(tenants, pools, rate, duration, seed)
+        uncached = run_fleet(cluster, arrivals, cache_capacity=0)
+        cached = run_fleet(cluster, arrivals, cache_capacity=65536)
+        identical = (uncached["margins"] == cached["margins"]
+                     and len(cached["margins"]) == len(arrivals))
+        for mode, rep in (("uncached", uncached), ("cached", cached)):
+            print(f"{rate:>6.0f} {mode:<9} {rep['completed']:>6} "
+                  f"{rep['p50_ms']:>7.2f} {rep['p99_ms']:>7.2f} "
+                  f"{rep['mean_batch']:>6.1f} "
+                  f"{rep['cache']['hit_rate']:>9.1%}", flush=True)
+            rows.append({
+                "rate": rate, "mode": mode, "completed": rep["completed"],
+                "p50_ms": rep["p50_ms"], "p99_ms": rep["p99_ms"],
+                "hit_rate": rep["cache"]["hit_rate"],
+                "identical_predictions": identical,
+                "mean_lag_rounds": conv["mean_lag_rounds"],
+            })
+        won = (identical and cached["p99_ms"] < uncached["p99_ms"]
+               and cached["completed"] >= 0.98 * uncached["completed"])
+        if won:
+            wins.append(rate)
+        print(f"       identical predictions: {identical}   "
+              f"cached p99 {'beats' if won else 'does not beat'} uncached")
+    print("-" * 86)
+    print(f"cached serve beats uncached p99 at {len(wins)}/{len(rates)} "
+          f"rates: {', '.join(f'{w:.0f} rps' for w in wins) or '—'}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -62,6 +62,7 @@ class RunMetrics:
     learners_merged: int = 0
     rounds_to_target: Optional[int] = None
     time_to_target: Optional[float] = None
+    snapshots_published: int = 0
     val_error_curve: List[Tuple[float, int, float]] = field(default_factory=list)
     final_val_error: float = 1.0
     final_test_error: float = 1.0
@@ -137,25 +138,36 @@ class FederatedBoostEngine:
     # ------------------------------------------------------- serving hook
     def attach_registry(self, registry, tenant: str,
                         publish_every: int = 1) -> None:
-        """Publish an immutable ensemble snapshot into a serving
-        :class:`~repro.serve.registry.EnsembleRegistry` after every
+        """Publish an immutable ensemble snapshot after every
         ``publish_every``-th synchronization, stamped with the simulated
-        clock — serving hot-swaps versions while training keeps running."""
+        clock — serving hot-swaps versions while training keeps running.
+
+        ``registry`` is either a single-host
+        :class:`~repro.serve.registry.EnsembleRegistry` or a sharded
+        :class:`~repro.serve.shard.ShardCluster`: the cluster exposes the
+        same ``publish`` surface and routes every snapshot to the tenant's
+        rendezvous-owning shard, whose subscribers (result-cache
+        invalidation, gossip digests) observe it immediately."""
         assert publish_every >= 1
         self._registry = registry
         self._tenant = tenant
         self._publish_every = publish_every
         self._syncs_since_publish = 0
 
-    def publish(self, clock: float) -> None:
-        """The publish() hook: snapshot the current global ensemble."""
+    def publish(self, clock: float):
+        """The publish() hook: snapshot the current global ensemble into
+        the attached registry/cluster (the owning shard is notified via
+        the routed publish); returns the published snapshot, or None when
+        there is nothing to publish yet."""
         if self._registry is None or not self.ensemble.learners:
-            return
-        self._registry.publish(
+            return None
+        snap = self._registry.publish(
             self._tenant, list(self.ensemble.learners),
             list(self.ensemble.alphas), clock=float(clock),
             train_progress=self.metrics.learners_merged,
             weak_name=self.weak.name)
+        self.metrics.snapshots_published += 1
+        return snap
 
     def _maybe_publish(self, clock: float) -> None:
         if self._registry is None:

@@ -260,7 +260,11 @@ def publish_snapshot(state: FedMeshState, registry, tenant: str, *,
                      clock: float = 0.0):
     """Host-side publish() hook: snapshot the replicated ensemble arrays of
     a (possibly mid-training) :class:`FedMeshState` into a serving
-    :class:`~repro.serve.registry.EnsembleRegistry`.
+    :class:`~repro.serve.registry.EnsembleRegistry` — or into a sharded
+    :class:`~repro.serve.shard.ShardCluster`, whose ``publish_packed``
+    routes the snapshot to the tenant's rendezvous-owning shard so that
+    host's subscribers (cache invalidation, gossip digest) see the new
+    version before any anti-entropy round runs.
 
     ``ens_params`` is already the packed ``(T, 4)`` stump wire format, so
     this is a device_get + slice — the compiled train step never blocks on

@@ -1,13 +1,18 @@
 """Ensemble serving driver: train federated boosted ensembles on paper
-domains, publish snapshots into the registry mid-training, then serve a
-bursty closed-loop workload through the adaptive micro-batcher.
+domains, publish snapshots into a sharded registry cluster mid-training,
+gossip them across hosts, then serve a bursty closed-loop workload through
+the adaptive micro-batcher with per-snapshot result caching.
 
     PYTHONPATH=src python -m repro.launch.serve_ensemble \
-        --domains edge_vision iot --rounds 12 --rate 400 --duration 3
+        --domains edge_vision iot --rounds 12 --rate 400 --duration 3 \
+        --hosts 3 --cache 4096 --kill-owner
 
-Prints per-tenant published versions, then the serving report: throughput,
-p50/p99 latency, batch-size mix, snapshot staleness.  ``--fixed-window N``
-disables adaptation for an A/B against a fixed window of N milliseconds.
+Prints per-tenant published versions and gossip convergence, then the
+serving report: throughput, p50/p99 latency, batch-size mix, snapshot
+staleness, per-host traffic, and cache hit rate.  ``--fixed-window N``
+disables window adaptation for an A/B against a fixed window of N
+milliseconds; ``--kill-owner`` marks the first tenant's owning host down
+halfway through to exercise rendezvous failover onto a gossiped replica.
 """
 from __future__ import annotations
 
@@ -19,11 +24,11 @@ import numpy as np
 from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
-from repro.serve import BatchConfig, EnsembleRegistry, EnsembleServer
+from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
+                         ShardedEnsembleServer)
 
 
-def train_tenants(registry: EnsembleRegistry, domains, rounds: int,
-                  seed: int):
+def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int):
     pools = {}
     for name in domains:
         dom = dataclasses.replace(DOMAINS[name],
@@ -35,34 +40,48 @@ def train_tenants(registry: EnsembleRegistry, domains, rounds: int,
                              dropout_prob=dom.dropout_prob, seed=seed,
                              balanced_init=dom.label_imbalance < 0.4)
         eng = FederatedBoostEngine(cfg, data, "enhanced")
-        eng.attach_registry(registry, name)
+        eng.attach_registry(cluster, name)    # publishes route to the owner
         metrics = eng.run()
         pools[name] = np.asarray(data["test"][0], np.float32)
-        snap = registry.latest(name)
+        snap = cluster.latest(name)
         print(f"trained {name:<12} val_err={metrics.final_val_error:.3f} "
-              f"-> {registry.version_count(name)} snapshots published "
-              f"(latest v{snap.version}, {snap.n_learners} learners)")
-    registry.rebase_clock(0.0)
+              f"-> {cluster.version_count(name)} snapshots published "
+              f"(latest v{snap.version}, {snap.n_learners} learners, "
+              f"owner {cluster.owner(name)})")
+    rounds_taken = cluster.run_until_quiescent(now=0.0)
+    print(f"gossip converged in {rounds_taken} anti-entropy round(s): "
+          f"{cluster.stats.pulled} snapshots pulled, "
+          f"{cluster.stats.reconciled} conflicts reconciled")
+    cluster.rebase_clock(0.0)
     return pools
 
 
-def serve(registry: EnsembleRegistry, pools, rate: float, duration: float,
-          seed: int, fixed_window_ms: float = 0.0):
+def serve(cluster: ShardCluster, pools, rate: float, duration: float,
+          seed: int, fixed_window_ms: float = 0.0, cache_capacity: int = 4096,
+          kill_owner: bool = False):
     cfg = (BatchConfig(adaptive=False,
-                       fixed_window_units=max(1, int(fixed_window_ms)))
-           if fixed_window_ms > 0 else BatchConfig())
-    server = EnsembleServer(
-        registry, cfg,
-        service_model=lambda n: 1.2e-3 + 2.0e-4 * n)
+                       fixed_window_units=max(1, int(fixed_window_ms)),
+                       cache_capacity=cache_capacity)
+           if fixed_window_ms > 0
+           else BatchConfig(cache_capacity=cache_capacity))
+    server = ShardedEnsembleServer(
+        cluster, cfg, service_model=lambda n: 1.2e-3 + 2.0e-4 * n)
     tenants = sorted(pools)
+    victim = cluster.owner(tenants[0]) if kill_owner else None
     rng = np.random.RandomState(seed)
-    t = 0.0
+    t, killed = 0.0, False
     while t < duration:
         # bursty arrivals: 3x rate on-phase, 0.1x off-phase, 0.5 s period
         lam = rate * (3.0 if (t % 0.5) < 0.25 else 0.1)
         t += rng.exponential(1.0 / max(lam, 1e-9))
         if t >= duration:
             break
+        if victim is not None and not killed and t >= 0.5 * duration:
+            cluster.mark_down(victim)
+            killed = True
+            print(f"  t={t:.2f}s marked {victim} down -> "
+                  f"{tenants[0]} now served by "
+                  f"{cluster.route(tenants[0]).host_id} (gossiped replica)")
         tenant = tenants[rng.randint(len(tenants))]
         pool = pools[tenant]
         server.submit(tenant, pool[rng.randint(pool.shape[0])], t)
@@ -78,25 +97,41 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=400.0)
     ap.add_argument("--duration", type=float, default=3.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=3,
+                    help="serving hosts in the sharded cluster")
+    ap.add_argument("--cache", type=int, default=4096,
+                    help="result-cache entries per host (0 disables)")
+    ap.add_argument("--kill-owner", action="store_true",
+                    help="mark the first tenant's owner down mid-serve "
+                         "(failover demo)")
     ap.add_argument("--fixed-window", type=float, default=0.0,
                     help="fixed batch window in ms (0 = adaptive)")
     args = ap.parse_args()
 
-    registry = EnsembleRegistry()
-    pools = train_tenants(registry, args.domains, args.rounds, args.seed)
-    server = serve(registry, pools, args.rate, args.duration, args.seed,
-                   fixed_window_ms=args.fixed_window)
+    cluster = ShardCluster(args.hosts, GossipConfig(seed=args.seed))
+    pools = train_tenants(cluster, args.domains, args.rounds, args.seed)
+    server = serve(cluster, pools, args.rate, args.duration, args.seed,
+                   fixed_window_ms=args.fixed_window,
+                   cache_capacity=args.cache, kill_owner=args.kill_owner)
 
-    rep = server.metrics.report()
+    rep = server.report()
     mode = ("adaptive" if args.fixed_window <= 0
             else f"fixed {args.fixed_window:.0f}ms")
-    print(f"\nserving [{mode} window] nominal {args.rate:.0f} rps, "
-          f"{args.duration:.1f}s bursty closed loop")
+    print(f"\nserving [{mode} window, {args.hosts} hosts] nominal "
+          f"{args.rate:.0f} rps, {args.duration:.1f}s bursty closed loop")
     print(f"  completed {rep['completed']}  rejected {rep['rejected']}  "
           f"throughput {rep['throughput_rps']:.0f} rps")
     print(f"  latency p50 {rep['p50_ms']:.2f} ms  p99 {rep['p99_ms']:.2f} ms  "
           f"mean batch {rep['mean_batch']:.1f}  "
           f"peak queue {rep['queue_depth_peak']}")
+    cache = rep["cache"]
+    print(f"  cache hit rate {cache['hit_rate']:.1%} "
+          f"({cache['hits']} hits, {cache['fills']} fills, "
+          f"{cache['invalidated']} invalidated)")
+    for hid, h in rep["per_host"].items():
+        up = "up" if server.cluster.hosts[hid].up else "DOWN"
+        print(f"  host {hid:<8} [{up:>4}] served {h['completed']:>6} "
+              f"p99 {h['p99_ms']:>6.2f} ms  batches {h['n_batches']}")
     for name, t in rep["tenants"].items():
         print(f"  tenant {name:<12} served {t['completed']:>5} "
               f"p99 {t['p99_ms']:>6.2f} ms  snapshot v{t['snapshot_version']} "

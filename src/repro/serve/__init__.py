@@ -2,11 +2,20 @@
 # immutable versioned snapshots into a multi-tenant registry; an adaptive
 # micro-batcher (the paper's eq.-1 controller on a latency signal) packs
 # request traffic across tenants into padded blocks for the batched Pallas
-# ensemble-vote kernels.
+# ensemble-vote kernels.  The sharded layer partitions tenants across
+# hosts by rendezvous hashing and replicates snapshots with anti-entropy
+# gossip; the result cache memoizes margins per (tenant, version, x-hash).
 from repro.serve.registry import (  # noqa: F401
     EnsembleRegistry, EnsembleSnapshot, pack_stumps)
 from repro.serve.batching import (  # noqa: F401
     AdaptiveWindow, BatchConfig, MicroBatchQueue, Request, SERVE_SCHEDULER)
-from repro.serve.engine import BatchEvaluator, Response  # noqa: F401
+from repro.serve.cache import (  # noqa: F401
+    CacheStats, ResultCache, feature_hash)
+from repro.serve.engine import (  # noqa: F401
+    BatchEvaluator, EvalStats, Response)
 from repro.serve.metrics import ServeMetrics, TenantMetrics  # noqa: F401
-from repro.serve.service import EnsembleServer  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    EnsembleServer, ShardedEnsembleServer)
+from repro.serve.shard import (  # noqa: F401
+    GossipConfig, GossipStats, ShardCluster, ShardHost,
+    rendezvous_owner, rendezvous_rank, staleness_weight)

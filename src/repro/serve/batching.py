@@ -26,7 +26,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from typing import Deque, Iterator, List, Optional
 
 import jax.numpy as jnp
 
@@ -52,6 +52,7 @@ class BatchConfig:
     adapt_every: int = 32         # completions per controller observation
     adaptive: bool = True         # False -> fixed window (ablation baseline)
     fixed_window_units: int = 8   # window when adaptive=False
+    cache_capacity: int = 0       # per-snapshot result-cache entries (0 = off)
     scheduler: SchedulerConfig = field(default_factory=lambda: SERVE_SCHEDULER)
 
 
@@ -99,9 +100,14 @@ class AdaptiveWindow:
 class MicroBatchQueue:
     """FIFO request queue with budget-based admission control."""
 
-    def __init__(self, cfg: BatchConfig):
+    def __init__(self, cfg: BatchConfig,
+                 rid_counter: Optional[Iterator[int]] = None):
+        """``rid_counter`` lets several queues share one id space — the
+        sharded fleet passes a common counter so a response's rid is unique
+        across hosts, not just within one."""
         self.cfg = cfg
         self._q: Deque[Request] = deque()
+        self._rids = rid_counter
         self._next_rid = 0
         self.rejected = 0
 
@@ -117,9 +123,13 @@ class MicroBatchQueue:
         if len(self._q) >= self.cfg.queue_budget:
             self.rejected += 1
             return None
-        req = Request(rid=self._next_rid, tenant=tenant,
+        if self._rids is not None:
+            rid = next(self._rids)
+        else:
+            rid = self._next_rid
+            self._next_rid += 1
+        req = Request(rid=rid, tenant=tenant,
                       x=jnp.asarray(x), t_submit=float(now))
-        self._next_rid += 1
         self._q.append(req)
         return req
 

@@ -26,6 +26,7 @@ import numpy as np
 from repro.kernels import ops as kops
 from repro.models.weak import get_weak_learner
 from repro.serve.batching import Request
+from repro.serve.cache import ResultCache, feature_hash
 from repro.serve.registry import EnsembleRegistry, EnsembleSnapshot
 
 
@@ -39,13 +40,33 @@ class Response:
     t_submit: float
 
 
+@dataclass(frozen=True)
+class EvalStats:
+    """Per-batch split of where each request's margin came from."""
+    kernel_requests: int = 0    # packed into the Pallas vote kernels
+    cached_requests: int = 0    # answered from the result cache
+    abstained_requests: int = 0  # cold tenants (no snapshot yet)
+    deduped_requests: int = 0   # in-batch duplicates of a kernel request
+
+
 class BatchEvaluator:
-    """Evaluates micro-batches against the registry's latest snapshots."""
+    """Evaluates micro-batches against the registry's latest snapshots.
+
+    With a :class:`ResultCache` attached, each request is first looked up
+    under ``(tenant, snapshot version, feature hash)`` *before* packing —
+    hits skip the kernel entirely and misses fill the cache after the vote,
+    so repeated hot feature vectors cost one hash instead of one kernel
+    slot.  ``last_eval`` reports the kernel/cached/abstained split of the
+    most recent batch (the dispatcher's simulated service-time input).
+    """
 
     def __init__(self, registry: EnsembleRegistry, *,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 cache: Optional[ResultCache] = None):
         self.registry = registry
         self.interpret = interpret
+        self.cache = cache
+        self.last_eval = EvalStats()
         self._predict_cache: Dict[str, object] = {}
 
     def evaluate(self, batch: Sequence[Request]) -> List[Response]:
@@ -57,21 +78,52 @@ class BatchEvaluator:
         versions: Dict[str, int] = {}           # tenant -> snapshot served
         stump_group: List[Tuple[EnsembleSnapshot, List[Request]]] = []
         generic_group: List[Tuple[EnsembleSnapshot, List[Request]]] = []
+        fills: List[Tuple[str, int, bytes, int]] = []  # cache misses to fill
+        dupes: List[Tuple[int, int]] = []       # (dup rid, evaluated rid)
+        n_cached = n_abstained = n_deduped = 0
         for tenant, reqs in by_tenant.items():
             snap = self.registry.latest(tenant)
             if snap is None or snap.n_learners == 0:
                 versions[tenant] = 0
+                n_abstained += len(reqs)
                 for r in reqs:                  # cold tenant: abstain at 0
                     margins[r.rid] = 0.0
                 continue
             versions[tenant] = snap.version
-            (stump_group if snap.weak_name == "stump"
-             else generic_group).append((snap, reqs))
+            if self.cache is not None:          # consult before packing
+                pending: List[Request] = []
+                first_rid: Dict[bytes, int] = {}
+                for r in reqs:
+                    xh = feature_hash(r.x)
+                    hit = self.cache.lookup(tenant, snap.version, xh)
+                    if hit is not None:
+                        margins[r.rid] = hit
+                        n_cached += 1
+                    elif xh in first_rid:       # in-batch duplicate: one
+                        dupes.append((r.rid, first_rid[xh]))  # kernel slot
+                        n_deduped += 1
+                    else:
+                        first_rid[xh] = r.rid
+                        fills.append((tenant, snap.version, xh, r.rid))
+                        pending.append(r)
+                reqs = pending
+            if reqs:
+                (stump_group if snap.weak_name == "stump"
+                 else generic_group).append((snap, reqs))
 
         if stump_group:
             self._eval_stumps(stump_group, margins)
         if generic_group:
             self._eval_generic(generic_group, margins)
+        for rid, src_rid in dupes:              # fan the one margin out
+            margins[rid] = margins[src_rid]
+        if self.cache is not None:              # fill after the vote
+            for tenant, version, xh, rid in fills:
+                self.cache.put(tenant, version, xh, margins[rid])
+        self.last_eval = EvalStats(
+            kernel_requests=len(batch) - n_cached - n_abstained - n_deduped,
+            cached_requests=n_cached, abstained_requests=n_abstained,
+            deduped_requests=n_deduped)
 
         return [Response(
             rid=r.rid, tenant=r.tenant, margin=margins[r.rid],

@@ -15,11 +15,15 @@ through the per-learner-predict + ``ensemble_vote_batched`` path instead.
 """
 from __future__ import annotations
 
+import functools
+import hashlib
 import threading
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -37,6 +41,25 @@ class EnsembleSnapshot:
     @property
     def n_learners(self) -> int:
         return int(self.alphas.shape[0])
+
+    @functools.cached_property
+    def fingerprint(self) -> str:
+        """Content digest (version/clock excluded): two concurrently gossiped
+        snapshots claiming the same version number are 'the same' iff their
+        fingerprints match — the shard reconciler compares these.  Cached
+        per instance (cached_property writes straight into ``__dict__``,
+        which the frozen dataclass allows) — gossip digests re-read it
+        every exchange and the payload hash isn't free."""
+        h = hashlib.blake2b(digest_size=12)
+        h.update(self.weak_name.encode())
+        h.update(np.int64(self.train_progress).tobytes())
+        h.update(np.ascontiguousarray(self.alphas, np.float32).tobytes())
+        if self.stump_params is not None:
+            h.update(np.ascontiguousarray(self.stump_params,
+                                          np.float32).tobytes())
+        for leaf in jax.tree_util.tree_leaves(self.learners):
+            h.update(np.ascontiguousarray(leaf).tobytes())
+        return h.hexdigest()
 
 
 def pack_stumps(learners: Sequence[Dict]) -> jnp.ndarray:
@@ -64,6 +87,30 @@ class EnsembleRegistry:
         self._history = history
         self._lock = threading.Lock()
         self._snaps: Dict[str, List[EnsembleSnapshot]] = {}
+        self._subscribers: List[Callable[[EnsembleSnapshot], None]] = []
+
+    # ---------------------------------------------------------- subscribers
+    def subscribe(self, fn: Callable[[EnsembleSnapshot], None]
+                  ) -> Callable[[], None]:
+        """Register ``fn(snapshot)`` to run after every snapshot that becomes
+        a tenant's latest — local publishes, gossip ingests, and concurrent-
+        version replacements alike.  Callbacks run outside the registry lock
+        (a subscriber may read the registry), in subscription order; the
+        result cache invalidates through exactly this hook.  Returns a
+        zero-arg unsubscribe handle (idempotent) so short-lived servers
+        don't pin their caches on a long-lived registry."""
+        self._subscribers.append(fn)
+
+        def unsubscribe() -> None:
+            try:
+                self._subscribers.remove(fn)
+            except ValueError:
+                pass
+        return unsubscribe
+
+    def _notify(self, snap: EnsembleSnapshot) -> None:
+        for fn in self._subscribers:
+            fn(snap)
 
     # ------------------------------------------------------------- publish
     def publish(self, tenant: str, learners: Sequence, alphas: Sequence[float],
@@ -71,7 +118,12 @@ class EnsembleRegistry:
                 weak_name: str = "stump") -> EnsembleSnapshot:
         """Publish from a list of weak-learner params + vote weights (the
         :class:`Ensemble` representation the async engine grows)."""
+        learners = list(learners)
         alphas = jnp.asarray(list(alphas), jnp.float32)
+        if len(learners) != alphas.shape[0]:
+            raise ValueError(
+                f"publish({tenant!r}): {len(learners)} learners vs "
+                f"{alphas.shape[0]} alphas — refusing a mismatched snapshot")
         if weak_name == "stump":
             return self.publish_packed(
                 tenant, pack_stumps(list(learners)), alphas, clock=clock,
@@ -101,6 +153,49 @@ class EnsembleRegistry:
             snap = replace(snap, version=(hist[-1].version + 1 if hist else 1))
             hist.append(snap)
             del hist[:-self._history]
+        self._notify(snap)
+        return snap
+
+    # ---------------------------------------------------- gossip interface
+    def digest(self) -> Dict[str, Tuple[int, str]]:
+        """Version vector: tenant -> (latest version, content fingerprint).
+        Anti-entropy peers exchange digests and pull only what they miss."""
+        with self._lock:
+            latest = {t: h[-1] for t, h in self._snaps.items() if h}
+        return {t: (s.version, s.fingerprint) for t, s in latest.items()}
+
+    def ingest(self, snap: EnsembleSnapshot) -> bool:
+        """Adopt a snapshot gossiped from another host, *keeping its version
+        stamp* (unlike ``publish``, which assigns the next local version).
+        Out-of-date or already-held versions are dropped; returns True iff
+        the registry changed.  Subscribers fire only when the snapshot
+        became the tenant's new latest."""
+        with self._lock:
+            hist = self._snaps.setdefault(snap.tenant, [])
+            if any(s.version == snap.version for s in hist):
+                return False
+            if hist and snap.version < hist[-1].version - self._history + 1:
+                return False            # older than the retained window
+            hist.append(snap)
+            hist.sort(key=lambda s: s.version)
+            del hist[:-self._history]
+            became_latest = hist[-1] is snap
+        if became_latest:
+            self._notify(snap)
+        return True
+
+    def replace_latest(self, tenant: str,
+                       snap: EnsembleSnapshot) -> EnsembleSnapshot:
+        """Swap the tenant's latest snapshot for a concurrent same-version
+        snapshot the gossip reconciler ranked higher.  The version number
+        must match the current latest (reconciliation never moves the
+        version vector backwards)."""
+        with self._lock:
+            hist = self._snaps.get(tenant)
+            assert hist and hist[-1].version == snap.version, (
+                tenant, snap.version)
+            hist[-1] = snap
+        self._notify(snap)
         return snap
 
     # --------------------------------------------------------------- reads
@@ -119,6 +214,12 @@ class EnsembleRegistry:
                     return s
         return None
 
+    def history(self, tenant: str) -> List[EnsembleSnapshot]:
+        """The retained snapshot window, oldest first (gossip peers pull
+        whole windows so cross-host ``get(tenant, version)`` works too)."""
+        with self._lock:
+            return list(self._snaps.get(tenant, ()))
+
     def tenants(self) -> List[str]:
         with self._lock:
             return sorted(self._snaps)
@@ -135,11 +236,21 @@ class EnsembleRegistry:
         return max(0.0, float(now) - s.published_at) if s else float("inf")
 
     def rebase_clock(self, clock: float = 0.0) -> None:
-        """Re-stamp every latest snapshot's publish time onto a new clock
-        epoch.  Training simulators and serving load generators run separate
-        simulated clocks; rebasing at the hand-off keeps the staleness metric
+        """Re-stamp publish times onto a new clock epoch.  Training
+        simulators and serving load generators run separate simulated
+        clocks; rebasing at the hand-off keeps the staleness metric
         meaningful without mutating any published snapshot (new frozen
-        snapshots are swapped in)."""
+        snapshots are swapped in).
+
+        Every history entry shifts by the same per-tenant delta that lands
+        the latest snapshot exactly at ``clock``, so relative snapshot ages
+        — and therefore ``get(tenant, version)``-based staleness math —
+        stay consistent across clock epochs instead of only the latest
+        entry being moved."""
         with self._lock:
             for tenant, hist in self._snaps.items():
-                hist[-1] = replace(hist[-1], published_at=float(clock))
+                if not hist:
+                    continue
+                delta = float(clock) - hist[-1].published_at
+                hist[:] = [replace(s, published_at=s.published_at + delta)
+                           for s in hist]

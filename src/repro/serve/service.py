@@ -17,15 +17,26 @@ Timestamps are supplied by the caller, so the same server runs under a real
 wall clock (the `serve_ensemble` launch driver) and under the simulated
 clock of the closed-loop load benchmark.  Service time per dispatched batch
 is either measured (wall-clock mode, default) or produced by an injected
-``service_model(batch_size) -> seconds`` (simulation mode).
+``service_model(n_kernel) -> seconds`` (simulation mode), where
+``n_kernel`` counts the requests that actually reached the vote kernels —
+result-cache hits, in-batch duplicates of a pending kernel request, and
+cold-tenant abstains cost no kernel time, so a warm cache shrinks the
+modeled service time exactly as it shrinks the measured one.
+
+A per-snapshot :class:`~repro.serve.cache.ResultCache` is enabled by
+``BatchConfig.cache_capacity > 0`` (or injected via ``cache=``); the server
+attaches its invalidation hook to the registry so snapshots landing by
+publish *or* gossip sweep that tenant's stale entries.
 """
 from __future__ import annotations
 
+import itertools
 import math
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Iterator, List, Optional, Tuple
 
 from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
+from repro.serve.cache import ResultCache
 from repro.serve.engine import BatchEvaluator, Response
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import EnsembleRegistry
@@ -36,12 +47,20 @@ class EnsembleServer:
                  cfg: Optional[BatchConfig] = None, *,
                  service_model: Optional[Callable[[int], float]] = None,
                  metrics: Optional[ServeMetrics] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 cache: Optional[ResultCache] = None,
+                 rid_counter: Optional[Iterator[int]] = None):
         self.cfg = cfg or BatchConfig()
         self.registry = registry
-        self.queue = MicroBatchQueue(self.cfg)
+        self.queue = MicroBatchQueue(self.cfg, rid_counter)
         self.window = AdaptiveWindow(self.cfg)
-        self.evaluator = BatchEvaluator(registry, interpret=interpret)
+        if cache is None and self.cfg.cache_capacity > 0:
+            cache = ResultCache(self.cfg.cache_capacity)
+        self.cache = cache
+        self._unsubscribe = (cache.attach(registry) if cache is not None
+                             else None)
+        self.evaluator = BatchEvaluator(registry, interpret=interpret,
+                                        cache=cache)
         self.metrics = metrics or ServeMetrics()
         self.service_model = service_model
         self._busy_until = -math.inf     # single server: one batch in flight
@@ -87,11 +106,19 @@ class EnsembleServer:
         the server) free up, regardless of the caller's clock."""
         return self.advance(math.inf)
 
+    def close(self) -> None:
+        """Detach this server's cache-invalidation subscription so a
+        retired server doesn't stay pinned on a long-lived registry."""
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
     def _dispatch(self, at: float) -> List[Response]:
         batch = self.queue.pop_batch()
         if self.service_model is not None:
             responses = self.evaluator.evaluate(batch)
-            service_s = float(self.service_model(len(batch)))
+            service_s = float(self.service_model(
+                self.evaluator.last_eval.kernel_requests))
         else:
             t0 = time.perf_counter()
             responses = self.evaluator.evaluate(batch)
@@ -107,3 +134,105 @@ class EnsembleServer:
                 staleness_s=self.registry.staleness(r.tenant, finish),
                 version=r.snapshot_version)
         return responses
+
+
+class ShardedEnsembleServer:
+    """Multi-host serving front door over a :class:`ShardCluster`.
+
+    One :class:`EnsembleServer` (queue + window + evaluator + cache) runs
+    per cluster host against that host's registry replica.  ``submit``
+    routes each request to the tenant's rendezvous owner among *up* hosts;
+    when the owner is marked down, routing falls over to the next host in
+    rendezvous rank, which serves the tenant from its gossiped replica —
+    the whole point of anti-entropy dissemination.  Requests are rejected
+    (``accepted=False``) only when every host is down or the routed host's
+    admission control pushes back.
+    """
+
+    def __init__(self, cluster, cfg: Optional[BatchConfig] = None, *,
+                 service_model: Optional[Callable[[int], float]] = None,
+                 interpret: Optional[bool] = None):
+        self.cluster = cluster
+        self.cfg = cfg or BatchConfig()
+        rids = itertools.count()         # one id space across the fleet
+        self.servers: dict = {
+            hid: EnsembleServer(host.registry, self.cfg,
+                                service_model=service_model,
+                                interpret=interpret, rid_counter=rids)
+            for hid, host in cluster.hosts.items()}
+
+    def server_for(self, tenant: str) -> Optional[EnsembleServer]:
+        host = self.cluster.route(tenant)
+        return self.servers[host.host_id] if host else None
+
+    def submit(self, tenant: str, x, now: float
+               ) -> Tuple[bool, List[Response]]:
+        server = self.server_for(tenant)
+        if server is None:                     # total outage: shed the load
+            return False, []
+        return server.submit(tenant, x, now)
+
+    def advance(self, now: float) -> List[Response]:
+        out: List[Response] = []
+        for s in self.servers.values():
+            out.extend(s.advance(now))
+        return out
+
+    def drain(self) -> List[Response]:
+        out: List[Response] = []
+        for s in self.servers.values():
+            out.extend(s.drain())
+        return out
+
+    def close(self) -> None:
+        for s in self.servers.values():
+            s.close()
+
+    # -------------------------------------------------------------- report
+    def cache_stats(self) -> dict:
+        """Fleet-wide result-cache counters summed over hosts."""
+        agg = {"hits": 0, "misses": 0, "fills": 0, "invalidated": 0,
+               "evicted": 0}
+        for s in self.servers.values():
+            if s.cache is None:
+                continue
+            st = s.cache.stats
+            agg["hits"] += st.hits
+            agg["misses"] += st.misses
+            agg["fills"] += st.fills
+            agg["invalidated"] += st.invalidated
+            agg["evicted"] += st.evicted
+        n = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = agg["hits"] / n if n else 0.0
+        return agg
+
+    def report(self) -> dict:
+        """Merged fleet report plus the per-host breakdown."""
+        merged = ServeMetrics()
+        per_host = {}
+        for hid, s in self.servers.items():
+            rep = s.metrics.report()
+            per_host[hid] = rep
+            for name, t in s.metrics.tenants.items():
+                mt = merged.tenant(name)
+                mt.completed += t.completed
+                mt.rejected += t.rejected
+                mt.latencies.extend(t.latencies)
+                mt.staleness_sum += t.staleness_sum
+                mt.last_version = max(mt.last_version, t.last_version)
+            merged.batch_size_hist.update(s.metrics.batch_size_hist)
+            merged.window_units_hist.update(s.metrics.window_units_hist)
+            merged.n_batches += s.metrics.n_batches
+            merged.queue_depth_peak = max(merged.queue_depth_peak,
+                                          s.metrics.queue_depth_peak)
+            t0, t1 = s.metrics.first_submit_t, s.metrics.last_finish_t
+            if t0 is not None:
+                merged.first_submit_t = (t0 if merged.first_submit_t is None
+                                         else min(merged.first_submit_t, t0))
+            if t1 is not None:
+                merged.last_finish_t = (t1 if merged.last_finish_t is None
+                                        else max(merged.last_finish_t, t1))
+        rep = merged.report()
+        rep["per_host"] = per_host
+        rep["cache"] = self.cache_stats()
+        return rep

@@ -1,0 +1,168 @@
+"""Property-based suite for the snapshot registry and the sharded gossip
+layer: version monotonicity, bounded history, atomic latest() under
+concurrent publishers, and gossip convergence under arbitrary publish and
+digest-exchange orders."""
+import threading
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; CI installs requirements-dev.txt
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import EnsembleRegistry, GossipConfig, ShardCluster
+
+TENANTS = ("alpha", "beta", "gamma")
+
+
+def _packed(T, seed, F=6):
+    rng = np.random.RandomState(seed)
+    p = np.zeros((T, 4), np.float32)
+    p[:, 0] = rng.randint(0, F, size=T)
+    p[:, 1] = rng.randn(T)
+    p[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    return jnp.asarray(p), jnp.asarray((rng.rand(T) + 0.1).astype(np.float32))
+
+
+publish_events = st.lists(
+    st.tuples(st.sampled_from(TENANTS),        # tenant
+              st.integers(1, 5),               # ensemble size
+              st.integers(0, 99)),             # content seed
+    min_size=1, max_size=24)
+
+
+# ------------------------------------------------------------ monotonicity
+@given(events=publish_events, history=st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_versions_monotone_and_history_bounded(events, history):
+    reg = EnsembleRegistry(history=history)
+    last_version = {t: 0 for t in TENANTS}
+    for tenant, T, seed in events:
+        p, a = _packed(T, seed)
+        snap = reg.publish_packed(tenant, p, a)
+        assert snap.version == last_version[tenant] + 1   # +1 per publish
+        last_version[tenant] = snap.version
+    for tenant in TENANTS:
+        hist = reg.history(tenant)
+        assert len(hist) <= history                       # bounded window
+        versions = [s.version for s in hist]
+        assert versions == sorted(versions)               # ordered history
+        if hist:
+            assert reg.latest(tenant).version == last_version[tenant]
+            assert reg.version_count(tenant) == last_version[tenant]
+
+
+@given(events=publish_events)
+@settings(max_examples=25, deadline=None)
+def test_get_by_version_consistent_after_rebase(events):
+    reg = EnsembleRegistry(history=8)
+    clock = 0.0
+    for i, (tenant, T, seed) in enumerate(events):
+        p, a = _packed(T, seed)
+        clock = float(i)
+        reg.publish_packed(tenant, p, a, clock=clock)
+    ages = {t: [clock - s.published_at for s in reg.history(t)]
+            for t in TENANTS}
+    reg.rebase_clock(1000.0)
+    for t in TENANTS:
+        hist = reg.history(t)
+        if not hist:
+            continue
+        assert hist[-1].published_at == pytest.approx(1000.0)
+        # relative ages survive the epoch change for every retained version
+        new_ages = [1000.0 - reg.get(t, s.version).published_at
+                    for s in hist]
+        # offset between old/new age lists is constant (latest moved to 0)
+        deltas = {round(o - n, 6) for o, n in zip(ages[t], new_ages)}
+        assert len(deltas) == 1
+
+
+# ------------------------------------------------------- concurrent latest
+@given(n_threads=st.integers(2, 4), per_thread=st.integers(3, 10))
+@settings(max_examples=10, deadline=None)
+def test_latest_atomic_under_concurrent_publishers(n_threads, per_thread):
+    reg = EnsembleRegistry(history=3)
+    seen_bad = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            snap = reg.latest("t")
+            if snap is None:
+                continue
+            # a torn snapshot would break one of these invariants
+            if (snap.stump_params.shape != (snap.n_learners, 4)
+                    or snap.version < 1):
+                seen_bad.append(snap)
+
+    def writer(wid):
+        for i in range(per_thread):
+            p, a = _packed(1 + (wid + i) % 4, seed=wid * 100 + i)
+            reg.publish_packed("t", p, a)
+
+    rt = threading.Thread(target=reader)
+    rt.start()
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not seen_bad
+    # every publish got a unique version; latest is the total count
+    assert reg.latest("t").version == n_threads * per_thread
+
+
+# ---------------------------------------------------- gossip convergence
+@given(events=publish_events,
+       exchange_seed=st.integers(0, 2**16),
+       extra_exchanges=st.lists(
+           st.tuples(st.integers(0, 2), st.integers(0, 2)), max_size=12))
+@settings(max_examples=25, deadline=None)
+def test_gossip_converges_any_publish_and_exchange_order(
+        events, exchange_seed, extra_exchanges):
+    cluster = ShardCluster(3, GossipConfig(seed=exchange_seed))
+    hosts = list(cluster.hosts.values())
+    for tenant, T, seed in events:
+        p, a = _packed(T, seed)
+        cluster.publish_packed(tenant, p, a, train_progress=seed)
+    # arbitrary manual pairwise exchanges first (any digest-exchange order)
+    for i, j in extra_exchanges:
+        if i != j:
+            cluster._anti_entropy(hosts[i], hosts[j], now=0.0)
+    cluster.run_until_quiescent(now=0.0)
+    assert cluster.converged()
+    digests = [h.registry.digest() for h in hosts]
+    assert digests[0] == digests[1] == digests[2]
+    # version vector reflects every publish
+    want = {}
+    for tenant, *_ in events:
+        want[tenant] = want.get(tenant, 0) + 1
+    for tenant, count in want.items():
+        assert digests[0][tenant][0] == count
+
+
+@given(seed_a=st.integers(0, 50), seed_b=st.integers(51, 99),
+       progress_a=st.integers(0, 30), progress_b=st.integers(0, 30),
+       dt=st.floats(0.0, 4.0))
+@settings(max_examples=25, deadline=None)
+def test_concurrent_versions_reconcile_identically_everywhere(
+        seed_a, seed_b, progress_a, progress_b, dt):
+    """Two hosts race the same version number; after gossip all hosts hold
+    the same winner, chosen by the staleness-weighted score."""
+    cluster = ShardCluster(3, GossipConfig(seed=0, lam=0.5))
+    hosts = list(cluster.hosts.values())
+    pa, aa = _packed(3, seed_a)
+    pb, ab = _packed(3, seed_b)
+    hosts[0].registry.publish_packed("t", pa, aa, clock=0.0,
+                                     train_progress=progress_a)
+    hosts[1].registry.publish_packed("t", pb, ab, clock=dt,
+                                     train_progress=progress_b)
+    cluster.run_until_quiescent(now=5.0)
+    assert cluster.converged()
+    fps = {h.registry.latest("t").fingerprint for h in hosts}
+    assert len(fps) == 1

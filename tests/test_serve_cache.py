@@ -1,0 +1,224 @@
+"""Result-cache correctness: bit-identical hits, publish/gossip
+invalidation scoped to exactly the affected tenant, and cross-tenant
+isolation under interleaved traffic."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (BatchConfig, EnsembleRegistry, EnsembleServer,
+                         GossipConfig, ResultCache, ShardCluster,
+                         ShardedEnsembleServer, feature_hash)
+
+
+def _direct_margin(snap, x):
+    sp = np.asarray(snap.stump_params)
+    al = np.asarray(snap.alphas)
+    xv = np.asarray(x)[sp[:, 0].astype(int)]
+    return float(np.dot(al, sp[:, 2] * np.sign(xv - sp[:, 1] + 1e-12)))
+
+
+def _publish(target, tenant, T=4, F=6, seed=0, clock=0.0, progress=0):
+    rng = np.random.RandomState(seed)
+    p = np.zeros((T, 4), np.float32)
+    p[:, 0] = rng.randint(0, F, size=T)
+    p[:, 1] = rng.randn(T)
+    p[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    a = (rng.rand(T) + 0.1).astype(np.float32)
+    return target.publish_packed(tenant, jnp.asarray(p), jnp.asarray(a),
+                                 clock=clock, train_progress=progress)
+
+
+def _server(registry, **kw):
+    return EnsembleServer(
+        registry, BatchConfig(cache_capacity=kw.pop("capacity", 256)),
+        service_model=lambda n: 1e-4, **kw)
+
+
+def _serve_one(server, tenant, x, now):
+    _, out = server.submit(tenant, x, now)
+    out += server.drain()
+    (resp,) = out
+    return resp
+
+
+def test_hit_is_bit_identical_to_cold_kernel_eval():
+    reg = EnsembleRegistry()
+    _publish(reg, "t", T=5, seed=3)
+    warm = _server(reg)
+    x = np.random.RandomState(0).randn(6).astype(np.float32)
+    first = _serve_one(warm, "t", x, 0.0)       # cold: fills the cache
+    assert warm.cache.stats.hits == 0 and warm.cache.stats.fills == 1
+    second = _serve_one(warm, "t", x, 1.0)      # warm: served from cache
+    assert warm.cache.stats.hits == 1
+    assert warm.evaluator.last_eval.cached_requests == 1
+    assert warm.evaluator.last_eval.kernel_requests == 0
+    # a completely cold server (no cache) evaluates the same kernel path
+    cold = EnsembleServer(reg, BatchConfig(), service_model=lambda n: 1e-4)
+    reference = _serve_one(cold, "t", x, 0.0)
+    assert second.margin == first.margin == reference.margin  # bit-identical
+    assert second.label == reference.label
+    assert second.snapshot_version == reference.snapshot_version
+
+
+def test_hit_bit_identical_across_batch_packings():
+    """The padding contract means a margin computed in a wide packed batch
+    equals the single-request evaluation bit for bit — so cache fills from
+    any batch composition are safe to replay."""
+    reg = EnsembleRegistry()
+    _publish(reg, "a", T=3, seed=1)
+    _publish(reg, "b", T=9, seed=2)             # forces T/N padding for "a"
+    server = _server(reg)
+    rng = np.random.RandomState(4)
+    xa = rng.randn(6).astype(np.float32)
+    # fill from a mixed two-tenant batch (padded to the widest ensemble)
+    server.submit("a", xa, 0.0)
+    for i in range(3):
+        server.submit("b", rng.randn(6).astype(np.float32), 0.0)
+    server.drain()
+    hit = _serve_one(server, "a", xa, 1.0)
+    solo = _serve_one(EnsembleServer(reg, BatchConfig(),
+                                     service_model=lambda n: 1e-4),
+                      "a", xa, 0.0)
+    assert hit.margin == solo.margin
+
+
+def test_publish_invalidates_exactly_that_tenant():
+    reg = EnsembleRegistry()
+    _publish(reg, "a", seed=1)
+    _publish(reg, "b", seed=2)
+    server = _server(reg)
+    rng = np.random.RandomState(0)
+    xs = {t: rng.randn(6).astype(np.float32) for t in "ab"}
+    for t in "ab":
+        _serve_one(server, t, xs[t], 0.0)
+    assert len(server.cache) == 2
+    snap = _publish(reg, "a", T=6, seed=7)      # newer version for a only
+    assert snap.version == 2
+    keys = server.cache.keys()
+    assert len(keys) == 1                       # a's entry swept...
+    assert keys[0][0] == "b"                    # ...b's untouched
+    assert server.cache.stats.invalidated == 1
+    # serving "a" again misses (new version key) and re-fills
+    resp = _serve_one(server, "a", xs["a"], 1.0)
+    assert resp.snapshot_version == 2
+    assert server.cache.stats.fills == 3
+
+
+def test_gossip_ingest_invalidates_replica_cache():
+    cluster = ShardCluster(2, GossipConfig(seed=0))
+    hosts = list(cluster.hosts.values())
+    _publish(cluster, "t", seed=1)
+    cluster.run_until_quiescent()
+    # replica host (non-owner) serves from its gossiped copy with a cache
+    owner = cluster.owner("t")
+    replica = next(h for h in hosts if h.host_id != owner)
+    cache = ResultCache(64)
+    cache.attach(replica.registry)
+    server = EnsembleServer(replica.registry, BatchConfig(),
+                            service_model=lambda n: 1e-4, cache=cache)
+    x = np.random.RandomState(2).randn(6).astype(np.float32)
+    _serve_one(server, "t", x, 0.0)
+    assert len(cache) == 1
+    # v2 lands on the owner, then reaches the replica via gossip ingest
+    _publish(cluster, "t", T=7, seed=9, clock=1.0)
+    assert len(cache) == 1                      # not yet gossiped
+    cluster.run_until_quiescent(now=1.0)
+    assert len(cache) == 0                      # swept on ingest
+    assert cache.stats.invalidated == 1
+    resp = _serve_one(server, "t", x, 2.0)
+    assert resp.snapshot_version == 2
+
+
+def test_cross_tenant_isolation_under_interleaved_traffic():
+    cluster = ShardCluster(3, GossipConfig(seed=1))
+    for i, t in enumerate(["a", "b", "c"]):
+        _publish(cluster, t, T=3 + i, seed=i)
+    cluster.run_until_quiescent()
+    server = ShardedEnsembleServer(cluster, BatchConfig(cache_capacity=512),
+                                   service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(5)
+    pools = {t: rng.randn(4, 6).astype(np.float32) for t in "abc"}
+    responses = []
+    for i in range(90):
+        t = "abc"[i % 3]
+        _, done = server.submit(t, pools[t][i % 4], now=1e-3 * i)
+        responses += done
+    responses += server.drain()
+    assert len(responses) == 90
+    # margins never leak across tenants: every response matches a direct
+    # evaluation of its own tenant's snapshot
+    by_rid = {}
+    for i in range(90):
+        by_rid[i] = ("abc"[i % 3], pools["abc"[i % 3]][i % 4])
+    for r in responses:
+        tenant, x = by_rid[r.rid]
+        assert r.tenant == tenant
+        want = _direct_margin(cluster.latest(tenant), x)
+        assert r.margin == pytest.approx(want, abs=1e-5)
+    stats = server.cache_stats()
+    assert stats["hits"] > 0
+    # per-tenant keys stayed disjoint
+    for s in server.servers.values():
+        if s.cache is None:
+            continue
+        for key in s.cache.keys():
+            assert key[0] in ("a", "b", "c")
+
+
+def test_same_version_reconciliation_sweeps_loser_cache():
+    """Two hosts race the same version number; after gossip replaces the
+    loser's snapshot, entries the loser served from the discarded ensemble
+    must not survive as hits (the invalidation bound is inclusive)."""
+    cluster = ShardCluster(2, GossipConfig(seed=0, lam=0.5))
+    h0, h1 = cluster.hosts.values()
+    _publish(h0.registry, "t", seed=1, clock=0.0, progress=3)   # loser
+    _publish(h1.registry, "t", seed=2, clock=2.0, progress=30)  # winner
+    loser_cache = ResultCache(64)
+    loser_cache.attach(h0.registry)
+    server = EnsembleServer(h0.registry, BatchConfig(),
+                            service_model=lambda n: 1e-4, cache=loser_cache)
+    x = np.random.RandomState(3).randn(6).astype(np.float32)
+    stale = _serve_one(server, "t", x, 0.0)
+    assert len(loser_cache) == 1
+    cluster.run_until_quiescent(now=2.0)
+    assert len(loser_cache) == 0                # swept on replace_latest
+    fresh = _serve_one(server, "t", x, 3.0)
+    assert fresh.snapshot_version == stale.snapshot_version == 1
+    want = _direct_margin(h1.registry.latest("t"), x)
+    assert fresh.margin == pytest.approx(want, abs=1e-5)
+    assert fresh.margin != stale.margin         # winner's content now serves
+
+
+def test_in_batch_duplicates_deduped_to_one_kernel_slot():
+    reg = EnsembleRegistry()
+    _publish(reg, "t", T=4, seed=2)
+    server = _server(reg)
+    x = np.random.RandomState(1).randn(6).astype(np.float32)
+    for _ in range(5):                          # same vector, one batch
+        server.submit("t", x, 0.0)
+    out = server.drain()
+    assert len(out) == 5
+    assert len({r.margin for r in out}) == 1
+    ev = server.evaluator.last_eval
+    assert ev.kernel_requests == 1              # one slot, not five
+    assert ev.deduped_requests == 4
+    assert server.cache.stats.fills == 1
+    solo = _serve_one(EnsembleServer(reg, BatchConfig(),
+                                     service_model=lambda n: 1e-4),
+                      "t", x, 0.0)
+    assert out[0].margin == solo.margin
+
+
+def test_lru_eviction_and_capacity():
+    cache = ResultCache(capacity=2)
+    xs = [np.full(3, float(i), np.float32) for i in range(3)]
+    hs = [feature_hash(x) for x in xs]
+    cache.put("t", 1, hs[0], 0.1)
+    cache.put("t", 1, hs[1], 0.2)
+    assert cache.lookup("t", 1, hs[0]) == 0.1   # refresh LRU order
+    cache.put("t", 1, hs[2], 0.3)               # evicts hs[1]
+    assert cache.lookup("t", 1, hs[1]) is None
+    assert cache.lookup("t", 1, hs[0]) == 0.1
+    assert cache.stats.evicted == 1
+    # version mismatch is a miss even for the same bytes
+    assert cache.lookup("t", 2, hs[0]) is None

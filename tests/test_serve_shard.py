@@ -1,0 +1,183 @@
+"""Sharded registry topology: rendezvous routing and its minimal-disruption
+property, gossip pull-on-miss and reconciliation, the registry facade the
+training engines publish through, and failover serving from replicas."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
+                         ShardedEnsembleServer, rendezvous_owner,
+                         rendezvous_rank, staleness_weight)
+
+
+def _publish(target, tenant, T=4, F=6, seed=0, clock=0.0, progress=0):
+    rng = np.random.RandomState(seed)
+    p = np.zeros((T, 4), np.float32)
+    p[:, 0] = rng.randint(0, F, size=T)
+    p[:, 1] = rng.randn(T)
+    p[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    a = (rng.rand(T) + 0.1).astype(np.float32)
+    return target.publish_packed(tenant, jnp.asarray(p), jnp.asarray(a),
+                                 clock=clock, train_progress=progress)
+
+
+# ---------------------------------------------------------------- routing
+def test_rendezvous_deterministic_and_minimally_disruptive():
+    hosts = [f"h{i}" for i in range(5)]
+    tenants = [f"tenant-{i}" for i in range(40)]
+    owners = {t: rendezvous_owner(t, hosts) for t in tenants}
+    assert owners == {t: rendezvous_owner(t, hosts) for t in tenants}
+    assert len(set(owners.values())) > 1        # spreads over hosts
+    # removing one host only moves that host's tenants
+    dead = "h2"
+    survivors = [h for h in hosts if h != dead]
+    for t in tenants:
+        new = rendezvous_owner(t, survivors)
+        if owners[t] != dead:
+            assert new == owners[t]
+        else:
+            assert new != dead
+    # rank order: owner first, all hosts present exactly once
+    rank = rendezvous_rank(tenants[0], hosts)
+    assert rank[0] == owners[tenants[0]]
+    assert sorted(rank) == sorted(hosts)
+
+
+def test_publish_routes_to_owner_and_facade_reads():
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    snap = _publish(cluster, "t", clock=2.0)
+    owner = cluster.owner("t")
+    assert cluster.hosts[owner].registry.latest("t") is snap
+    for hid, host in cluster.hosts.items():
+        if hid != owner:                        # not replicated until gossip
+            assert host.registry.latest("t") is None
+    assert cluster.latest("t") is snap
+    assert cluster.get("t", 1) is snap
+    assert cluster.version_count("t") == 1
+    assert cluster.staleness("t", 3.5) == pytest.approx(1.5)
+    assert cluster.tenants() == ["t"]
+
+
+def test_engine_publish_notifies_owning_shard():
+    """The async engine's publish hook, pointed at a cluster, must land
+    snapshots on the tenant's owning shard (and count them)."""
+    import dataclasses
+    from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+    from repro.core import FederatedBoostEngine
+    from repro.data import make_domain_data
+    dom = dataclasses.replace(DOMAINS["edge_vision"], n_samples=400,
+                              n_clients=3)
+    data = make_domain_data(dom, seed=0)
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    eng = FederatedBoostEngine(FedBoostConfig(n_clients=3, n_rounds=4,
+                                              seed=0), data, "enhanced")
+    eng.attach_registry(cluster, "edge_vision")
+    eng.run()
+    assert eng.metrics.snapshots_published >= 1
+    owner = cluster.owner("edge_vision")
+    assert (cluster.hosts[owner].registry.version_count("edge_vision")
+            == eng.metrics.snapshots_published)
+    for hid, host in cluster.hosts.items():
+        if hid != owner:
+            assert host.registry.latest("edge_vision") is None
+
+
+# ----------------------------------------------------------------- gossip
+def test_gossip_pull_on_miss_replicates_history_window():
+    cluster = ShardCluster(3, GossipConfig(seed=3, history=3))
+    for v in range(5):
+        _publish(cluster, "t", T=3 + v, seed=v, clock=float(v))
+    cluster.run_until_quiescent(now=5.0)
+    assert cluster.converged()
+    for host in cluster.hosts.values():
+        hist = host.registry.history("t")
+        assert [s.version for s in hist] == [3, 4, 5]  # bounded window
+        assert host.registry.latest("t").n_learners == 7
+        # cross-host get() by version works inside the window
+        assert host.registry.get("t", 4).n_learners == 6
+
+
+def test_staleness_weight_monotone():
+    assert staleness_weight(0.0, 0.5) == 1.0
+    assert (staleness_weight(1.0, 0.5) > staleness_weight(2.0, 0.5)
+            > staleness_weight(5.0, 0.5) > 0.0)
+    assert staleness_weight(-3.0, 0.5) == 1.0   # clock skew clamps to 0
+
+
+def test_concurrent_version_tiebreak_prefers_fresher_more_trained():
+    cluster = ShardCluster(2, GossipConfig(seed=0, lam=0.5))
+    h0, h1 = cluster.hosts.values()
+    _publish(h0.registry, "t", seed=1, clock=0.0, progress=5)
+    stale = h0.registry.latest("t")
+    _publish(h1.registry, "t", seed=2, clock=3.0, progress=30)
+    fresh = h1.registry.latest("t")
+    assert stale.version == fresh.version == 1  # a genuine race
+    cluster.run_until_quiescent(now=3.0)
+    for host in cluster.hosts.values():
+        assert host.registry.latest("t").fingerprint == fresh.fingerprint
+    assert cluster.stats.reconciled >= 1
+
+
+# --------------------------------------------------------------- failover
+def test_failover_serves_from_gossiped_replica_and_recovers():
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    snap = _publish(cluster, "t", seed=4)
+    cluster.run_until_quiescent()
+    server = ShardedEnsembleServer(cluster, BatchConfig(cache_capacity=64),
+                                   service_model=lambda n: 1e-4)
+    x = np.random.RandomState(1).randn(6).astype(np.float32)
+
+    def roundtrip(now):
+        _, out = server.submit("t", x, now)
+        out += server.drain()
+        (resp,) = out
+        return resp
+
+    before = roundtrip(0.0)
+    owner = cluster.owner("t")
+    cluster.mark_down(owner)
+    backup = cluster.route("t").host_id
+    assert backup != owner
+    after = roundtrip(1.0)
+    assert after.margin == before.margin        # same snapshot, same answer
+    assert after.snapshot_version == snap.version
+    # publishes during the outage route to the acting owner; on recovery
+    # the old owner pulls the missed version back via gossip
+    v2 = _publish(cluster, "t", T=6, seed=9, clock=2.0)
+    assert v2.version == 2
+    cluster.mark_up(owner)
+    cluster.run_until_quiescent(now=2.0)
+    assert cluster.hosts[owner].registry.latest("t").version == 2
+    assert cluster.converged()
+
+
+def test_all_hosts_down_sheds_load():
+    cluster = ShardCluster(2, GossipConfig(seed=0))
+    _publish(cluster, "t")
+    server = ShardedEnsembleServer(cluster, BatchConfig(),
+                                   service_model=lambda n: 1e-4)
+    for hid in list(cluster.hosts):
+        cluster.mark_down(hid)
+    accepted, out = server.submit("t", np.zeros(6, np.float32), 0.0)
+    assert accepted is False and out == []
+    with pytest.raises(RuntimeError):
+        cluster.owner("t")
+
+
+def test_fleet_rids_unique_across_hosts():
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    for i, t in enumerate(["a", "b", "c", "d"]):
+        _publish(cluster, t, seed=i)
+    assert len({cluster.owner(t) for t in "abcd"}) > 1  # multi-host spread
+    server = ShardedEnsembleServer(cluster, BatchConfig(),
+                                   service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(0)
+    responses = []
+    for i in range(40):
+        t = "abcd"[i % 4]
+        _, done = server.submit(t, rng.randn(6).astype(np.float32),
+                                now=1e-3 * i)
+        responses += done
+    responses += server.drain()
+    rids = [r.rid for r in responses]
+    assert len(rids) == 40 and len(set(rids)) == 40
