@@ -1,0 +1,145 @@
+"""Wall-clock (non-simulated) kernel x backend x shape-bucket matrix.
+
+For every public kernel and a small/large shape per kernel, times each
+*available* backend (p50/p99 over repeated launches, after a warm-up
+compile), records the per-bucket winner into a
+:class:`~repro.kernels.dispatch.KernelPolicy` calibration table, and
+persists it to ``artifacts/backend_calibration.json`` so serving restarts
+skip recalibration.  A second (calibrated) pass then re-drives every case
+through the dispatcher from the persisted table and asserts the cached
+choice matches the measured winner.
+
+This is the roadmap's wall-clock load test against the real kernel
+latency — no simulated service model anywhere in this module.
+
+    PYTHONPATH=src python -m benchmarks.run backend_matrix
+    PYTHONPATH=src python -m benchmarks.backend_matrix --quick
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.dispatch import (
+    DEFAULT_CALIBRATION_PATH, KernelPolicy, available_backends)
+
+
+def _cases(quick: bool) -> List[Tuple[str, str, tuple, dict]]:
+    """(kernel, label, args, kwargs) per shape; small + (full-run) large."""
+    ks = jax.random.split(jax.random.key(0), 6)
+
+    def stump_scan(N, F, T):
+        x = jax.random.normal(ks[0], (N, F))
+        y = jnp.sign(jax.random.normal(ks[1], (N,)))
+        w = jax.nn.softmax(jax.random.normal(ks[2], (N,)))
+        thr = jnp.sort(jax.random.normal(ks[3], (F, T)), axis=1)
+        return ("stump_scan", f"N{N}xF{F}xT{T}", (x, y, w, thr), {})
+
+    def vote(T, N):
+        m = jnp.sign(jax.random.normal(ks[0], (T, N)))
+        a = jax.random.normal(ks[1], (T,))
+        return ("ensemble_vote", f"T{T}xN{N}", (m, a), {})
+
+    def vote_batched(B, T, N):
+        m = jnp.sign(jax.random.normal(ks[0], (B, T, N)))
+        a = jax.random.normal(ks[1], (B, T))
+        return ("ensemble_vote_batched", f"B{B}xT{T}xN{N}", (m, a), {})
+
+    def stump_vote(B, T, N):
+        xsel = jax.random.normal(ks[0], (B, T, N))
+        thr = jax.random.normal(ks[1], (B, T))
+        pol = jnp.sign(jax.random.normal(ks[2], (B, T)) + 0.1)
+        a = jax.random.normal(ks[3], (B, T))
+        return ("stump_vote_batched", f"B{B}xT{T}xN{N}",
+                (xsel, thr, pol, a), {})
+
+    def dist(N):
+        D = jax.nn.softmax(jax.random.normal(ks[0], (N,)))
+        y = jnp.sign(jax.random.normal(ks[1], (N,)))
+        h = jnp.sign(jax.random.normal(ks[2], (N,)))
+        return ("dist_update", f"N{N}", (0.7, D, y, h), {})
+
+    def flash(B, H, T, d):
+        q = jax.random.normal(ks[0], (B, H, T, d), jnp.float32)
+        k = jax.random.normal(ks[1], (B, H, T, d), jnp.float32)
+        v = jax.random.normal(ks[2], (B, H, T, d), jnp.float32)
+        return ("flash_attention", f"B{B}H{H}T{T}d{d}", (q, k, v), {})
+
+    cases = [stump_scan(512, 16, 8), vote(64, 1024),
+             vote_batched(4, 64, 256), stump_vote(4, 64, 256),
+             dist(4096), flash(1, 2, 128, 64)]
+    if not quick:
+        cases += [stump_scan(2048, 64, 16), vote(256, 8192),
+                  vote_batched(8, 128, 1024), stump_vote(8, 128, 1024),
+                  dist(16384), flash(1, 2, 256, 128)]
+    return cases
+
+
+def main(quick: bool = False,
+         out_path: str = DEFAULT_CALIBRATION_PATH) -> List[tuple]:
+    reps = 5 if quick else 15
+    policy = KernelPolicy()
+    rows: List[tuple] = []
+    entries = []
+    print(f"backend matrix: backends {available_backends()} on "
+          f"'{jax.default_backend()}', {reps} reps/case")
+    for kernel, label, args, kwargs in _cases(quick):
+        bucket, samples = policy.calibrate_call(kernel, *args, reps=reps,
+                                                **kwargs)
+        winner = policy.table[(kernel, bucket)]
+        bstr = "x".join(map(str, bucket))
+        print(f"{kernel:<22} {label:<16} bucket {bstr}")
+        for name in sorted(samples):
+            us = np.asarray(samples[name]) * 1e6
+            p50, p99 = np.percentile(us, 50), np.percentile(us, 99)
+            mark = "*" if name == winner else " "
+            print(f"   {mark} {name:<10} p50 {p50:10.1f} us   "
+                  f"p99 {p99:10.1f} us")
+            rows.append((f"backend_{kernel}_{label}_{name}", float(p50),
+                         f"p99_us={p99:.1f};bucket={bstr};winner={winner}"))
+        entries.append((kernel, label, args, kwargs, bucket, winner))
+    path = policy.save(out_path)
+    print(f"calibration table ({len(policy.table)} buckets) -> {path}")
+
+    # second (calibrated) run: reload the persisted table and drive every
+    # case through the dispatcher with no explicit/env override — the
+    # dispatcher's cached choice must match the calibrated winner.
+    loaded = KernelPolicy.load(path)
+    env_saved = os.environ.pop(loaded.env_var, None) if loaded.env_var \
+        else None
+    try:
+        n_ok = 0
+        for kernel, label, args, kwargs, bucket, winner in entries:
+            getattr(ops, kernel)(*args, policy=loaded, **kwargs)
+            got = loaded.choices[(kernel, bucket)]
+            if got == winner:
+                n_ok += 1
+            else:
+                print(f"  MISMATCH {kernel} bucket={bucket}: "
+                      f"dispatched '{got}', calibrated '{winner}'")
+    finally:
+        if env_saved is not None:
+            os.environ[loaded.env_var] = env_saved
+    print(f"calibrated dispatch check: {n_ok}/{len(entries)} cached "
+          f"choices match per-bucket winners")
+    rows.append(("backend_matrix_dispatch_check", 0.0,
+                 f"match={n_ok}/{len(entries)}"))
+    if n_ok != len(entries):
+        raise RuntimeError(
+            f"calibrated dispatch check failed: only {n_ok}/{len(entries)} "
+            f"cached choices match the winners persisted in {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_CALIBRATION_PATH)
+    a = ap.parse_args()
+    main(quick=a.quick, out_path=a.out)

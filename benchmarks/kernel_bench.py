@@ -1,5 +1,7 @@
-"""Kernel microbenchmarks: wall time (interpret mode on CPU — correctness
-path, NOT TPU-representative) + the structural numbers that matter for TPU:
+"""Kernel microbenchmarks: wall time with the backend pinned to
+Pallas-interpret (correctness path, NOT TPU-representative, immune to
+REPRO_KERNEL_BACKEND overrides — see benchmarks/backend_matrix.py for the
+cross-backend matrix) + the structural numbers that matter for TPU:
 per-block VMEM footprint, FLOPs, and arithmetic intensity per kernel tile.
 
 Emits ``name,us_per_call,derived`` CSV rows (harness convention).
@@ -46,7 +48,7 @@ def rows() -> List[Tuple[str, float, str]]:
     y = jnp.sign(jax.random.normal(ks[1], (N,)))
     w = jax.nn.softmax(jax.random.normal(ks[2], (N,)))
     thr = jnp.sort(jax.random.normal(ks[3], (F, T)), axis=1)
-    us_k = _time(lambda *a: ops.stump_scan(*a), x, y, w, thr)
+    us_k = _time(lambda *a: ops.stump_scan(*a, backend="interpret"), x, y, w, thr)
     us_r = _time(lambda *a: ref.stump_scan_ref(*a), x, y, w, thr)
     flops = 2.0 * N * F * T
     vmem = stump_vmem_bytes(256, F, T)
@@ -60,7 +62,7 @@ def rows() -> List[Tuple[str, float, str]]:
     D = jax.nn.softmax(jax.random.normal(ks[0], (Nd,)))
     yd = jnp.sign(jax.random.normal(ks[1], (Nd,)))
     hd = jnp.sign(jax.random.normal(ks[2], (Nd,)))
-    us_k = _time(lambda *z: ops.dist_update(*z), 0.7, D, yd, hd)
+    us_k = _time(lambda *z: ops.dist_update(*z, backend="interpret"), 0.7, D, yd, hd)
     us_r = _time(lambda *z: ref.dist_update_ref(*z), 0.7, D, yd, hd)
     out.append(("dist_update_pallas_interp", us_k,
                 f"N{Nd};hbm_sweeps=1-vs-3;bytes={3*Nd*4/1e3:.0f}KB"))
@@ -71,7 +73,7 @@ def rows() -> List[Tuple[str, float, str]]:
     m = jnp.sign(jax.random.normal(ks[0], (Tm, Nm)))
     a = jax.random.normal(ks[1], (Tm,))
     out.append(("ensemble_vote_pallas_interp",
-                _time(lambda *z: ops.ensemble_vote(*z), m, a),
+                _time(lambda *z: ops.ensemble_vote(*z, backend="interpret"), m, a),
                 f"T{Tm}xN{Nm};hbm_saved={(Tm*Nm*4)/1e6:.1f}MB-roundtrip"))
     out.append(("ensemble_vote_jnp_ref",
                 _time(lambda *z: ref.ensemble_vote_ref(*z), m, a), ""))
@@ -81,7 +83,7 @@ def rows() -> List[Tuple[str, float, str]]:
     q = jax.random.normal(ks[0], (B, H, Tt, d), jnp.float32)
     k = jax.random.normal(ks[1], (B, H, Tt, d), jnp.float32)
     v = jax.random.normal(ks[2], (B, H, Tt, d), jnp.float32)
-    us_k = _time(lambda *z: ops.flash_attention(*z), q, k, v)
+    us_k = _time(lambda *z: ops.flash_attention(*z, backend="interpret"), q, k, v)
     us_r = _time(lambda *z: ref.flash_attention_ref(*z), q, k, v)
     vmem = flash_vmem_bytes(128, 128, d)
     ai = (4 * Tt * Tt * d) / (4 * 3 * Tt * d)   # flops / bytes-in per head

@@ -4,77 +4,93 @@ convention); the human-readable tables precede them.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # 1 seed, fewer rounds
+    PYTHONPATH=src python -m benchmarks.run backend_matrix serving_load
+                                                       # named subset only
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("only", nargs="*", metavar="BENCH",
+                    help="run only the named benchmarks (default: all)")
     args = ap.parse_args()
     seeds = (0,) if args.quick else (0, 1, 2)
     n_rounds = 20 if args.quick else 30
 
+    from benchmarks import (backend_matrix, controller_compare, domains,
+                            fedavg_compare, kernel_bench, multipod_compare,
+                            relevance_filter, roofline, scheduler_ablation,
+                            serving_load, shard_gossip, staleness)
+
+    # the single benchmark registry: name -> thunk, in run order
+    benches = {
+        # Table 1 (the paper's main quantitative claim)
+        "table1_domains": lambda: domains.main(n_rounds=n_rounds,
+                                               seeds=seeds),
+        # scheduling-rule ablation (paper eq. 1)
+        "scheduler_ablation": scheduler_ablation.main,
+        # staleness compensation sweep (paper eq. 2)
+        "staleness_sweep": staleness.main,
+        # FL baselines comparison (paper's framing vs FedAvg/FedAsync)
+        "fedavg_compare": fedavg_compare.main,
+        # beyond-paper: relevance-filtered buffers + alt controllers
+        "relevance_filter": relevance_filter.main,
+        "controller_compare": controller_compare.main,
+        # roofline report from the dry-run artifacts (§Roofline)
+        "roofline_report": roofline.main,
+        # single- vs multi-pod scaling census
+        "multipod_compare": multipod_compare.main,
+        # serving: adaptive micro-batch window vs fixed, closed-loop load
+        "serving_load": lambda: serving_load.main(quick=args.quick),
+        # sharded registry: gossip convergence + result-cache p99 A/B
+        "shard_gossip": lambda: shard_gossip.main(quick=args.quick),
+        # kernel x backend x shape-bucket wall-clock + calibration table
+        "backend_matrix": lambda: backend_matrix.main(quick=args.quick),
+        # per-kernel microbench rows (not wall-timed by the harness)
+        "kernel_bench": kernel_bench.rows,
+    }
+    unknown = sorted(set(args.only) - set(benches))
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"choose from {', '.join(benches)}")
+
     csv_rows = []
-
-    def timed(name, fn):
+    results = {}
+    for name, fn in benches.items():
+        if args.only and name not in args.only:
+            continue
+        if name == "kernel_bench":        # emits CSV rows, no wall timing
+            results[name] = fn()
+            continue
         t0 = time.time()
-        out = fn()
+        results[name] = fn()
         csv_rows.append((name, (time.time() - t0) * 1e6, "bench-wall"))
-        return out
-
-    from benchmarks import (controller_compare, domains, fedavg_compare,
-                            kernel_bench, multipod_compare, relevance_filter,
-                            roofline, scheduler_ablation, serving_load,
-                            shard_gossip, staleness)
-
-    # Table 1 (the paper's main quantitative claim)
-    tab1 = timed("table1_domains",
-                 lambda: domains.main(n_rounds=n_rounds, seeds=seeds))
-    # scheduling-rule ablation (paper eq. 1)
-    timed("scheduler_ablation", scheduler_ablation.main)
-    # staleness compensation sweep (paper eq. 2)
-    timed("staleness_sweep", staleness.main)
-    # FL baselines comparison (paper's framing vs FedAvg/FedAsync)
-    timed("fedavg_compare", fedavg_compare.main)
-    # beyond-paper: relevance-filtered buffers + alternative controllers
-    timed("relevance_filter", relevance_filter.main)
-    timed("controller_compare", controller_compare.main)
-    # roofline report from the dry-run artifacts (§Roofline)
-    timed("roofline_report", roofline.main)
-    # single- vs multi-pod scaling census
-    timed("multipod_compare", multipod_compare.main)
-    # serving: adaptive micro-batch window vs fixed under closed-loop load
-    serve_rows = timed("serving_load",
-                       lambda: serving_load.main(quick=args.quick))
-    # sharded registry: gossip convergence + result-cache p99 A/B
-    shard_rows = timed("shard_gossip",
-                       lambda: shard_gossip.main(quick=args.quick))
 
     print("\n--- kernel microbench + harness CSV ---")
-    for name, us, derived in kernel_bench.rows():
-        csv_rows.append((name, us, derived))
-    for d in tab1:
+    csv_rows.extend(results.get("kernel_bench", []))
+    for d in results.get("table1_domains", []):
         csv_rows.append((
             f"table1_{d['domain']}", 0.0,
             f"time_down={d['time_down']:.1f}%;comm_down={d['comm_down']:.1f}%;"
             f"conv_down={d['conv_down']:.1f}%;acc_delta={d['acc_delta_pp']:+.1f}pp"))
-    for r in serve_rows:
+    for r in results.get("serving_load", []):
         csv_rows.append((
             f"serve_{r['policy']}_{r['rate']:.0f}rps", 0.0,
             f"thr={r['throughput_rps']:.0f}rps;p50={r['p50_ms']:.2f}ms;"
             f"p99={r['p99_ms']:.2f}ms;batch={r['mean_batch']:.1f};"
             f"rej={r['rejected']}"))
-    for r in shard_rows:
+    for r in results.get("shard_gossip", []):
         csv_rows.append((
             f"shard_{r['mode']}_{r['rate']:.0f}rps", 0.0,
             f"p99={r['p99_ms']:.2f}ms;hit={r['hit_rate']:.2f};"
             f"identical={int(r['identical_predictions'])};"
             f"lag={r['mean_lag_rounds']:.1f}r"))
+    csv_rows.extend(results.get("backend_matrix", []))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
 

@@ -94,11 +94,17 @@ class FederatedBoostEngine:
     LATENCY_S = 0.05
 
     def __init__(self, cfg: FedBoostConfig, data: Dict, mode: str,
-                 weak: Optional[WeakLearnerSpec] = None):
+                 weak: Optional[WeakLearnerSpec] = None,
+                 kernel_policy=None):
         assert mode in ("baseline", "enhanced")
         self.cfg = cfg
         self.mode = mode
-        self.weak = weak or get_weak_learner(cfg.weak_learner)
+        # kernel_policy: optional repro.kernels.KernelPolicy routing the
+        # weak-learner fit through the backend dispatcher (re-resolved per
+        # fit, so env/calibration changes apply mid-run); None keeps the
+        # jnp oracle.  Ignored when an explicit `weak` spec is supplied.
+        self.weak = weak or get_weak_learner(cfg.weak_learner,
+                                             policy=kernel_policy)
         self.rng = np.random.RandomState(cfg.seed)
         self.data = data              # {clients: [(x,y)...], val:(x,y), test:(x,y)}
         self.scheduler = HostScheduler(cfg.scheduler)

@@ -1,6 +1,11 @@
 # Pallas TPU kernels for the framework's compute hot-spots.
-# <name>.py: pl.pallas_call + BlockSpec; ops.py: jit'd wrappers (padding,
-# interpret-mode selection); ref.py: pure-jnp oracles asserted in tests.
+# <name>.py: pl.pallas_call + BlockSpec; ref.py: pure-jnp oracles asserted
+# in tests; dispatch.py: backend selection (interpret / Mosaic / XLA
+# fallback) with shape-bucketed autotuning; ops.py: the public entry
+# points, all routed through the dispatcher.
+from repro.kernels.dispatch import (  # noqa: F401
+    BACKENDS, KernelPolicy, available_backends, bucket_of, default_policy,
+    set_default_policy)
 from repro.kernels.ops import (  # noqa: F401
     stump_scan, ensemble_vote, ensemble_vote_batched, stump_vote_batched,
-    flash_attention)
+    flash_attention, dist_update)

@@ -1,0 +1,538 @@
+"""Unified kernel-backend dispatch with shape-bucketed autotuning.
+
+Every public kernel entry point in :mod:`repro.kernels.ops` routes through
+this module.  Three execution substrates implement the same numerical
+contract (asserted against each other in ``tests/test_backend_parity.py``):
+
+* ``interpret`` — the Pallas kernels under the Pallas interpreter.  Runs on
+  any JAX backend; the CPU-container default.
+* ``mosaic``    — the same Pallas kernels compiled by Mosaic.  TPU only.
+* ``xla``       — the pure-jnp oracles from :mod:`repro.kernels.ref`,
+  jit-compiled by XLA.  Always available; the fallback of last resort and
+  frequently the fastest substrate on CPU.
+
+Backend choice is re-resolved on *every* call (nothing is captured at
+construction time — a policy/env change or a TPU hot-attach takes effect on
+the next kernel launch), in priority order::
+
+    explicit ``backend=`` argument (or the deprecated ``interpret=`` shim)
+    > ``KernelPolicy(backend=...)`` forced policy
+    > the ``REPRO_KERNEL_BACKEND`` environment variable
+    > the policy's calibration table (per (kernel, shape-bucket) winner)
+    > platform default ("mosaic" on TPU, "interpret" elsewhere)
+
+An unavailable candidate (e.g. ``mosaic`` off-TPU) falls through to the
+next priority with a one-shot RuntimeWarning, so a policy calibrated on one
+substrate degrades gracefully on another.
+
+Shapes are *bucketed* by rounding each dimension up to the block boundary
+the padded Pallas call would use, so every raw shape that lowers to the
+same padded kernel shares one calibration measurement and one entry in the
+per-(kernel, bucket, backend) dispatch cache.  ``KernelPolicy.calibrate_call``
+times each available backend for one bucket and records the winner;
+``save``/``load`` persist the table to JSON (default
+``artifacts/backend_calibration.json``) so serving restarts skip
+recalibration — see ``benchmarks/backend_matrix.py`` for the one-shot
+calibration pass.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+import warnings
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dist_update import dist_update_kernel
+from repro.kernels.ensemble_vote import (
+    ensemble_vote_batched_kernel, ensemble_vote_kernel,
+    stump_vote_batched_kernel)
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.stump_scan import stump_scan_kernel
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+DEFAULT_CALIBRATION_PATH = "artifacts/backend_calibration.json"
+
+Bucket = Tuple[int, ...]
+
+
+# ---------------------------------------------------------------------------
+# shared shape helpers (the single home of the padding boilerplate that used
+# to be copy-pasted across every ops.py wrapper)
+# ---------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    """Pad ``axis`` up to the next multiple of ``mult`` with ``value``."""
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def ceil_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def next_pow2(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def vote_blocks(T: int, N: int, block_t: int, block_n: int) -> Tuple[int, int]:
+    """Effective (block_t, block_n) for the vote kernels: shrink to the next
+    power of two covering the problem so tiny ensembles don't pad to 128."""
+    bt = min(block_t, max(8, next_pow2(T)))
+    bn = min(block_n, max(128, next_pow2(N)))
+    return bt, bn
+
+
+def _flash_blocks(T: int, block_q: int, block_k: int) -> Tuple[int, int]:
+    bq = min(block_q, T) if T % min(block_q, T) == 0 else T
+    bk = min(block_k, T) if T % min(block_k, T) == 0 else T
+    return bq, bk
+
+
+# ---------------------------------------------------------------------------
+# Pallas substrate: pad to hardware-aligned blocks, launch, slice back
+# ---------------------------------------------------------------------------
+
+def _pallas_stump_scan(x, y, w, thresholds, *, block_n=256, interpret=True):
+    # pad N with zero-weight rows (no contribution) and F/T to the 8-sublane
+    # boundary (inf thresholds never win the argmin)
+    N, F = x.shape
+    T = thresholds.shape[1]
+    xp = pad_to(x, 0, block_n)
+    yp = pad_to(y, 0, block_n, value=1.0)
+    wp = pad_to(w, 0, block_n, value=0.0)
+    xp = pad_to(xp, 1, 8)
+    thr = pad_to(pad_to(thresholds, 0, 8, value=jnp.inf), 1, 8,
+                 value=jnp.inf)
+    err = stump_scan_kernel(xp, yp, wp, thr, block_n=block_n,
+                            interpret=interpret)
+    return err[:F, :T]
+
+
+def _pallas_ensemble_vote(margins, alphas, *, block_t=128, block_n=512,
+                          interpret=True):
+    # pad T with zero-alpha rows and N with dummy columns (sliced off)
+    T, N = margins.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    mp = pad_to(pad_to(margins, 0, bt), 1, bn)
+    ap = pad_to(alphas, 0, bt, value=0.0)
+    out = ensemble_vote_kernel(mp, ap, block_t=bt, block_n=bn,
+                               interpret=interpret)
+    return out[:N]
+
+
+def _pallas_ensemble_vote_batched(margins, alphas, *, block_t=128,
+                                  block_n=512, interpret=True):
+    B, T, N = margins.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    mp = pad_to(pad_to(margins, 1, bt), 2, bn)
+    ap = pad_to(alphas, 1, bt, value=0.0)
+    out = ensemble_vote_batched_kernel(mp, ap, block_t=bt, block_n=bn,
+                                       interpret=interpret)
+    return out[:, :N]
+
+
+def _pallas_stump_vote_batched(xsel, thr, pol, alphas, *, block_t=128,
+                               block_n=512, interpret=True):
+    # zero-alpha padding rows nullify whatever thr/pol padding holds
+    B, T, N = xsel.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    xp = pad_to(pad_to(xsel, 1, bt), 2, bn)
+    tp = pad_to(thr, 1, bt, value=0.0)
+    pp = pad_to(pol, 1, bt, value=1.0)
+    ap = pad_to(alphas, 1, bt, value=0.0)
+    out = stump_vote_batched_kernel(xp, tp, pp, ap, block_t=bt, block_n=bn,
+                                    interpret=interpret)
+    return out[:, :N]
+
+
+def _pallas_flash_attention(q, k, v, *, causal=True, block_q=128,
+                            block_k=128, interpret=True):
+    B, H, T, d = q.shape
+    bq, bk = _flash_blocks(T, block_q, block_k)
+    qf = q.reshape(B * H, T, d)
+    kf = k.reshape(B * H, T, d)
+    vf = v.reshape(B * H, T, d)
+    dp = (-d) % 128
+    if dp:
+        # zero-pad head_dim: extra lanes contribute 0 to q.k and to output
+        qf = pad_to(qf, 2, 128)
+        kf = pad_to(kf, 2, 128)
+        vf = pad_to(vf, 2, 128)
+        # the kernel scales by 1/sqrt(d_padded); pre-scale q so the
+        # effective scale reflects the true head_dim
+        qf = qf * (((d + dp) ** 0.5) / (d ** 0.5))
+    out = flash_attention_kernel(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+        interpret=interpret)
+    out = out[..., :d]
+    return out.reshape(B, H, T, d)
+
+
+def _pallas_dist_update(alpha, D, y, h, *, block_n=1024, interpret=True):
+    # pad N with zero-mass rows (no contribution to Z)
+    N = D.shape[0]
+    bn = min(block_n, max(256, next_pow2(N)))
+    Dp = pad_to(D, 0, bn, value=0.0)
+    yp = pad_to(y, 0, bn, value=1.0)
+    hp = pad_to(h, 0, bn, value=0.0)
+    w, Z = dist_update_kernel(jnp.asarray(alpha, jnp.float32), Dp, yp, hp,
+                              block_n=bn, interpret=interpret)
+    return (w / (Z[0] + 1e-30))[:N], Z[0]
+
+
+_PALLAS_IMPLS: Dict[str, Callable] = {
+    "stump_scan": _pallas_stump_scan,
+    "ensemble_vote": _pallas_ensemble_vote,
+    "ensemble_vote_batched": _pallas_ensemble_vote_batched,
+    "stump_vote_batched": _pallas_stump_vote_batched,
+    "flash_attention": _pallas_flash_attention,
+    "dist_update": _pallas_dist_update,
+}
+
+
+# ---------------------------------------------------------------------------
+# XLA substrate: the ref.py oracles on the raw (unpadded) inputs,
+# jit-compiled so the fallback path is a real compiled alternative (not an
+# eager op-by-op walk) — what calibration then measures and persists
+# ---------------------------------------------------------------------------
+
+_jit_stump_scan_ref = jax.jit(ref.stump_scan_ref)
+_jit_ensemble_vote_ref = jax.jit(ref.ensemble_vote_ref)
+_jit_ensemble_vote_batched_ref = jax.jit(ref.ensemble_vote_batched_ref)
+_jit_stump_vote_batched_ref = jax.jit(ref.stump_vote_batched_ref)
+_jit_flash_attention_ref = jax.jit(ref.flash_attention_ref,
+                                   static_argnames=("causal",))
+_jit_dist_update_ref = jax.jit(ref.dist_update_ref)
+
+_XLA_IMPLS: Dict[str, Callable] = {
+    "stump_scan":
+        lambda x, y, w, thr, **_: _jit_stump_scan_ref(x, y, w, thr),
+    "ensemble_vote":
+        lambda m, a, **_: _jit_ensemble_vote_ref(m, a),
+    "ensemble_vote_batched":
+        lambda m, a, **_: _jit_ensemble_vote_batched_ref(m, a),
+    "stump_vote_batched":
+        lambda x, t, p, a, **_: _jit_stump_vote_batched_ref(x, t, p, a),
+    "flash_attention":
+        lambda q, k, v, *, causal=True, **_:
+            _jit_flash_attention_ref(q, k, v, causal=causal),
+    "dist_update":
+        lambda alpha, D, y, h, **_: _jit_dist_update_ref(alpha, D, y, h),
+}
+
+KERNELS: Tuple[str, ...] = tuple(_PALLAS_IMPLS)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets: round every call up to the padded shape it lowers to, so
+# calls sharing one compiled kernel share one calibration/dispatch entry
+# ---------------------------------------------------------------------------
+
+def _bucket_stump_scan(x, y, w, thresholds, *, block_n=256, **_):
+    N, F = x.shape
+    T = thresholds.shape[1]
+    return (ceil_to(N, block_n), ceil_to(F, 8), ceil_to(T, 8))
+
+
+def _bucket_ensemble_vote(margins, alphas, *, block_t=128, block_n=512, **_):
+    T, N = margins.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    return (ceil_to(T, bt), ceil_to(N, bn))
+
+
+def _bucket_vote_batched(margins, alphas, *, block_t=128, block_n=512, **_):
+    B, T, N = margins.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    return (next_pow2(B), ceil_to(T, bt), ceil_to(N, bn))
+
+
+def _bucket_stump_vote_batched(xsel, thr, pol, alphas, *, block_t=128,
+                               block_n=512, **_):
+    return _bucket_vote_batched(xsel, alphas, block_t=block_t,
+                                block_n=block_n)
+
+
+def _bucket_flash_attention(q, k, v, *, block_q=128, block_k=128, **_):
+    B, H, T, d = q.shape
+    bq, bk = _flash_blocks(T, block_q, block_k)
+    return (next_pow2(B * H), ceil_to(T, bq), ceil_to(d, 128))
+
+
+def _bucket_dist_update(alpha, D, y, h, *, block_n=1024, **_):
+    N = D.shape[0]
+    bn = min(block_n, max(256, next_pow2(N)))
+    return (ceil_to(N, bn),)
+
+
+_BUCKETERS: Dict[str, Callable[..., Bucket]] = {
+    "stump_scan": _bucket_stump_scan,
+    "ensemble_vote": _bucket_ensemble_vote,
+    "ensemble_vote_batched": _bucket_vote_batched,
+    "stump_vote_batched": _bucket_stump_vote_batched,
+    "flash_attention": _bucket_flash_attention,
+    "dist_update": _bucket_dist_update,
+}
+
+
+def bucket_of(kernel: str, args: Sequence, kwargs: Optional[dict] = None
+              ) -> Bucket:
+    """The shape bucket one call lowers to (its padded kernel shape)."""
+    return _BUCKETERS[kernel](*args, **(kwargs or {}))
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class PallasInterpretBackend:
+    """Pallas kernels under the interpreter — correct everywhere."""
+    name = "interpret"
+
+    def available(self) -> bool:
+        return True
+
+    def run(self, kernel: str, *args, **kwargs):
+        return _PALLAS_IMPLS[kernel](*args, interpret=True, **kwargs)
+
+
+class PallasMosaicBackend:
+    """Pallas kernels compiled by Mosaic — TPU only."""
+    name = "mosaic"
+
+    def available(self) -> bool:
+        return on_tpu()
+
+    def run(self, kernel: str, *args, **kwargs):
+        return _PALLAS_IMPLS[kernel](*args, interpret=False, **kwargs)
+
+
+class XlaRefBackend:
+    """The jnp oracles, jit-compiled by XLA — the universal fallback."""
+    name = "xla"
+
+    def available(self) -> bool:
+        return True
+
+    def run(self, kernel: str, *args, **kwargs):
+        return _XLA_IMPLS[kernel](*args, **kwargs)
+
+
+BACKENDS: Dict[str, object] = {b.name: b for b in (
+    PallasInterpretBackend(), PallasMosaicBackend(), XlaRefBackend())}
+
+_ALIASES = {"pallas": "interpret", "pallas_interpret": "interpret",
+            "pallas_mosaic": "mosaic", "tpu": "mosaic",
+            "ref": "xla", "jnp": "xla", "fallback": "xla"}
+
+
+def canonical(name: str) -> str:
+    key = str(name).strip().lower()
+    key = _ALIASES.get(key, key)
+    if key not in BACKENDS:
+        raise KeyError(
+            f"unknown kernel backend {name!r}: expected one of "
+            f"{sorted(BACKENDS)} (or aliases {sorted(_ALIASES)})")
+    return key
+
+
+def platform_default() -> str:
+    return "mosaic" if on_tpu() else "interpret"
+
+
+def available_backends() -> List[str]:
+    return [n for n, b in sorted(BACKENDS.items()) if b.available()]
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+class KernelPolicy:
+    """Per-call backend selection with a shape-bucketed calibration table.
+
+    ``backend=`` forces one backend policy-wide (still subject to
+    availability).  ``table`` maps ``(kernel, bucket) -> backend name`` —
+    normally filled by :meth:`calibrate_call` or loaded from the JSON
+    written by ``benchmarks/backend_matrix.py``.  Resolution consults, in
+    order: the per-call explicit argument, the forced ``backend``, the
+    ``env_var`` environment variable (read on every call), the calibration
+    table, then the platform default.
+
+    ``choices`` records the backend actually dispatched per (kernel,
+    bucket); the internal dispatch cache is keyed on the full resolution
+    input (including the live env value) so repeated same-bucket calls skip
+    re-resolution without ever pinning a stale choice.
+    """
+
+    def __init__(self, backend: Optional[str] = None,
+                 table: Optional[Dict[Tuple[str, Bucket], str]] = None,
+                 env_var: Optional[str] = ENV_VAR):
+        self.backend = canonical(backend) if backend is not None else None
+        self.table: Dict[Tuple[str, Bucket], str] = {}
+        for (kern, bucket), name in (table or {}).items():
+            self.table[(kern, tuple(bucket))] = canonical(name)
+        self.env_var = env_var
+        self.choices: Dict[Tuple[str, Bucket], str] = {}
+        self.cache_hits = 0
+        self._cache: Dict[tuple, object] = {}
+        self._warned: set = set()
+
+    # ------------------------------------------------------------ resolve
+    def _env_backend(self) -> Optional[str]:
+        if not self.env_var:
+            return None
+        return os.environ.get(self.env_var) or None
+
+    def resolve_name(self, kernel: str, bucket: Bucket, *,
+                     explicit: Optional[str] = None) -> str:
+        """Backend name for one (kernel, bucket) call, skipping candidates
+        whose substrate is unavailable on the current platform."""
+        bucket = tuple(bucket)
+        for cand in (explicit, self.backend, self._env_backend(),
+                     self.table.get((kernel, bucket))):
+            if cand is None:
+                continue
+            name = canonical(cand)
+            if BACKENDS[name].available():
+                return name
+            if name not in self._warned:
+                self._warned.add(name)
+                warnings.warn(
+                    f"kernel backend '{name}' is unavailable on "
+                    f"'{jax.default_backend()}'; falling back",
+                    RuntimeWarning, stacklevel=3)
+        return platform_default()
+
+    def resolve(self, kernel: str, bucket: Bucket, *,
+                explicit: Optional[str] = None):
+        """Backend object for one call, via the dispatch cache.  The key
+        includes every resolution input — the live env value *and* the
+        platform — so an env change or TPU hot-attach is never masked by
+        a stale cached choice."""
+        bucket = tuple(bucket)
+        key = (kernel, bucket, explicit, self.backend, self._env_backend(),
+               jax.default_backend())
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = BACKENDS[self.resolve_name(kernel, bucket,
+                                             explicit=explicit)]
+            self._cache[key] = hit
+        else:
+            self.cache_hits += 1
+        self.choices[(kernel, bucket)] = hit.name
+        return hit
+
+    # -------------------------------------------------------- calibration
+    def record(self, kernel: str, bucket: Bucket, backend: str) -> None:
+        self.table[(kernel, tuple(bucket))] = canonical(backend)
+        self._cache.clear()
+
+    def calibrate_call(self, kernel: str, *args, reps: int = 5,
+                       backends: Optional[Sequence[str]] = None, **kwargs
+                       ) -> Tuple[Bucket, Dict[str, List[float]]]:
+        """Time every available backend on this call (one compile/warm-up
+        launch, then ``reps`` timed launches), record the median winner for
+        the call's bucket, and return ``(bucket, {backend: [seconds]})``."""
+        bucket = bucket_of(kernel, args, kwargs)
+        samples: Dict[str, List[float]] = {}
+        for name in (backends if backends is not None else sorted(BACKENDS)):
+            be = BACKENDS[canonical(name)]
+            if not be.available():
+                continue
+            jax.block_until_ready(be.run(kernel, *args, **kwargs))
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(be.run(kernel, *args, **kwargs))
+                ts.append(time.perf_counter() - t0)
+            samples[be.name] = ts
+        if not samples:
+            raise ValueError(
+                f"no backend to calibrate {kernel!r}: none of "
+                f"{list(backends) if backends is not None else sorted(BACKENDS)} "
+                f"is available on '{jax.default_backend()}' "
+                f"(available: {available_backends()})")
+        winner = min(samples, key=lambda n: statistics.median(samples[n]))
+        self.record(kernel, bucket, winner)
+        return bucket, samples
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: str = DEFAULT_CALIBRATION_PATH) -> str:
+        """Persist the calibration table (JSON) so restarts skip
+        recalibration; returns the path written."""
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        data = {
+            "env_var": self.env_var,
+            "backend": self.backend,
+            "table": [{"kernel": k, "bucket": list(b), "backend": n}
+                      for (k, b), n in sorted(self.table.items())],
+        }
+        p.write_text(json.dumps(data, indent=2) + "\n")
+        return str(p)
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_CALIBRATION_PATH) -> "KernelPolicy":
+        data = json.loads(Path(path).read_text())
+        table = {(e["kernel"], tuple(e["bucket"])): e["backend"]
+                 for e in data.get("table", [])}
+        return cls(backend=data.get("backend"), table=table,
+                   env_var=data.get("env_var", ENV_VAR))
+
+
+_DEFAULT_POLICY = KernelPolicy()
+
+
+def default_policy() -> KernelPolicy:
+    """The process-wide policy used when no ``policy=`` is passed."""
+    return _DEFAULT_POLICY
+
+
+def set_default_policy(policy: KernelPolicy) -> KernelPolicy:
+    """Swap the process-wide default policy; returns the previous one."""
+    global _DEFAULT_POLICY
+    old, _DEFAULT_POLICY = _DEFAULT_POLICY, policy
+    return old
+
+
+# ---------------------------------------------------------------------------
+# dispatch entry (the single funnel behind every ops.py wrapper)
+# ---------------------------------------------------------------------------
+
+def dispatch(kernel: str, args: Sequence, kwargs: Optional[dict] = None, *,
+             policy: Optional[KernelPolicy] = None,
+             backend: Optional[str] = None,
+             interpret: Optional[bool] = None):
+    """Resolve a backend for this call and run it.
+
+    ``interpret`` is the deprecated bool shim: True maps to the
+    ``interpret`` backend, False to ``mosaic`` (which falls back to the
+    platform default where Mosaic is unavailable).
+    """
+    kwargs = dict(kwargs or {})
+    if interpret is not None:
+        warnings.warn(
+            "interpret= is deprecated; pass backend='interpret'/'mosaic'/"
+            "'xla' or a KernelPolicy", DeprecationWarning, stacklevel=3)
+        if backend is None:
+            backend = "interpret" if interpret else "mosaic"
+    pol = policy if policy is not None else _DEFAULT_POLICY
+    bucket = bucket_of(kernel, args, kwargs)
+    return pol.resolve(kernel, bucket, explicit=backend).run(
+        kernel, *args, **kwargs)

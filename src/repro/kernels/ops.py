@@ -1,155 +1,112 @@
-"""Jit'd public wrappers for the Pallas kernels: padding to hardware-aligned
-block shapes, dtype handling, interpret-mode selection (CPU containers run
-the kernels in interpret mode; on a real TPU backend `interpret=False`
-compiles them to Mosaic).
+"""Public kernel entry points, routed through the backend dispatcher.
+
+The padding/dtype handling for the Pallas substrates and the pure-XLA
+fallback live together in :mod:`repro.kernels.dispatch`; each wrapper here
+names the kernel, forwards its block-shape hints, and exposes the common
+selection surface:
+
+* ``backend=``   one-call override: ``"interpret"`` | ``"mosaic"`` | ``"xla"``
+* ``policy=``    a :class:`~repro.kernels.dispatch.KernelPolicy` (forced
+                 backend and/or calibration table)
+* ``interpret=`` deprecated bool shim (True -> "interpret", False ->
+                 "mosaic"); warns and will be removed next release
+
+With none of the above, the process-default policy re-resolves on every
+call: ``REPRO_KERNEL_BACKEND`` env var > calibration table > platform
+default (Mosaic on TPU, interpret elsewhere).
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.stump_scan import stump_scan_kernel
-from repro.kernels.ensemble_vote import (
-    ensemble_vote_kernel, ensemble_vote_batched_kernel,
-    stump_vote_batched_kernel)
-from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy  # noqa: F401  (re-export)
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+# back-compat aliases for the helpers that used to live here
+_pad_to = dispatch.pad_to
+_on_tpu = dispatch.on_tpu
+_vote_blocks = dispatch.vote_blocks
 
 
 def stump_scan(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
                thresholds: jnp.ndarray, *, block_n: int = 256,
-               interpret: bool | None = None) -> jnp.ndarray:
-    """Weighted stump errors over the (F, T) grid.  Pads N to block_n with
-    zero-weight rows (no contribution) and F to the 8-sublane boundary."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    N, F = x.shape
-    T = thresholds.shape[1]
-    xp = _pad_to(x, 0, block_n)
-    yp = _pad_to(y, 0, block_n, value=1.0)
-    wp = _pad_to(w, 0, block_n, value=0.0)
-    xp = _pad_to(xp, 1, 8)
-    thr = _pad_to(_pad_to(thresholds, 0, 8, value=jnp.inf), 1, 8,
-                  value=jnp.inf)
-    err = stump_scan_kernel(xp, yp, wp, thr, block_n=block_n,
-                            interpret=interpret)
-    return err[:F, :T]
+               backend: Optional[str] = None,
+               policy: Optional[KernelPolicy] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Weighted stump errors over the (F, T) grid.  Pallas substrates pad N
+    to block_n with zero-weight rows (no contribution) and F/T to the
+    8-sublane boundary."""
+    return dispatch.dispatch(
+        "stump_scan", (x, y, w, thresholds), dict(block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
 
 
 def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
                   block_t: int = 128, block_n: int = 512,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """H margins = sum_t alpha_t h_t.  Pads T with zero-alpha rows and N
-    with dummy columns."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    T, N = margins.shape
-    bt, bn = _vote_blocks(T, N, block_t, block_n)
-    mp = _pad_to(_pad_to(margins, 0, bt), 1, bn)
-    ap = _pad_to(alphas, 0, bt, value=0.0)
-    out = ensemble_vote_kernel(mp, ap, block_t=bt, block_n=bn,
-                               interpret=interpret)
-    return out[:N]
-
-
-def _vote_blocks(T: int, N: int, block_t: int, block_n: int):
-    bt = min(block_t, max(8, 1 << (max(T, 1) - 1).bit_length()))
-    bn = min(block_n, max(128, 1 << (max(N, 1) - 1).bit_length()))
-    return bt, bn
+                  backend: Optional[str] = None,
+                  policy: Optional[KernelPolicy] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """H margins = sum_t alpha_t h_t.  Pallas substrates pad T with
+    zero-alpha rows and N with dummy columns (sliced off)."""
+    return dispatch.dispatch(
+        "ensemble_vote", (margins, alphas),
+        dict(block_t=block_t, block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
 
 
 def ensemble_vote_batched(margins: jnp.ndarray, alphas: jnp.ndarray, *,
                           block_t: int = 128, block_n: int = 512,
-                          interpret: bool | None = None) -> jnp.ndarray:
+                          backend: Optional[str] = None,
+                          policy: Optional[KernelPolicy] = None,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
     """Per-tenant H margins for packed serving batches.
 
-    margins: (B,T,N); alphas: (B,T) -> (B,N).  Pads T with zero-alpha rows
-    and N with dummy columns (sliced off)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    B, T, N = margins.shape
-    bt, bn = _vote_blocks(T, N, block_t, block_n)
-    mp = _pad_to(_pad_to(margins, 1, bt), 2, bn)
-    ap = _pad_to(alphas, 1, bt, value=0.0)
-    out = ensemble_vote_batched_kernel(mp, ap, block_t=bt, block_n=bn,
-                                       interpret=interpret)
-    return out[:, :N]
+    margins: (B,T,N); alphas: (B,T) -> (B,N).  Same padding contract as
+    :func:`ensemble_vote`, per batch slot."""
+    return dispatch.dispatch(
+        "ensemble_vote_batched", (margins, alphas),
+        dict(block_t=block_t, block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
 
 
 def stump_vote_batched(xsel: jnp.ndarray, thr: jnp.ndarray, pol: jnp.ndarray,
                        alphas: jnp.ndarray, *, block_t: int = 128,
                        block_n: int = 512,
-                       interpret: bool | None = None) -> jnp.ndarray:
+                       backend: Optional[str] = None,
+                       policy: Optional[KernelPolicy] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused stump-margin + weighted-vote for packed serving batches.
 
     xsel: (B,T,N) gathered features; thr/pol/alphas: (B,T) -> (B,N).
-    Pads T with zero-alpha rows (thr/pol padding is irrelevant: alpha=0
-    nullifies the row) and N with dummy columns."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    B, T, N = xsel.shape
-    bt, bn = _vote_blocks(T, N, block_t, block_n)
-    xp = _pad_to(_pad_to(xsel, 1, bt), 2, bn)
-    tp = _pad_to(thr, 1, bt, value=0.0)
-    pp = _pad_to(pol, 1, bt, value=1.0)
-    ap = _pad_to(alphas, 1, bt, value=0.0)
-    out = stump_vote_batched_kernel(xp, tp, pp, ap, block_t=bt, block_n=bn,
-                                    interpret=interpret)
-    return out[:, :N]
+    Zero-alpha padding rows nullify whatever thr/pol padding holds."""
+    return dispatch.dispatch(
+        "stump_vote_batched", (xsel, thr, pol, alphas),
+        dict(block_t=block_t, block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, block_q: int = 128,
                     block_k: int = 128,
-                    interpret: bool | None = None) -> jnp.ndarray:
-    """q,k,v: (B,H,T,d) -> (B,H,T,d).  Pads T to the block boundary (extra
-    keys masked out by causality / zero value) and d to 128 lanes."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    B, H, T, d = q.shape
-    bq = min(block_q, T) if T % min(block_q, T) == 0 else T
-    bk = min(block_k, T) if T % min(block_k, T) == 0 else T
-    qf = q.reshape(B * H, T, d)
-    kf = k.reshape(B * H, T, d)
-    vf = v.reshape(B * H, T, d)
-    dp = (-d) % 128
-    if dp:
-        # zero-pad head_dim: extra lanes contribute 0 to q.k and to output
-        qf = _pad_to(qf, 2, 128)
-        kf = _pad_to(kf, 2, 128)
-        vf = _pad_to(vf, 2, 128)
-    # NOTE: the kernel scales by 1/sqrt(d_padded); pre-scale q so the
-    # effective scale reflects the true head_dim
-    if dp:
-        qf = qf * (((d + dp) ** 0.5) / (d ** 0.5))
-    out = flash_attention_kernel(
-        qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
-        interpret=interpret)
-    out = out[..., :d]
-    return out.reshape(B, H, T, d)
+                    backend: Optional[str] = None,
+                    policy: Optional[KernelPolicy] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q,k,v: (B,H,T,d) -> (B,H,T,d).  Pallas substrates pad d to 128 lanes
+    (with a q pre-scale correcting the kernel's 1/sqrt(d_padded))."""
+    return dispatch.dispatch(
+        "flash_attention", (q, k, v),
+        dict(causal=causal, block_q=block_q, block_k=block_k),
+        policy=policy, backend=backend, interpret=interpret)
 
 
 def dist_update(alpha, D, y, h, *, block_n: int = 1024,
-                interpret: bool | None = None):
+                backend: Optional[str] = None,
+                policy: Optional[KernelPolicy] = None,
+                interpret: Optional[bool] = None):
     """Fused AdaBoost distribution update -> (D_normalized, Z).
-    Pads N with zero-mass rows (no contribution to Z)."""
-    from repro.kernels.dist_update import dist_update_kernel
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    N = D.shape[0]
-    bn = min(block_n, max(256, 1 << (N - 1).bit_length()))
-    Dp = _pad_to(D, 0, bn, value=0.0)
-    yp = _pad_to(y, 0, bn, value=1.0)
-    hp = _pad_to(h, 0, bn, value=0.0)
-    w, Z = dist_update_kernel(jnp.asarray(alpha, jnp.float32), Dp, yp, hp,
-                              block_n=bn, interpret=interpret)
-    return (w / (Z[0] + 1e-30))[:N], Z[0]
+    Pallas substrates pad N with zero-mass rows (no contribution to Z)."""
+    return dispatch.dispatch(
+        "dist_update", (alpha, D, y, h), dict(block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)

@@ -12,7 +12,9 @@ serving report: throughput, p50/p99 latency, batch-size mix, snapshot
 staleness, per-host traffic, and cache hit rate.  ``--fixed-window N``
 disables window adaptation for an A/B against a fixed window of N
 milliseconds; ``--kill-owner`` marks the first tenant's owning host down
-halfway through to exercise rendezvous failover onto a gossiped replica.
+halfway through to exercise rendezvous failover onto a gossiped replica;
+``--backend``/``--calibration`` pin or table-drive the kernel execution
+backend (see README "Execution backends").
 """
 from __future__ import annotations
 
@@ -24,11 +26,13 @@ import numpy as np
 from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
+from repro.kernels.dispatch import KernelPolicy
 from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
                          ShardedEnsembleServer)
 
 
-def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int):
+def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int,
+                  policy=None):
     pools = {}
     for name in domains:
         dom = dataclasses.replace(DOMAINS[name],
@@ -39,7 +43,8 @@ def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int):
                              straggler_factor=dom.straggler_factor,
                              dropout_prob=dom.dropout_prob, seed=seed,
                              balanced_init=dom.label_imbalance < 0.4)
-        eng = FederatedBoostEngine(cfg, data, "enhanced")
+        eng = FederatedBoostEngine(cfg, data, "enhanced",
+                                   kernel_policy=policy)
         eng.attach_registry(cluster, name)    # publishes route to the owner
         metrics = eng.run()
         pools[name] = np.asarray(data["test"][0], np.float32)
@@ -58,14 +63,15 @@ def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int):
 
 def serve(cluster: ShardCluster, pools, rate: float, duration: float,
           seed: int, fixed_window_ms: float = 0.0, cache_capacity: int = 4096,
-          kill_owner: bool = False):
+          kill_owner: bool = False, policy=None):
     cfg = (BatchConfig(adaptive=False,
                        fixed_window_units=max(1, int(fixed_window_ms)),
                        cache_capacity=cache_capacity)
            if fixed_window_ms > 0
            else BatchConfig(cache_capacity=cache_capacity))
     server = ShardedEnsembleServer(
-        cluster, cfg, service_model=lambda n: 1.2e-3 + 2.0e-4 * n)
+        cluster, cfg, service_model=lambda n: 1.2e-3 + 2.0e-4 * n,
+        policy=policy)
     tenants = sorted(pools)
     victim = cluster.owner(tenants[0]) if kill_owner else None
     rng = np.random.RandomState(seed)
@@ -106,13 +112,32 @@ def main() -> None:
                          "(failover demo)")
     ap.add_argument("--fixed-window", type=float, default=0.0,
                     help="fixed batch window in ms (0 = adaptive)")
+    ap.add_argument("--backend", default=None,
+                    choices=["interpret", "mosaic", "xla"],
+                    help="force one kernel backend fleet-wide (default: "
+                         "per-call resolution — REPRO_KERNEL_BACKEND env "
+                         "var > calibration > platform default)")
+    ap.add_argument("--calibration", default=None, metavar="JSON",
+                    help="backend-calibration table written by "
+                         "benchmarks.backend_matrix; per-bucket winners "
+                         "drive kernel dispatch")
     args = ap.parse_args()
 
+    policy = None
+    if args.backend:
+        policy = KernelPolicy(backend=args.backend)
+    elif args.calibration:
+        policy = KernelPolicy.load(args.calibration)
+        print(f"loaded calibration table ({len(policy.table)} buckets) "
+              f"from {args.calibration}")
+
     cluster = ShardCluster(args.hosts, GossipConfig(seed=args.seed))
-    pools = train_tenants(cluster, args.domains, args.rounds, args.seed)
+    pools = train_tenants(cluster, args.domains, args.rounds, args.seed,
+                          policy=policy)
     server = serve(cluster, pools, args.rate, args.duration, args.seed,
                    fixed_window_ms=args.fixed_window,
-                   cache_capacity=args.cache, kill_owner=args.kill_owner)
+                   cache_capacity=args.cache, kill_owner=args.kill_owner,
+                   policy=policy)
 
     rep = server.report()
     mode = ("adaptive" if args.fixed_window <= 0

@@ -37,22 +37,24 @@ def stump_thresholds(x: Array, n_thresholds: int = 16) -> Array:
     return jnp.quantile(x, qs, axis=0).T          # (F, T)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
+@functools.partial(jax.jit, static_argnames=("backend",))
 def fit_stump(x: Array, y: Array, w: Array, thresholds: Array,
-              use_kernel: bool = False) -> Dict[str, Array]:
+              backend: str | None = None) -> Dict[str, Array]:
     """Weighted-error-optimal stump.
 
     x: (N,F); y: (N,) in {-1,+1}; w: (N,) distribution; thresholds: (F,T).
     Returns {"feature", "threshold", "polarity"} scalars.
 
     err(f,t,+) = sum_i w_i * [sign(x_if - t) != y_i]; polarity flips sign.
+    ``backend=None`` keeps the jnp oracle (the training-loop default); a
+    dispatcher backend name routes the scan through ``kernels.ops``.
     """
-    if use_kernel:
-        from repro.kernels import ops as kops
-        err_pos = kops.stump_scan(x, y, w, thresholds)
-    else:
+    if backend is None:
         from repro.kernels import ref as kref
         err_pos = kref.stump_scan_ref(x, y, w, thresholds)
+    else:
+        from repro.kernels import ops as kops
+        err_pos = kops.stump_scan(x, y, w, thresholds, backend=backend)
     # (F,T) weighted error of polarity +1; polarity -1 error is 1 - err.
     err_neg = 1.0 - err_pos
     best_pos = jnp.unravel_index(jnp.argmin(err_pos), err_pos.shape)
@@ -161,10 +163,22 @@ def _pytree_bytes(p) -> int:
     return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(p)))
 
 
-def get_weak_learner(name: str, n_thresholds: int = 16) -> WeakLearnerSpec:
+def get_weak_learner(name: str, n_thresholds: int = 16,
+                     policy=None) -> WeakLearnerSpec:
+    """``policy`` (a :class:`repro.kernels.KernelPolicy`) routes the stump
+    scan through the kernel dispatcher, re-resolved per fit call so env or
+    calibration changes take effect without rebuilding the spec; ``None``
+    keeps the jnp oracle."""
     if name == "stump":
         def fit(x, y, w, key):
-            return fit_stump(x, y, w, stump_thresholds(x, n_thresholds))
+            thr = stump_thresholds(x, n_thresholds)
+            if policy is None:
+                return fit_stump(x, y, w, thr)
+            from repro.kernels import dispatch as kdispatch
+            backend = policy.resolve_name(
+                "stump_scan", kdispatch.bucket_of("stump_scan",
+                                                  (x, y, w, thr)))
+            return fit_stump(x, y, w, thr, backend=backend)
         return WeakLearnerSpec("stump", fit, predict_stump,
                                lambda p: STUMP_BYTES)
     if name == "logistic":

@@ -5,6 +5,8 @@
 # ensemble-vote kernels.  The sharded layer partitions tenants across
 # hosts by rendezvous hashing and replicates snapshots with anti-entropy
 # gossip; the result cache memoizes margins per (tenant, version, x-hash).
+from repro.kernels.dispatch import KernelPolicy  # noqa: F401  (re-export:
+# serving components accept policy=KernelPolicy(...) for backend dispatch)
 from repro.serve.registry import (  # noqa: F401
     EnsembleRegistry, EnsembleSnapshot, pack_stumps)
 from repro.serve.batching import (  # noqa: F401

@@ -17,6 +17,7 @@ Two paths:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels.dispatch import KernelPolicy
 from repro.models.weak import get_weak_learner
 from repro.serve.batching import Request
 from repro.serve.cache import ResultCache, feature_hash
@@ -58,13 +60,28 @@ class BatchEvaluator:
     so repeated hot feature vectors cost one hash instead of one kernel
     slot.  ``last_eval`` reports the kernel/cached/abstained split of the
     most recent batch (the dispatcher's simulated service-time input).
+
+    The kernel backend is *not* captured at construction: every evaluate()
+    re-resolves it through ``policy`` (or the process default), so an env
+    or calibration-table change — or a TPU hot-attach — takes effect on
+    the next batch without rebuilding the evaluator.  The deprecated
+    ``interpret=`` bool is kept as a shim that pins the corresponding
+    backend explicitly.
     """
 
     def __init__(self, registry: EnsembleRegistry, *,
+                 policy: Optional[KernelPolicy] = None,
                  interpret: Optional[bool] = None,
                  cache: Optional[ResultCache] = None):
         self.registry = registry
-        self.interpret = interpret
+        self.policy = policy
+        self._backend_override: Optional[str] = None
+        if interpret is not None:
+            warnings.warn(
+                "BatchEvaluator(interpret=...) is deprecated; pass "
+                "policy=KernelPolicy(backend=...) instead",
+                DeprecationWarning, stacklevel=2)
+            self._backend_override = "interpret" if interpret else "mosaic"
         self.cache = cache
         self.last_eval = EvalStats()
         self._predict_cache: Dict[str, object] = {}
@@ -151,7 +168,8 @@ class BatchEvaluator:
             alf[b, :t_b] = np.asarray(snap.alphas)
         out = np.asarray(kops.stump_vote_batched(
             jnp.asarray(xsel), jnp.asarray(thr), jnp.asarray(pol),
-            jnp.asarray(alf), interpret=self.interpret))
+            jnp.asarray(alf), policy=self.policy,
+            backend=self._backend_override))
         for b, (_, reqs) in enumerate(group):
             for n, r in enumerate(reqs):
                 margins[r.rid] = float(out[b, n])
@@ -175,7 +193,8 @@ class BatchEvaluator:
             m[b, :snap.n_learners, :len(reqs)] = np.asarray(stack)
             alf[b, :snap.n_learners] = np.asarray(snap.alphas)
         out = np.asarray(kops.ensemble_vote_batched(
-            jnp.asarray(m), jnp.asarray(alf), interpret=self.interpret))
+            jnp.asarray(m), jnp.asarray(alf), policy=self.policy,
+            backend=self._backend_override))
         for b, (_, reqs) in enumerate(group):
             for n, r in enumerate(reqs):
                 margins[r.rid] = float(out[b, n])

@@ -33,8 +33,10 @@ from __future__ import annotations
 import itertools
 import math
 import time
+import warnings
 from typing import Callable, Iterator, List, Optional, Tuple
 
+from repro.kernels.dispatch import KernelPolicy
 from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
 from repro.serve.cache import ResultCache
 from repro.serve.engine import BatchEvaluator, Response
@@ -42,16 +44,38 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import EnsembleRegistry
 
 
+def _interpret_shim(policy: Optional[KernelPolicy],
+                    interpret: Optional[bool],
+                    owner: str) -> Optional[KernelPolicy]:
+    """Deprecated ``interpret=`` bool -> a backend-forcing KernelPolicy.
+    Like the per-call explicit arg it replaces, the bool outranks a policy
+    passed alongside it: that policy's calibration table is kept but its
+    resolution is pinned to the corresponding backend."""
+    if interpret is None:
+        return policy
+    warnings.warn(
+        f"{owner}(interpret=...) is deprecated; pass "
+        "policy=KernelPolicy(backend=...) instead",
+        DeprecationWarning, stacklevel=3)
+    backend = "interpret" if interpret else "mosaic"
+    if policy is None:
+        return KernelPolicy(backend=backend)
+    return KernelPolicy(backend=backend, table=policy.table,
+                        env_var=policy.env_var)
+
+
 class EnsembleServer:
     def __init__(self, registry: EnsembleRegistry,
                  cfg: Optional[BatchConfig] = None, *,
                  service_model: Optional[Callable[[int], float]] = None,
                  metrics: Optional[ServeMetrics] = None,
+                 policy: Optional[KernelPolicy] = None,
                  interpret: Optional[bool] = None,
                  cache: Optional[ResultCache] = None,
                  rid_counter: Optional[Iterator[int]] = None):
         self.cfg = cfg or BatchConfig()
         self.registry = registry
+        self.policy = _interpret_shim(policy, interpret, "EnsembleServer")
         self.queue = MicroBatchQueue(self.cfg, rid_counter)
         self.window = AdaptiveWindow(self.cfg)
         if cache is None and self.cfg.cache_capacity > 0:
@@ -59,7 +83,7 @@ class EnsembleServer:
         self.cache = cache
         self._unsubscribe = (cache.attach(registry) if cache is not None
                              else None)
-        self.evaluator = BatchEvaluator(registry, interpret=interpret,
+        self.evaluator = BatchEvaluator(registry, policy=self.policy,
                                         cache=cache)
         self.metrics = metrics or ServeMetrics()
         self.service_model = service_model
@@ -151,14 +175,17 @@ class ShardedEnsembleServer:
 
     def __init__(self, cluster, cfg: Optional[BatchConfig] = None, *,
                  service_model: Optional[Callable[[int], float]] = None,
+                 policy: Optional[KernelPolicy] = None,
                  interpret: Optional[bool] = None):
         self.cluster = cluster
         self.cfg = cfg or BatchConfig()
+        self.policy = _interpret_shim(policy, interpret,
+                                      "ShardedEnsembleServer")
         rids = itertools.count()         # one id space across the fleet
         self.servers: dict = {
             hid: EnsembleServer(host.registry, self.cfg,
                                 service_model=service_model,
-                                interpret=interpret, rid_counter=rids)
+                                policy=self.policy, rid_counter=rids)
             for hid, host in cluster.hosts.items()}
 
     def server_for(self, tenant: str) -> Optional[EnsembleServer]:

@@ -1,0 +1,120 @@
+"""Backend parity: every public kernel must produce identical
+(atol-bounded) outputs on every *available* dispatch backend, asserted
+against the kernels/ref.py oracles — including the padded/ragged shapes
+exercised by test_vote_padding.py.  On CPU this covers 'interpret' and
+'xla'; on TPU 'mosaic' joins the matrix automatically.
+
+Deliberately hypothesis-free: this coverage must run even in containers
+without the property-testing extras."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dispatch import available_backends
+
+BACKENDS = available_backends()
+
+
+def _assert_close(got, want, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=atol)
+
+
+# ------------------------------------------------------------- stump_scan
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("N,F,T", [(50, 5, 6), (256, 8, 8), (300, 17, 9)])
+def test_stump_scan_parity(backend, N, F, T):
+    k = jax.random.split(jax.random.key(N + F + T), 4)
+    x = jax.random.normal(k[0], (N, F))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    w = jax.nn.softmax(jax.random.normal(k[2], (N,)))
+    thr = jnp.sort(jax.random.normal(k[3], (F, T)), axis=1)
+    got = ops.stump_scan(x, y, w, thr, backend=backend)
+    _assert_close(got, ref.stump_scan_ref(x, y, w, thr))
+
+
+# ------------------------------------------------------- vote family (2-D)
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("T,N", [(1, 1), (7, 100), (130, 513)])
+def test_ensemble_vote_parity(backend, T, N):
+    k = jax.random.split(jax.random.key(T * N), 2)
+    m = jnp.sign(jax.random.normal(k[0], (T, N)))
+    a = jax.random.normal(k[1], (T,))
+    got = ops.ensemble_vote(m, a, backend=backend)
+    _assert_close(got, ref.ensemble_vote_ref(m, a))
+
+
+# --------------------------------------------------- batched serving votes
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("B,T,N", [(1, 1, 1), (2, 37, 100), (4, 129, 513)])
+def test_ensemble_vote_batched_parity(backend, B, T, N):
+    k = jax.random.split(jax.random.key(B * T * N), 2)
+    m = jnp.sign(jax.random.normal(k[0], (B, T, N)))
+    a = jax.random.normal(k[1], (B, T))
+    got = ops.ensemble_vote_batched(m, a, backend=backend)
+    assert got.shape == (B, N)
+    _assert_close(got, ref.ensemble_vote_batched_ref(m, a))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("B,T,N", [(1, 5, 40), (2, 77, 333)])
+def test_stump_vote_batched_parity(backend, B, T, N):
+    k = jax.random.split(jax.random.key(B + T + N), 4)
+    xsel = jax.random.normal(k[0], (B, T, N))
+    thr = jax.random.normal(k[1], (B, T))
+    pol = jnp.sign(jax.random.normal(k[2], (B, T)) + 0.1)
+    a = jax.random.normal(k[3], (B, T))
+    got = ops.stump_vote_batched(xsel, thr, pol, a, backend=backend)
+    assert got.shape == (B, N)
+    _assert_close(got, ref.stump_vote_batched_ref(xsel, thr, pol, a))
+
+
+# --------------------------------------------------------- flash_attention
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("T,d,causal", [(64, 32, True), (128, 128, False)])
+def test_flash_attention_parity(backend, T, d, causal):
+    k = jax.random.split(jax.random.key(T + d), 3)
+    q = jax.random.normal(k[0], (1, 2, T, d), jnp.float32)
+    kk = jax.random.normal(k[1], (1, 2, T, d), jnp.float32)
+    v = jax.random.normal(k[2], (1, 2, T, d), jnp.float32)
+    got = ops.flash_attention(q, kk, v, causal=causal, backend=backend)
+    _assert_close(got, ref.flash_attention_ref(q, kk, v, causal=causal),
+                  atol=2e-4)
+
+
+# ------------------------------------------------------------- dist_update
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("N", [100, 1024, 1500])
+def test_dist_update_parity(backend, N):
+    k = jax.random.split(jax.random.key(N), 3)
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    got_D, got_Z = ops.dist_update(0.7, D, y, h, backend=backend)
+    want_D, want_Z = ref.dist_update_ref(0.7, D, y, h)
+    _assert_close(got_D, want_D, atol=1e-6)
+    assert float(got_Z) == pytest.approx(float(want_Z), rel=1e-5)
+    assert float(jnp.sum(got_D)) == pytest.approx(1.0, abs=1e-5)
+
+
+# ------------------------------------------- cross-backend agreement (all)
+
+def test_all_backends_agree_on_ragged_vote():
+    """Pairwise agreement (not just vs ref) on a ragged batched case."""
+    B, T, N = 3, 41, 207
+    k = jax.random.split(jax.random.key(7), 2)
+    m = jnp.sign(jax.random.normal(k[0], (B, T, N)))
+    a = jax.random.normal(k[1], (B, T))
+    outs = {be: np.asarray(ops.ensemble_vote_batched(m, a, backend=be))
+            for be in BACKENDS}
+    base = outs[BACKENDS[0]]
+    for be, out in outs.items():
+        np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{be} vs {BACKENDS[0]}")

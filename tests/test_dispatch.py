@@ -1,0 +1,198 @@
+"""Kernel-backend dispatch: resolution order, shape bucketing, the
+calibration table round-trip, the deprecated interpret shim, and per-call
+re-resolution in the serving evaluator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dispatch import (
+    ENV_VAR, KernelPolicy, bucket_of, canonical, on_tpu, platform_default)
+
+
+def _vote_case(T=9, N=33, seed=0):
+    k = jax.random.split(jax.random.key(seed), 2)
+    m = jnp.sign(jax.random.normal(k[0], (T, N)))
+    a = jax.random.normal(k[1], (T,))
+    return m, a
+
+
+# -------------------------------------------------------- resolution order
+
+def test_resolution_priority_chain(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    bucket = (8, 128)
+    # platform default at the bottom
+    pol = KernelPolicy()
+    assert pol.resolve_name("ensemble_vote", bucket) == platform_default()
+    # calibration table beats platform default
+    pol.record("ensemble_vote", bucket, "xla")
+    assert pol.resolve_name("ensemble_vote", bucket) == "xla"
+    # env var beats the table
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert pol.resolve_name("ensemble_vote", bucket) == "interpret"
+    # forced policy backend beats env
+    forced = KernelPolicy(backend="xla")
+    assert forced.resolve_name("ensemble_vote", bucket) == "xla"
+    # explicit per-call arg beats everything
+    assert forced.resolve_name("ensemble_vote", bucket,
+                               explicit="interpret") == "interpret"
+
+
+@pytest.mark.skipif(on_tpu(), reason="CPU-only fallback semantics")
+def test_unavailable_backend_falls_through(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    pol = KernelPolicy()
+    with pytest.warns(RuntimeWarning, match="unavailable"):
+        name = pol.resolve_name("ensemble_vote", (8, 128),
+                                explicit="mosaic")
+    assert name == "interpret"
+    # a mosaic-calibrated table degrades gracefully off-TPU too
+    pol2 = KernelPolicy(table={("ensemble_vote", (8, 128)): "mosaic"})
+    with pytest.warns(RuntimeWarning):
+        assert pol2.resolve_name("ensemble_vote", (8, 128)) == "interpret"
+
+
+def test_env_change_takes_effect_without_rebuild(monkeypatch):
+    """The dispatch cache must never pin a stale env-driven choice."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    pol = KernelPolicy()
+    m, a = _vote_case()
+    bucket = bucket_of("ensemble_vote", (m, a))
+    ops.ensemble_vote(m, a, policy=pol)
+    assert pol.choices[("ensemble_vote", bucket)] == platform_default()
+    monkeypatch.setenv(ENV_VAR, "xla")
+    ops.ensemble_vote(m, a, policy=pol)
+    assert pol.choices[("ensemble_vote", bucket)] == "xla"
+
+
+def test_platform_change_not_masked_by_dispatch_cache(monkeypatch):
+    """A TPU hot-attach re-steers cached (kernel, bucket) resolutions: the
+    cache key includes the live platform, never pinning a stale choice."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    import jax as _jax
+    pol = KernelPolicy()
+    bucket = (8, 128)
+    monkeypatch.setattr(_jax, "default_backend", lambda: "cpu")
+    assert pol.resolve("ensemble_vote", bucket).name == "interpret"
+    monkeypatch.setattr(_jax, "default_backend", lambda: "tpu")
+    assert pol.resolve("ensemble_vote", bucket).name == "mosaic"
+
+
+def test_canonical_names_and_aliases():
+    assert canonical("XLA") == "xla"
+    assert canonical("ref") == "xla"
+    assert canonical("pallas") == "interpret"
+    assert canonical("tpu") == "mosaic"
+    with pytest.raises(KeyError):
+        canonical("cuda")
+
+
+# --------------------------------------------------------------- bucketing
+
+def test_ragged_shapes_share_buckets_and_dispatch_cache(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    # both round up to the same padded kernel shape
+    b1 = bucket_of("ensemble_vote", _vote_case(T=5, N=90))
+    b2 = bucket_of("ensemble_vote", _vote_case(T=7, N=100))
+    assert b1 == b2
+    assert bucket_of("ensemble_vote", _vote_case(T=9, N=300)) != b1
+    pol = KernelPolicy()
+    ops.ensemble_vote(*_vote_case(T=5, N=90), policy=pol)
+    hits0 = pol.cache_hits
+    ops.ensemble_vote(*_vote_case(T=7, N=100), policy=pol)
+    assert pol.cache_hits == hits0 + 1
+
+
+def test_batched_bucket_tracks_padded_dims():
+    m = jnp.zeros((3, 37, 100))
+    a = jnp.zeros((3, 37))
+    assert bucket_of("ensemble_vote_batched", (m, a)) == (4, 64, 128)
+
+
+# ------------------------------------------------------------- calibration
+
+def test_calibration_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    pol = KernelPolicy()
+    m, a = _vote_case(T=6, N=50)
+    bucket, samples = pol.calibrate_call("ensemble_vote", m, a, reps=2)
+    assert bucket == bucket_of("ensemble_vote", (m, a))
+    assert set(samples) and all(len(ts) == 2 for ts in samples.values())
+    winner = pol.table[("ensemble_vote", bucket)]
+    assert winner in samples
+    path = pol.save(str(tmp_path / "cal.json"))
+    loaded = KernelPolicy.load(path)
+    assert loaded.table == pol.table
+    assert loaded.resolve_name("ensemble_vote", bucket) == winner
+    # an uncalibrated bucket still falls back to the platform default
+    assert loaded.resolve_name("ensemble_vote", (1024, 4096)) == \
+        platform_default()
+
+
+# ------------------------------------------------------- deprecated shims
+
+def test_ops_interpret_shim_warns_and_matches():
+    m, a = _vote_case()
+    with pytest.warns(DeprecationWarning, match="interpret"):
+        got = ops.ensemble_vote(m, a, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.ensemble_vote_ref(m, a)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_server_interpret_shim_warns():
+    from repro.serve import BatchConfig, EnsembleRegistry, EnsembleServer
+    from repro.serve.engine import BatchEvaluator
+    reg = EnsembleRegistry()
+    with pytest.warns(DeprecationWarning):
+        srv = EnsembleServer(reg, BatchConfig(), interpret=True)
+    assert srv.policy.backend == "interpret"
+    with pytest.warns(DeprecationWarning):
+        ev = BatchEvaluator(reg, interpret=True)
+    assert ev._backend_override == "interpret"
+
+
+def test_server_interpret_shim_outranks_policy():
+    """Like the explicit arg it replaces, the deprecated bool pins the
+    backend even when a (e.g. calibration) policy is passed alongside —
+    the policy's table survives, its resolution is overridden."""
+    from repro.serve import BatchConfig, EnsembleRegistry, EnsembleServer
+    reg = EnsembleRegistry()
+    cal = KernelPolicy(table={("ensemble_vote", (8, 128)): "xla"})
+    with pytest.warns(DeprecationWarning):
+        srv = EnsembleServer(reg, BatchConfig(), policy=cal, interpret=True)
+    assert srv.policy.backend == "interpret"
+    assert srv.policy.table == cal.table
+
+
+# -------------------------------------- serving evaluator re-resolution fix
+
+def test_evaluator_reresolves_backend_per_call(monkeypatch):
+    """A policy/env change after construction must steer the very next
+    evaluate() — nothing about the backend is captured at build time."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    from repro.serve import EnsembleRegistry
+    from repro.serve.batching import Request
+    from repro.serve.engine import BatchEvaluator
+    rng = np.random.RandomState(0)
+    reg = EnsembleRegistry()
+    params = np.zeros((4, 4), np.float32)
+    params[:, 0] = rng.randint(0, 6, size=4)
+    params[:, 1] = rng.randn(4)
+    params[:, 2] = 1.0
+    reg.publish_packed("t", jnp.asarray(params),
+                       jnp.ones((4,), jnp.float32), clock=0.0)
+    pol = KernelPolicy()
+    ev = BatchEvaluator(reg, policy=pol)
+    batch = [Request(rid=0, tenant="t", x=rng.randn(6).astype(np.float32),
+                     t_submit=0.0)]
+    r1 = ev.evaluate(batch)
+    (bucket,) = [b for (k, b) in pol.choices if k == "stump_vote_batched"]
+    assert pol.choices[("stump_vote_batched", bucket)] == platform_default()
+    monkeypatch.setenv(ENV_VAR, "xla")
+    r2 = ev.evaluate(batch)
+    assert pol.choices[("stump_vote_batched", bucket)] == "xla"
+    # and the two backends served identical margins
+    assert r1[0].margin == pytest.approx(r2[0].margin, abs=1e-5)
