@@ -1,0 +1,177 @@
+"""Closed-loop fleet-autoscaling benchmark: a queue-pressure-autoscaled
+sharded fleet vs a fixed-size fleet, swept over bursty arrival rates.
+
+Both fleets serve the identical bursty Poisson trace (3x nominal rate
+on-phase, 0.1x off-phase) against the same rendezvous-sharded cluster
+under a simulated clock with the analytic batch service-time model
+``c0 + c1*n`` — the regime where a host is a genuine unit of capacity, so
+membership is the knob that moves p99 and shed load.  Ensembles are
+synthetic packed stumps: the capacity-control question is independent of
+how the ensembles were trained, and a hermetic registry keeps the A/B
+free of training noise (the serve-side hand-off path itself is exercised
+by ``benchmarks/serving_load`` and ``shard_gossip``).
+
+* ``fixed``      — ``ShardedEnsembleServer`` over ``min_hosts`` hosts;
+* ``autoscaled`` — the same server driven by :class:`FleetAutoscaler`
+  (eq.-(1) controller on the negated integrated queue/p99 pressure),
+  free to grow to ``max_hosts`` and to drain back down.
+
+Acceptance (asserted): the autoscaled fleet beats the fixed fleet on p99
+latency (at comparable completed traffic) **or** on rejection rate at
+two or more of the three load levels, and no accepted request is ever
+lost across the membership churn (completed == accepted, rids unique).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import (AutoscaleConfig, BatchConfig, FleetAutoscaler,
+                         GossipConfig, ShardCluster, ShardedEnsembleServer)
+
+# batch service-time model: fixed dispatch overhead + per-request cost
+SERVICE_C0 = 1.2e-3
+SERVICE_C1 = 8.0e-4
+
+N_TENANTS = 8
+MIN_HOSTS = 2
+MAX_HOSTS = 8
+
+BATCH = BatchConfig(queue_budget=64, max_batch=16, target_p99_s=0.05)
+AUTOSCALE = AutoscaleConfig(min_hosts=MIN_HOSTS, max_hosts=MAX_HOSTS,
+                            target_queue=16.0, target_p99_s=0.10,
+                            adapt_every_s=0.02, step_down=0.1)
+
+
+def service_model(n: int) -> float:
+    return SERVICE_C0 + SERVICE_C1 * n
+
+
+def build_cluster(n_hosts: int, tenants: Sequence[str], seed: int,
+                  T: int = 24, F: int = 16) -> ShardCluster:
+    """A converged cluster holding one synthetic stump ensemble per tenant."""
+    cluster = ShardCluster(n_hosts, GossipConfig(seed=seed))
+    rng = np.random.RandomState(seed)
+    for tenant in tenants:
+        params = np.zeros((T, 4), np.float32)
+        params[:, 0] = rng.randint(0, F, size=T)
+        params[:, 1] = rng.randn(T)
+        params[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+        alphas = (rng.rand(T) + 0.1).astype(np.float32)
+        cluster.publish_packed(tenant, jnp.asarray(params),
+                               jnp.asarray(alphas))
+    cluster.run_until_quiescent()
+    return cluster
+
+
+def gen_arrivals(tenants: Sequence[str], rate: float, duration_s: float,
+                 seed: int, F: int = 16
+                 ) -> List[Tuple[float, str, np.ndarray]]:
+    """Bursty Poisson trace, same shape as ``benchmarks/serving_load``."""
+    rng = np.random.RandomState(seed)
+    out: List[Tuple[float, str, np.ndarray]] = []
+    t = 0.0
+    while t < duration_s:
+        lam = rate * (3.0 if (t % 0.5) < 0.25 else 0.1)
+        t += rng.exponential(1.0 / max(lam, 1e-9))
+        if t >= duration_s:
+            break
+        out.append((t, tenants[rng.randint(len(tenants))],
+                    rng.randn(F).astype(np.float32)))
+    return out
+
+
+def run_fleet(arrivals, seed: int, autoscale: bool) -> Dict:
+    tenants = [f"tenant-{i}" for i in range(N_TENANTS)]
+    cluster = build_cluster(MIN_HOSTS, tenants, seed=seed)
+    server = ShardedEnsembleServer(cluster, BATCH,
+                                   service_model=service_model)
+    scaler = FleetAutoscaler(server, AUTOSCALE) if autoscale else None
+    accepted = 0
+    rids: List[int] = []
+    for t, tenant, x in arrivals:
+        ok, out = server.submit(tenant, x, t)
+        accepted += ok
+        rids.extend(r.rid for r in out)
+        if scaler is not None:
+            rids.extend(r.rid for r in scaler.step(t))
+    rids.extend(r.rid for r in server.drain())
+
+    # zero-loss invariant: every accepted request answered exactly once,
+    # through every scale-out warm-up and scale-in drain
+    if len(rids) != accepted or len(set(rids)) != len(rids):
+        raise AssertionError(
+            f"request loss under churn: accepted={accepted} "
+            f"answered={len(rids)} unique={len(set(rids))}")
+
+    rep = server.report()
+    row = {
+        "fleet": "autoscaled" if autoscale else "fixed",
+        "completed": rep["completed"], "rejected": rep["rejected"],
+        "p50_ms": rep["p50_ms"], "p99_ms": rep["p99_ms"],
+        "throughput_rps": rep["throughput_rps"],
+        "hosts_final": len(server.servers),
+        "scale_outs": scaler.stats.scale_outs if scaler else 0,
+        "scale_ins": scaler.stats.scale_ins if scaler else 0,
+        "rerouted": scaler.stats.rerouted if scaler else 0,
+    }
+    offered = row["completed"] + row["rejected"]
+    row["rej_rate"] = row["rejected"] / offered if offered else 0.0
+    return row
+
+
+def _beats(auto: Dict, fixed: Dict) -> bool:
+    """Autoscaling wins a load level on shed load or on tail latency."""
+    if fixed["rej_rate"] > 0.01 and auto["rej_rate"] < 0.8 * fixed["rej_rate"]:
+        return True
+    comparable = auto["completed"] >= 0.98 * fixed["completed"]
+    return comparable and auto["p99_ms"] < 0.95 * fixed["p99_ms"]
+
+
+def main(quick: bool = False, seed: int = 0) -> List[Dict]:
+    duration = 1.5 if quick else 3.0
+    rates = (300.0, 900.0, 1800.0)
+    tenants = [f"tenant-{i}" for i in range(N_TENANTS)]
+
+    print("=" * 86)
+    print(f"fleet autoscaling — eq.-(1) pressure controller "
+          f"({MIN_HOSTS}..{MAX_HOSTS} hosts) vs fixed {MIN_HOSTS}-host fleet")
+    print("=" * 86)
+    hdr = (f"{'rate':>6} {'fleet':<11} {'done':>6} {'rej':>6} {'rej%':>6} "
+           f"{'p50 ms':>8} {'p99 ms':>8} {'hosts':>5} {'out/in':>7}")
+    print(hdr)
+    print("-" * 86)
+
+    rows: List[Dict] = []
+    wins = []
+    for rate in rates:
+        arrivals = gen_arrivals(tenants, rate, duration, seed)
+        pair = {}
+        for autoscale in (False, True):
+            row = run_fleet(arrivals, seed=seed, autoscale=autoscale)
+            row["rate"] = rate
+            pair[row["fleet"]] = row
+            rows.append(row)
+            print(f"{rate:>6.0f} {row['fleet']:<11} {row['completed']:>6} "
+                  f"{row['rejected']:>6} {100 * row['rej_rate']:>5.1f}% "
+                  f"{row['p50_ms']:>8.2f} {row['p99_ms']:>8.2f} "
+                  f"{row['hosts_final']:>5} "
+                  f"{row['scale_outs']:>3}/{row['scale_ins']:<3}", flush=True)
+        if _beats(pair["autoscaled"], pair["fixed"]):
+            wins.append(rate)
+    print("-" * 86)
+    print(f"autoscaled beats fixed on p99 or rejection rate at "
+          f"{len(wins)}/{len(rates)} load levels: "
+          f"{', '.join(f'{w:.0f} rps' for w in wins) or '—'}")
+    assert len(wins) * 3 >= 2 * len(rates), (
+        f"autoscaling won only {len(wins)}/{len(rates)} load levels")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

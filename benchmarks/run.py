@@ -22,10 +22,11 @@ def main() -> None:
     seeds = (0,) if args.quick else (0, 1, 2)
     n_rounds = 20 if args.quick else 30
 
-    from benchmarks import (backend_matrix, controller_compare, domains,
-                            fedavg_compare, kernel_bench, multipod_compare,
-                            relevance_filter, roofline, scheduler_ablation,
-                            serving_load, shard_gossip, staleness)
+    from benchmarks import (autoscale_load, backend_matrix,
+                            controller_compare, domains, fedavg_compare,
+                            kernel_bench, multipod_compare, relevance_filter,
+                            roofline, scheduler_ablation, serving_load,
+                            shard_gossip, staleness)
 
     # the single benchmark registry: name -> thunk, in run order
     benches = {
@@ -49,6 +50,8 @@ def main() -> None:
         "serving_load": lambda: serving_load.main(quick=args.quick),
         # sharded registry: gossip convergence + result-cache p99 A/B
         "shard_gossip": lambda: shard_gossip.main(quick=args.quick),
+        # fleet autoscaling: eq.-(1) pressure controller vs fixed fleet
+        "autoscale_load": lambda: autoscale_load.main(quick=args.quick),
         # kernel x backend x shape-bucket wall-clock + calibration table
         "backend_matrix": lambda: backend_matrix.main(quick=args.quick),
         # per-kernel microbench rows (not wall-timed by the harness)
@@ -90,6 +93,12 @@ def main() -> None:
             f"p99={r['p99_ms']:.2f}ms;hit={r['hit_rate']:.2f};"
             f"identical={int(r['identical_predictions'])};"
             f"lag={r['mean_lag_rounds']:.1f}r"))
+    for r in results.get("autoscale_load", []):
+        csv_rows.append((
+            f"autoscale_{r['fleet']}_{r['rate']:.0f}rps", 0.0,
+            f"p99={r['p99_ms']:.2f}ms;rej={100 * r['rej_rate']:.1f}%;"
+            f"hosts={r['hosts_final']};out={r['scale_outs']};"
+            f"in={r['scale_ins']};rerouted={r['rerouted']}"))
     csv_rows.extend(results.get("backend_matrix", []))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")

@@ -251,7 +251,7 @@ class FederatedBoostEngine:
         pred = jnp.where(self._val_margin > 0, 1.0, -1.0)
         return float(jnp.mean(pred != yv))
 
-    def _client_catch_up(self, c: _Client, entries_since: int) -> None:
+    def _client_catch_up(self, c: _Client) -> None:
         """Apply distribution updates for foreign learners received at sync.
         The client's own learners are skipped — it already applied them
         locally at training time."""
@@ -318,7 +318,7 @@ class FederatedBoostEngine:
             for c in self.clients:
                 m.downlink_bytes += pkg
                 m.n_messages += 1
-                self._client_catch_up(c, delta)
+                self._client_catch_up(c)
             m.n_syncs += 1
             self._maybe_publish(t)
             self._record(t)
@@ -339,12 +339,14 @@ class FederatedBoostEngine:
                 dropped = self.rng.rand() < cfg.dropout_prob
                 e = self._train_one(c)
                 c.clock += self.BASE_ROUND_S * c.speed
-                if dropped:
-                    # stall: the learner stays buffered; client loses time
-                    c.buffer.add(e.params, e.eps, e.alpha, e.round_stamp)
-                    c.clock += self.BASE_ROUND_S * c.speed
-                    continue
                 c.buffer.add(e.params, e.eps, e.alpha, e.round_stamp)
+                if dropped:
+                    # stall: the client loses a round of wall-clock, but the
+                    # dropout stalls the *message*, not the interval rule —
+                    # a drop whose buffered learner fills I_t still syncs
+                    # (after the time penalty) rather than deferring the
+                    # trigger by a whole extra round
+                    c.clock += self.BASE_ROUND_S * c.speed
                 if len(c.buffer) >= c.known_interval:
                     self._push_sync(events, c)
                     return
@@ -372,7 +374,7 @@ class FederatedBoostEngine:
             pkg = delta * 16 + cfg.header_bytes
             m.downlink_bytes += pkg
             m.n_messages += 1
-            self._client_catch_up(c, delta)
+            self._client_catch_up(c)
             c.known_interval = self.scheduler.current
             self._maybe_publish(t)
             self._record(t)

@@ -14,7 +14,10 @@ disables window adaptation for an A/B against a fixed window of N
 milliseconds; ``--kill-owner`` marks the first tenant's owning host down
 halfway through to exercise rendezvous failover onto a gossiped replica;
 ``--backend``/``--calibration`` pin or table-drive the kernel execution
-backend (see README "Execution backends").
+backend (see README "Execution backends"); ``--autoscale MAX`` lets the
+eq.-(1) fleet autoscaler grow/shrink the host count between ``--hosts``
+and MAX on queue-depth/p99 pressure; ``--policy-table JSON`` loads
+per-(tenant, host) batching/kernel policies (README "Fleet autoscaling").
 """
 from __future__ import annotations
 
@@ -27,7 +30,8 @@ from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 from repro.kernels.dispatch import KernelPolicy
-from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
+from repro.serve import (AutoscaleConfig, BatchConfig, FleetAutoscaler,
+                         GossipConfig, PolicyTable, ShardCluster,
                          ShardedEnsembleServer)
 
 
@@ -63,7 +67,10 @@ def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int,
 
 def serve(cluster: ShardCluster, pools, rate: float, duration: float,
           seed: int, fixed_window_ms: float = 0.0, cache_capacity: int = 4096,
-          kill_owner: bool = False, policy=None):
+          kill_owner: bool = False, policy=None, policy_table=None,
+          autoscale_max: int = 0):
+    # the flag-built config composes with a policy table: it becomes the
+    # fleet default the table's host/tenant/pair overrides layer onto
     cfg = (BatchConfig(adaptive=False,
                        fixed_window_units=max(1, int(fixed_window_ms)),
                        cache_capacity=cache_capacity)
@@ -71,7 +78,12 @@ def serve(cluster: ShardCluster, pools, rate: float, duration: float,
            else BatchConfig(cache_capacity=cache_capacity))
     server = ShardedEnsembleServer(
         cluster, cfg, service_model=lambda n: 1.2e-3 + 2.0e-4 * n,
-        policy=policy)
+        policy=policy, policy_table=policy_table)
+    scaler = None
+    if autoscale_max > 0:
+        scaler = FleetAutoscaler(server, AutoscaleConfig(
+            min_hosts=len(cluster.hosts),
+            max_hosts=max(autoscale_max, len(cluster.hosts))))
     tenants = sorted(pools)
     victim = cluster.owner(tenants[0]) if kill_owner else None
     rng = np.random.RandomState(seed)
@@ -91,7 +103,18 @@ def serve(cluster: ShardCluster, pools, rate: float, duration: float,
         tenant = tenants[rng.randint(len(tenants))]
         pool = pools[tenant]
         server.submit(tenant, pool[rng.randint(pool.shape[0])], t)
+        if scaler is not None:
+            scaler.step(t)
     server.drain()
+    if scaler is not None:
+        st = scaler.stats
+        print(f"  autoscaler: {st.scale_outs} scale-out(s), "
+              f"{st.scale_ins} scale-in(s), {st.rerouted} request(s) "
+              f"rerouted, peak pressure {st.pressure_peak:.2f}, "
+              f"final fleet {len(server.servers)} host(s)")
+        for when, action, hid, size in st.events:
+            print(f"    t={when:.2f}s scale-{action:<3} {hid:<10} "
+                  f"-> {size} hosts")
     return server
 
 
@@ -112,6 +135,15 @@ def main() -> None:
                          "(failover demo)")
     ap.add_argument("--fixed-window", type=float, default=0.0,
                     help="fixed batch window in ms (0 = adaptive)")
+    ap.add_argument("--autoscale", type=int, default=0, metavar="MAX",
+                    help="autoscale the fleet between --hosts and MAX "
+                         "hosts on queue-depth/p99 pressure (0 = fixed "
+                         "fleet)")
+    ap.add_argument("--policy-table", default=None, metavar="JSON",
+                    help="per-(tenant, host) batching/kernel policy table "
+                         "(see repro.serve.policy for the JSON shape); "
+                         "the CLI batching flags form the fleet default "
+                         "its host/tenant/pair overrides layer onto")
     ap.add_argument("--backend", default=None,
                     choices=["interpret", "mosaic", "xla"],
                     help="force one kernel backend fleet-wide (default: "
@@ -131,18 +163,27 @@ def main() -> None:
         print(f"loaded calibration table ({len(policy.table)} buckets) "
               f"from {args.calibration}")
 
+    policy_table = None
+    if args.policy_table:
+        policy_table = PolicyTable.load(args.policy_table)
+        print(f"loaded policy table from {args.policy_table}")
+
     cluster = ShardCluster(args.hosts, GossipConfig(seed=args.seed))
     pools = train_tenants(cluster, args.domains, args.rounds, args.seed,
                           policy=policy)
     server = serve(cluster, pools, args.rate, args.duration, args.seed,
                    fixed_window_ms=args.fixed_window,
                    cache_capacity=args.cache, kill_owner=args.kill_owner,
-                   policy=policy)
+                   policy=policy, policy_table=policy_table,
+                   autoscale_max=args.autoscale)
 
     rep = server.report()
     mode = ("adaptive" if args.fixed_window <= 0
             else f"fixed {args.fixed_window:.0f}ms")
-    print(f"\nserving [{mode} window, {args.hosts} hosts] nominal "
+    mode += " window"
+    if args.autoscale > 0:
+        mode += f", autoscaled <= {args.autoscale} hosts"
+    print(f"\nserving [{mode}, {args.hosts} hosts] nominal "
           f"{args.rate:.0f} rps, {args.duration:.1f}s bursty closed loop")
     print(f"  completed {rep['completed']}  rejected {rep['rejected']}  "
           f"throughput {rep['throughput_rps']:.0f} rps")
@@ -154,9 +195,9 @@ def main() -> None:
           f"({cache['hits']} hits, {cache['fills']} fills, "
           f"{cache['invalidated']} invalidated)")
     for hid, h in rep["per_host"].items():
-        up = "up" if server.cluster.hosts[hid].up else "DOWN"
-        print(f"  host {hid:<8} [{up:>4}] served {h['completed']:>6} "
-              f"p99 {h['p99_ms']:>6.2f} ms  batches {h['n_batches']}")
+        print(f"  host {hid:<8} [{h['status']:>7}] served "
+              f"{h['completed']:>6} p99 {h['p99_ms']:>6.2f} ms  "
+              f"batches {h['n_batches']}")
     for name, t in rep["tenants"].items():
         print(f"  tenant {name:<12} served {t['completed']:>5} "
               f"p99 {t['p99_ms']:>6.2f} ms  snapshot v{t['snapshot_version']} "

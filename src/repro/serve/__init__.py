@@ -5,6 +5,9 @@
 # ensemble-vote kernels.  The sharded layer partitions tenants across
 # hosts by rendezvous hashing and replicates snapshots with anti-entropy
 # gossip; the result cache memoizes margins per (tenant, version, x-hash).
+# FleetAutoscaler scales the host count on queue-depth/p99 pressure (the
+# same eq.-1 controller), and PolicyTable resolves batching + kernel
+# policies per (tenant, host).
 from repro.kernels.dispatch import KernelPolicy  # noqa: F401  (re-export:
 # serving components accept policy=KernelPolicy(...) for backend dispatch)
 from repro.serve.registry import (  # noqa: F401
@@ -16,8 +19,11 @@ from repro.serve.cache import (  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     BatchEvaluator, EvalStats, Response)
 from repro.serve.metrics import ServeMetrics, TenantMetrics  # noqa: F401
+from repro.serve.policy import PolicyTable  # noqa: F401
 from repro.serve.service import (  # noqa: F401
     EnsembleServer, ShardedEnsembleServer)
 from repro.serve.shard import (  # noqa: F401
     GossipConfig, GossipStats, ShardCluster, ShardHost,
     rendezvous_owner, rendezvous_rank, staleness_weight)
+from repro.serve.autoscale import (  # noqa: F401
+    AutoscaleConfig, AutoscaleStats, FleetAutoscaler)

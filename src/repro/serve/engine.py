@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -72,9 +72,15 @@ class BatchEvaluator:
     def __init__(self, registry: EnsembleRegistry, *,
                  policy: Optional[KernelPolicy] = None,
                  interpret: Optional[bool] = None,
-                 cache: Optional[ResultCache] = None):
+                 cache: Optional[ResultCache] = None,
+                 policy_for: Optional[
+                     Callable[[str], Optional[KernelPolicy]]] = None):
         self.registry = registry
         self.policy = policy
+        # per-tenant kernel-policy resolver (the PolicyTable path): tenants
+        # resolving to distinct policies are packed into separate kernel
+        # launches; a None resolution falls back to ``policy``.
+        self.policy_for = policy_for
         self._backend_override: Optional[str] = None
         if interpret is not None:
             warnings.warn(
@@ -128,10 +134,10 @@ class BatchEvaluator:
                 (stump_group if snap.weak_name == "stump"
                  else generic_group).append((snap, reqs))
 
-        if stump_group:
-            self._eval_stumps(stump_group, margins)
-        if generic_group:
-            self._eval_generic(generic_group, margins)
+        for pol, sub in self._by_policy(stump_group):
+            self._eval_stumps(sub, margins, pol)
+        for pol, sub in self._by_policy(generic_group):
+            self._eval_generic(sub, margins, pol)
         for rid, src_rid in dupes:              # fan the one margin out
             margins[rid] = margins[src_rid]
         if self.cache is not None:              # fill after the vote
@@ -148,8 +154,43 @@ class BatchEvaluator:
             snapshot_version=versions[r.tenant],
             t_submit=r.t_submit) for r in batch]
 
+    # ------------------------------------------------------ policy grouping
+    def _resolved_policy(self, tenant: str) -> Optional[KernelPolicy]:
+        if self.policy_for is not None:
+            p = self.policy_for(tenant)
+            if p is not None:
+                return p
+        return self.policy
+
+    @staticmethod
+    def _policy_key(pol: Optional[KernelPolicy]):
+        """Value key for launch grouping: two policies that would resolve
+        identically share one packed launch — tenants loaded from a JSON
+        table each get their own KernelPolicy instance, and partitioning
+        by object identity would turn one cross-tenant batch into one
+        kernel launch per tenant."""
+        if pol is None:
+            return None
+        return (pol.backend, pol.env_var, tuple(sorted(pol.table.items())))
+
+    def _by_policy(self, group):
+        """Partition one weak-learner group into per-kernel-policy launches.
+        Without a resolver this is a single launch under ``self.policy`` —
+        the pre-policy-table behavior, bit for bit."""
+        if not group:
+            return []
+        if self.policy_for is None:
+            return [(self.policy, group)]
+        parts: Dict[object, Tuple[Optional[KernelPolicy], list]] = {}
+        for snap, reqs in group:
+            pol = self._resolved_policy(snap.tenant)
+            parts.setdefault(self._policy_key(pol),
+                             (pol, []))[1].append((snap, reqs))
+        return list(parts.values())
+
     # ----------------------------------------------------------- stump path
-    def _eval_stumps(self, group, margins: Dict[int, float]) -> None:
+    def _eval_stumps(self, group, margins: Dict[int, float],
+                     policy: Optional[KernelPolicy]) -> None:
         B = len(group)
         T = max(s.n_learners for s, _ in group)
         N = max(len(reqs) for _, reqs in group)
@@ -168,7 +209,7 @@ class BatchEvaluator:
             alf[b, :t_b] = np.asarray(snap.alphas)
         out = np.asarray(kops.stump_vote_batched(
             jnp.asarray(xsel), jnp.asarray(thr), jnp.asarray(pol),
-            jnp.asarray(alf), policy=self.policy,
+            jnp.asarray(alf), policy=policy,
             backend=self._backend_override))
         for b, (_, reqs) in enumerate(group):
             for n, r in enumerate(reqs):
@@ -180,7 +221,8 @@ class BatchEvaluator:
             self._predict_cache[weak_name] = get_weak_learner(weak_name).predict
         return self._predict_cache[weak_name]
 
-    def _eval_generic(self, group, margins: Dict[int, float]) -> None:
+    def _eval_generic(self, group, margins: Dict[int, float],
+                      policy: Optional[KernelPolicy]) -> None:
         B = len(group)
         T = max(s.n_learners for s, _ in group)
         N = max(len(reqs) for _, reqs in group)
@@ -193,7 +235,7 @@ class BatchEvaluator:
             m[b, :snap.n_learners, :len(reqs)] = np.asarray(stack)
             alf[b, :snap.n_learners] = np.asarray(snap.alphas)
         out = np.asarray(kops.ensemble_vote_batched(
-            jnp.asarray(m), jnp.asarray(alf), policy=self.policy,
+            jnp.asarray(m), jnp.asarray(alf), policy=policy,
             backend=self._backend_override))
         for b, (_, reqs) in enumerate(group):
             for n, r in enumerate(reqs):

@@ -7,18 +7,25 @@ every k-th sample once full) so a long soak doesn't grow memory unboundedly.
 """
 from __future__ import annotations
 
+import math
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 
 def percentile(values: List[float], q: float) -> float:
-    """Nearest-rank percentile (no numpy dependency on the hot path)."""
+    """Nearest-rank percentile (no numpy dependency on the hot path).
+
+    Explicit ceil form: the smallest sample value with at least ``q``\\ % of
+    the sorted sample at or below it, i.e. rank ``ceil(q/100 * n)``
+    (1-based).  An earlier ``int(round(...))`` formulation used banker's
+    rounding, which can land an index off the nearest rank on even-length
+    lists; the behavior is pinned by a table-driven test."""
     if not values:
         return 0.0
     s = sorted(values)
-    idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
-    return s[idx]
+    rank = math.ceil(q / 100.0 * len(s))          # 1-based nearest rank
+    return s[min(len(s) - 1, max(0, rank - 1))]
 
 
 @dataclass

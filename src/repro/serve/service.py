@@ -41,6 +41,7 @@ from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
 from repro.serve.cache import ResultCache
 from repro.serve.engine import BatchEvaluator, Response
 from repro.serve.metrics import ServeMetrics
+from repro.serve.policy import PolicyTable
 from repro.serve.registry import EnsembleRegistry
 
 
@@ -72,11 +73,31 @@ class EnsembleServer:
                  policy: Optional[KernelPolicy] = None,
                  interpret: Optional[bool] = None,
                  cache: Optional[ResultCache] = None,
-                 rid_counter: Optional[Iterator[int]] = None):
+                 rid_counter: Optional[Iterator[int]] = None,
+                 policy_table: Optional[PolicyTable] = None,
+                 host_id: Optional[str] = None):
+        # per-(tenant, host) policies: the host-level slice of the table
+        # supplies this server's own config, the (tenant, host) slice
+        # drives per-tenant admission/batch caps in the queue and
+        # per-tenant kernel policies in the evaluator.  An explicit cfg
+        # passed alongside a table becomes the base the table's override
+        # layers compose onto (with_default), so it is never silently
+        # discarded.
+        if cfg is not None and policy_table is not None:
+            policy_table = policy_table.with_default(cfg)
+        self.policy_table = policy_table
+        self.host_id = host_id
+        if policy_table is not None:
+            cfg = policy_table.batch_for(host=host_id)
         self.cfg = cfg or BatchConfig()
         self.registry = registry
         self.policy = _interpret_shim(policy, interpret, "EnsembleServer")
-        self.queue = MicroBatchQueue(self.cfg, rid_counter)
+        tenant_cfg = policy_for = None
+        if policy_table is not None:
+            tenant_cfg = lambda t: policy_table.batch_for(t, host_id)
+            policy_for = lambda t: policy_table.kernel_for(t, host_id)
+        self.queue = MicroBatchQueue(self.cfg, rid_counter,
+                                     tenant_cfg=tenant_cfg)
         self.window = AdaptiveWindow(self.cfg)
         if cache is None and self.cfg.cache_capacity > 0:
             cache = ResultCache(self.cfg.cache_capacity)
@@ -84,9 +105,10 @@ class EnsembleServer:
         self._unsubscribe = (cache.attach(registry) if cache is not None
                              else None)
         self.evaluator = BatchEvaluator(registry, policy=self.policy,
-                                        cache=cache)
+                                        cache=cache, policy_for=policy_for)
         self.metrics = metrics or ServeMetrics()
         self.service_model = service_model
+        self.on_completion: Optional[Callable[[float], None]] = None
         self._busy_until = -math.inf     # single server: one batch in flight
 
     # ------------------------------------------------------------- intake
@@ -153,6 +175,8 @@ class EnsembleServer:
         for r in responses:
             latency = finish - r.t_submit
             self.window.record(latency)
+            if self.on_completion is not None:   # autoscaler pressure feed
+                self.on_completion(latency)
             self.metrics.record_completion(
                 r.tenant, latency,
                 staleness_s=self.registry.staleness(r.tenant, finish),
@@ -170,34 +194,128 @@ class ShardedEnsembleServer:
     rendezvous rank, which serves the tenant from its gossiped replica —
     the whole point of anti-entropy dissemination.  Requests are rejected
     (``accepted=False``) only when every host is down or the routed host's
-    admission control pushes back.
+    admission control pushes back; a total-outage shed is charged to the
+    fleet-level metrics (there is no host to charge), so the report never
+    undercounts rejected load.
+
+    Membership is elastic: :meth:`add_host` grows the fleet behind a
+    gossip-warmed replica and :meth:`remove_host` drains a victim without
+    dropping any accepted request — the
+    :class:`~repro.serve.autoscale.FleetAutoscaler` drives both from the
+    queue-depth/p99 pressure signal.  A :class:`PolicyTable` makes batching
+    and kernel policies resolve per (tenant, host).
     """
 
     def __init__(self, cluster, cfg: Optional[BatchConfig] = None, *,
                  service_model: Optional[Callable[[int], float]] = None,
                  policy: Optional[KernelPolicy] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 policy_table: Optional[PolicyTable] = None):
         self.cluster = cluster
+        # an explicit cfg composes with the table (it becomes the fleet
+        # default the override layers stack onto) instead of being
+        # silently discarded
+        if cfg is not None and policy_table is not None:
+            policy_table = policy_table.with_default(cfg)
+        self.policy_table = policy_table
+        if cfg is None and policy_table is not None:
+            cfg = policy_table.batch_for()       # fleet-wide default slice
         self.cfg = cfg or BatchConfig()
         self.policy = _interpret_shim(policy, interpret,
                                       "ShardedEnsembleServer")
-        rids = itertools.count()         # one id space across the fleet
-        self.servers: dict = {
-            hid: EnsembleServer(host.registry, self.cfg,
-                                service_model=service_model,
-                                policy=self.policy, rid_counter=rids)
-            for hid, host in cluster.hosts.items()}
+        self.service_model = service_model
+        self._rids = itertools.count()   # one id space across the fleet
+        # fleet-level counters for load shed before any host is reached
+        # (total outage): there is no per-host server to charge it to
+        self.metrics = ServeMetrics()
+        # scaled-in hosts live on in the report as (id, metrics, cache
+        # stats) — not whole servers, so churn doesn't accrete evaluators
+        # and cache contents for the fleet's lifetime
+        self._retired: List[Tuple[str, ServeMetrics, Optional[object]]] = []
+        self.servers: dict = {hid: self._make_server(hid)
+                              for hid in cluster.hosts}
+
+    def _make_server(self, host_id: str) -> EnsembleServer:
+        # self.policy_table already has any explicit cfg folded in as its
+        # default, so the host server resolves per-host config from it;
+        # without a table, the fleet cfg applies verbatim
+        cfg = None if self.policy_table is not None else self.cfg
+        return EnsembleServer(self.cluster.hosts[host_id].registry, cfg,
+                              service_model=self.service_model,
+                              policy=self.policy, rid_counter=self._rids,
+                              policy_table=self.policy_table,
+                              host_id=host_id)
 
     def server_for(self, tenant: str) -> Optional[EnsembleServer]:
         host = self.cluster.route(tenant)
         return self.servers[host.host_id] if host else None
 
+    def host_id_taken(self, host_id: str) -> bool:
+        """True if ``host_id`` is live, in the cluster, or retired —
+        everything :meth:`add_host` would refuse (an id generator probes
+        this instead of crashing on its first collision)."""
+        return (host_id in self.servers or host_id in self.cluster.hosts
+                or any(hid == host_id for hid, *_ in self._retired))
+
     def submit(self, tenant: str, x, now: float
                ) -> Tuple[bool, List[Response]]:
         server = self.server_for(tenant)
         if server is None:                     # total outage: shed the load
+            self.metrics.record_rejected(tenant)
             return False, []
         return server.submit(tenant, x, now)
+
+    # ---------------------------------------------------------- membership
+    def add_host(self, host_id: str, now: float = 0.0) -> EnsembleServer:
+        """Scale-out: the cluster spins up a replica that warms via a
+        gossip pull *before* it enters the rendezvous ring, then a fresh
+        per-host server joins the fleet rid space.  A retired id cannot be
+        reused — the fleet report keys per-host rows by id forever."""
+        if any(hid == host_id for hid, *_ in self._retired):
+            raise ValueError(
+                f"host id {host_id!r} was scaled in earlier; retired ids "
+                "stay reserved in the fleet report — pick a fresh id")
+        self.cluster.add_host(host_id, now=now)
+        server = self._make_server(host_id)
+        self.servers[host_id] = server
+        return server
+
+    def remove_host(self, host_id: str, now: float = 0.0
+                    ) -> Tuple[List[Response], int]:
+        """Scale-in: dispatch the victim's due batches, reroute its residual
+        queue along rendezvous rank onto surviving hosts (admission
+        bypassed — those requests were already accepted), hand its registry
+        window to a survivor, then drop the host.  Its metrics and cache
+        counters stay in the fleet report.  Returns ``(responses, n)``:
+        the drain-dispatched responses and the rerouted-request count."""
+        victim = self.servers[host_id]
+        if len(self.cluster.hosts) <= 1:
+            raise ValueError(
+                f"cannot scale in {host_id!r}: it is the cluster's last "
+                "host (its registry window has nowhere to go)")
+        others_up = any(h.up for hid, h in self.cluster.hosts.items()
+                        if hid != host_id)
+        if not others_up and len(victim.queue):
+            raise ValueError(
+                f"cannot scale in {host_id!r}: no surviving up host to "
+                "take its queued requests")
+        was_up = self.cluster.hosts[host_id].up
+        del self.servers[host_id]
+        self.cluster.mark_down(host_id)      # routing now skips the victim
+        # a live victim dispatches what is already due before handing the
+        # rest over; a host that was down was not serving — everything it
+        # still holds reroutes rather than being "served" by a dead host
+        responses = victim.advance(now) if was_up else []
+        rerouted = 0
+        for req in victim.queue.pop_all():
+            target = self.server_for(req.tenant)
+            target.queue.requeue(req)
+            rerouted += 1
+        victim.close()
+        self._retired.append((host_id, victim.metrics,
+                              victim.cache.stats if victim.cache else None))
+        self.cluster.remove_host(host_id, now=now)
+        return responses, rerouted
 
     def advance(self, now: float) -> List[Response]:
         out: List[Response] = []
@@ -216,14 +334,26 @@ class ShardedEnsembleServer:
             s.close()
 
     # -------------------------------------------------------------- report
+    def _all_metrics(self) -> List[Tuple[str, str, ServeMetrics]]:
+        """(host_id, status, metrics) for live and scaled-in hosts alike —
+        a retired host's traffic must stay in the fleet totals."""
+        out = []
+        for hid, s in self.servers.items():
+            host = self.cluster.hosts.get(hid)
+            status = "up" if (host is not None and host.up) else "down"
+            out.append((hid, status, s.metrics))
+        out.extend((hid, "retired", m) for hid, m, _ in self._retired)
+        return out
+
     def cache_stats(self) -> dict:
-        """Fleet-wide result-cache counters summed over hosts."""
+        """Fleet-wide result-cache counters summed over hosts (scaled-in
+        hosts included)."""
         agg = {"hits": 0, "misses": 0, "fills": 0, "invalidated": 0,
                "evicted": 0}
-        for s in self.servers.values():
-            if s.cache is None:
-                continue
-            st = s.cache.stats
+        stats = [s.cache.stats for s in self.servers.values()
+                 if s.cache is not None]
+        stats.extend(st for _, _, st in self._retired if st is not None)
+        for st in stats:
             agg["hits"] += st.hits
             agg["misses"] += st.misses
             agg["fills"] += st.fills
@@ -234,32 +364,42 @@ class ShardedEnsembleServer:
         return agg
 
     def report(self) -> dict:
-        """Merged fleet report plus the per-host breakdown."""
+        """Merged fleet report plus the per-host breakdown.  Merges the
+        per-host :class:`ServeMetrics` (per-tenant reservoirs concatenated,
+        ``last_version`` by max, histograms/counters summed, makespan by
+        min-submit/max-finish) plus the fleet-level counters (total-outage
+        rejections) across up, down, and scaled-in hosts."""
         merged = ServeMetrics()
         per_host = {}
-        for hid, s in self.servers.items():
-            rep = s.metrics.report()
+        for hid, status, m in self._all_metrics():
+            rep = m.report()
+            rep["status"] = status
             per_host[hid] = rep
-            for name, t in s.metrics.tenants.items():
-                mt = merged.tenant(name)
-                mt.completed += t.completed
-                mt.rejected += t.rejected
-                mt.latencies.extend(t.latencies)
-                mt.staleness_sum += t.staleness_sum
-                mt.last_version = max(mt.last_version, t.last_version)
-            merged.batch_size_hist.update(s.metrics.batch_size_hist)
-            merged.window_units_hist.update(s.metrics.window_units_hist)
-            merged.n_batches += s.metrics.n_batches
-            merged.queue_depth_peak = max(merged.queue_depth_peak,
-                                          s.metrics.queue_depth_peak)
-            t0, t1 = s.metrics.first_submit_t, s.metrics.last_finish_t
-            if t0 is not None:
-                merged.first_submit_t = (t0 if merged.first_submit_t is None
-                                         else min(merged.first_submit_t, t0))
-            if t1 is not None:
-                merged.last_finish_t = (t1 if merged.last_finish_t is None
-                                        else max(merged.last_finish_t, t1))
+            self._merge_into(merged, m)
+        self._merge_into(merged, self.metrics)   # outage shed, no host
         rep = merged.report()
         rep["per_host"] = per_host
         rep["cache"] = self.cache_stats()
         return rep
+
+    @staticmethod
+    def _merge_into(merged: ServeMetrics, m: ServeMetrics) -> None:
+        for name, t in m.tenants.items():
+            mt = merged.tenant(name)
+            mt.completed += t.completed
+            mt.rejected += t.rejected
+            mt.latencies.extend(t.latencies)
+            mt.staleness_sum += t.staleness_sum
+            mt.last_version = max(mt.last_version, t.last_version)
+        merged.batch_size_hist.update(m.batch_size_hist)
+        merged.window_units_hist.update(m.window_units_hist)
+        merged.n_batches += m.n_batches
+        merged.queue_depth_peak = max(merged.queue_depth_peak,
+                                      m.queue_depth_peak)
+        t0, t1 = m.first_submit_t, m.last_finish_t
+        if t0 is not None:
+            merged.first_submit_t = (t0 if merged.first_submit_t is None
+                                     else min(merged.first_submit_t, t0))
+        if t1 is not None:
+            merged.last_finish_t = (t1 if merged.last_finish_t is None
+                                    else max(merged.last_finish_t, t1))

@@ -134,6 +134,49 @@ class ShardCluster:
     def mark_up(self, host_id: str) -> None:
         self.hosts[host_id].up = True
 
+    # ------------------------------------------------- elastic membership
+    def add_host(self, host_id: str, now: float = 0.0) -> ShardHost:
+        """Scale-out: create a replica and *warm* it with an anti-entropy
+        pull before it enters the rendezvous ring.  The new host stays
+        ``up=False`` while warming, so ownership/routing never select a
+        cold replica; rendezvous hashing guarantees that flipping it up
+        only moves the tenants that hash to it.  Warm-up prefers up peers;
+        with none (total outage — the autoscaler replacing a dead fleet)
+        it pulls from the down replicas' stores instead, so the first
+        routable host is never an empty one."""
+        if host_id in self.hosts:
+            raise ValueError(f"host {host_id!r} already in cluster")
+        host = ShardHost(host_id,
+                         EnsembleRegistry(history=self.cfg.history),
+                         up=False)
+        peers = self.host_ids() or list(self.hosts)
+        self.hosts[host_id] = host
+        for peer_id in peers:
+            self._anti_entropy(host, self.hosts[peer_id], now)
+            self.stats.exchanges += 1
+        host.up = True
+        return host
+
+    def remove_host(self, host_id: str, now: float = 0.0) -> None:
+        """Remove a host permanently.  Its retained snapshot window is
+        handed to a survivor first (anti-entropy exchange), so a publish
+        that had not gossiped out yet — the victim may own tenants — is
+        not lost with the replica; gossip then spreads it.  An up survivor
+        is preferred, but a down replica suffices (it rejoins the ring
+        holding the data); removing the *last* host raises instead of
+        silently discarding the only copy."""
+        victim = self.hosts[host_id]
+        victim.up = False                        # leave the ring first
+        survivors = self.host_ids() or [h for h in self.hosts
+                                        if h != host_id]
+        if not survivors:
+            raise ValueError(
+                f"cannot remove {host_id!r}: it is the cluster's last "
+                "host and its registry window would be discarded")
+        self._anti_entropy(victim, self.hosts[survivors[0]], now)
+        self.stats.exchanges += 1
+        del self.hosts[host_id]
+
     # ------------------------------------- registry facade (training side)
     def publish(self, tenant: str, learners, alphas, **kw) -> EnsembleSnapshot:
         return self.hosts[self.owner(tenant)].registry.publish(

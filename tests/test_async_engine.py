@@ -77,6 +77,27 @@ def test_compensation_handles_staleness():
     assert e.final_val_error < 0.45
 
 
+def test_dropped_round_that_fills_interval_still_triggers_sync():
+    """The paper's dropout stalls the *message*, not the interval rule: a
+    drop whose buffered learner fills I_t must sync after the time penalty,
+    not defer the trigger by a whole extra round.  With every round forced
+    to drop, clients must still sync every I_t rounds — the regression
+    (buffering then `continue`-ing past the interval check) collapsed this
+    to exactly one tail-flush sync per client."""
+    dom = dataclasses.replace(DOMAINS["edge_vision"], n_samples=300,
+                              n_clients=3)
+    data = make_domain_data(dom, seed=0)
+    cfg = FedBoostConfig(n_clients=3, n_rounds=6, dropout_prob=1.0, seed=0)
+    eng = FederatedBoostEngine(cfg, data, "enhanced")
+    m = eng.run()
+    assert m.learners_merged == 3 * 6            # nothing lost either way
+    assert m.n_syncs > 3                         # > one tail flush per client
+    # dropping a round still costs the stall penalty: every round pays
+    # twice the per-round compute time
+    assert all(c.clock >= 2 * 6 * FederatedBoostEngine.BASE_ROUND_S
+               for c in eng.clients)
+
+
 def test_relevance_filter_saves_bytes():
     """Beyond-paper knob: filtering low-weight buffered learners cuts bytes
     without collapsing accuracy."""

@@ -1,0 +1,498 @@
+"""Fleet autoscaling and per-(tenant, host) policies: eq.-(1) pressure
+controller bounds, gossip-warmed scale-out, loss-free scale-in drains,
+PolicyTable resolution/JSON, per-tenant admission + batch caps, and
+per-tenant kernel-policy partitioning."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dispatch import KernelPolicy
+from repro.serve import (AutoscaleConfig, BatchConfig, EnsembleRegistry,
+                         EnsembleServer, FleetAutoscaler, GossipConfig,
+                         PolicyTable, ShardCluster, ShardedEnsembleServer)
+
+
+def _publish(target, tenant, T=4, F=6, seed=0, clock=0.0):
+    rng = np.random.RandomState(seed)
+    p = np.zeros((T, 4), np.float32)
+    p[:, 0] = rng.randint(0, F, size=T)
+    p[:, 1] = rng.randn(T)
+    p[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    a = (rng.rand(T) + 0.1).astype(np.float32)
+    return target.publish_packed(tenant, jnp.asarray(p), jnp.asarray(a),
+                                 clock=clock)
+
+
+def _cluster(n_hosts, tenants, seed=0):
+    cluster = ShardCluster(n_hosts, GossipConfig(seed=seed))
+    for i, t in enumerate(tenants):
+        _publish(cluster, t, seed=i)
+    cluster.run_until_quiescent()
+    return cluster
+
+
+TENANTS = [f"t{i}" for i in range(6)]
+
+
+# ------------------------------------------------------------ policy table
+def test_policy_table_resolution_precedence():
+    pt = PolicyTable(BatchConfig(max_batch=16, queue_budget=100))
+    pt.set_host("h0", max_batch=32)
+    pt.set_tenant("hot", queue_budget=400, max_batch=64)
+    pt.set_pair("hot", "h0", max_batch=8)
+    assert pt.batch_for().max_batch == 16               # fleet default
+    assert pt.batch_for(host="h0").max_batch == 32      # host layer
+    assert pt.batch_for("hot", "h1").max_batch == 64    # tenant over host
+    assert pt.batch_for("hot", "h1").queue_budget == 400
+    assert pt.batch_for("hot", "h0").max_batch == 8     # pair most specific
+    assert pt.batch_for("hot", "h0").queue_budget == 400  # merged field-wise
+    assert pt.batch_for("cold", "h9") is pt.batch_for()  # untouched scopes
+    with pytest.raises(ValueError):
+        pt.set_tenant("x", no_such_field=1)
+    with pytest.raises(ValueError):
+        pt.set_host("h0", scheduler=None)               # fleet-wide only
+    with pytest.raises(ValueError):
+        # host-server knobs at tenant scope would be silently ignored —
+        # refused instead (only queue_budget/max_batch resolve per tenant)
+        pt.set_tenant("x", fixed_window_units=1)
+    with pytest.raises(ValueError):
+        pt.set_pair("x", "h0", cache_capacity=64)
+    pt.set_host("h0", fixed_window_units=1)             # host scope: fine
+
+
+def test_policy_table_kernel_resolution():
+    xla, interp = KernelPolicy(backend="xla"), KernelPolicy(
+        backend="interpret")
+    pt = PolicyTable()
+    assert pt.kernel_for("a", "h0") is None             # caller's policy
+    pt.set_host("h0", kernel=interp)
+    pt.set_tenant("a", kernel=xla)
+    assert pt.kernel_for("a", "h0") is xla              # tenant over host
+    assert pt.kernel_for("b", "h0") is interp
+    assert pt.kernel_for("b", "h1") is None
+
+
+def test_policy_table_json_roundtrip(tmp_path):
+    path = tmp_path / "policies.json"
+    pt = PolicyTable(BatchConfig(max_batch=32),
+                     default_kernel=KernelPolicy(backend="xla"))
+    pt.set_tenant("hot", queue_budget=1024,
+                  kernel=KernelPolicy(backend="interpret"))
+    pt.set_host("h1", cache_capacity=128)
+    pt.set_pair("hot", "h1", max_batch=4)
+    pt.save(path)
+    back = PolicyTable.load(path)
+    assert back.batch_for().max_batch == 32
+    assert back.default_kernel.backend == "xla"
+    assert back.batch_for("hot", "h0").queue_budget == 1024
+    assert back.batch_for(host="h1").cache_capacity == 128
+    assert back.batch_for("hot", "h1").max_batch == 4
+    assert back.kernel_for("hot", "h9").backend == "interpret"
+    with pytest.raises(ValueError):
+        bad = dict(json.loads(path.read_text()), pairs={"nohost": {}})
+        path.write_text(json.dumps(bad))
+        PolicyTable.load(path)
+    # an empty kernel spec would mask broader pins as "most specific"
+    path.write_text(json.dumps({"tenants": {"a": {"kernel": {}}}}))
+    with pytest.raises(ValueError):
+        PolicyTable.load(path)
+
+
+def test_per_tenant_queue_budget_and_batch_cap():
+    reg = EnsembleRegistry()
+    _publish(reg, "hot", seed=1)
+    _publish(reg, "cold", seed=2)
+    pt = PolicyTable(BatchConfig(queue_budget=8, max_batch=16,
+                                 adaptive=False, fixed_window_units=1000))
+    pt.set_tenant("cold", queue_budget=2, max_batch=1)
+    server = EnsembleServer(reg, policy_table=pt, host_id="h0",
+                            service_model=lambda n: 1e-4)
+    # cold admission stops at its own budget while the host queue has room
+    assert server.submit("cold", np.zeros(6, np.float32), 0.0)[0]
+    assert server.submit("cold", np.zeros(6, np.float32), 0.0)[0]
+    assert not server.submit("cold", np.zeros(6, np.float32), 0.0)[0]
+    assert server.metrics.tenants["cold"].rejected == 1
+    # hot fills the remaining host budget (max_batch 16 > budget: no
+    # size-capped dispatch fires under the 1 s window)
+    for _ in range(6):
+        assert server.submit("hot", np.zeros(6, np.float32), 0.0)[0]
+    assert not server.submit("hot", np.zeros(6, np.float32), 0.0)[0]
+    # one dispatched batch carries at most cold's max_batch of its requests
+    batch = server.queue.pop_batch()
+    assert len(batch) == 7
+    assert sum(r.tenant == "cold" for r in batch) == 1
+    assert sum(r.tenant == "hot" for r in batch) == 6
+    assert [r.tenant for r in server.queue.pop_batch()] == ["cold"]
+
+
+def test_per_tenant_batch_cap_preserves_fifo_of_overflow():
+    from repro.serve import MicroBatchQueue
+    cfg = BatchConfig(queue_budget=64, max_batch=4)
+    capped = BatchConfig(queue_budget=64, max_batch=1)
+    q = MicroBatchQueue(cfg, tenant_cfg=lambda t: capped if t == "c" else cfg)
+    for i, t in enumerate("ccab"):
+        q.submit(t, [float(i)], float(i))
+    first = q.pop_batch()
+    assert [r.tenant for r in first] == ["c", "a", "b"]  # 2nd c deferred
+    assert [r.tenant for r in q.pop_batch()] == ["c"]    # kept FIFO slot
+    assert q.depth == 0
+
+
+def test_hot_tenant_raises_above_host_scope_take_effect():
+    """The README's hot-tenant example must not be a silent no-op: a
+    tenant's queue_budget/max_batch above the host scope really do admit
+    more and batch bigger."""
+    from repro.serve import MicroBatchQueue
+    pt = PolicyTable(BatchConfig(queue_budget=4, max_batch=2))
+    pt.set_tenant("hot", queue_budget=10, max_batch=8)
+    q = MicroBatchQueue(pt.batch_for(host="h0"),
+                        tenant_cfg=lambda t: pt.batch_for(t, "h0"))
+    for _ in range(2):
+        assert q.submit("cold", [0.0], 0.0) is not None
+    # hot admits past the host budget of 4, up to its own 10 total
+    for _ in range(8):
+        assert q.submit("hot", [0.0], 0.0) is not None
+    assert q.submit("hot", [0.0], 0.0) is None
+    # cold is behind the host-budget total cap the whole time
+    assert q.submit("cold", [0.0], 0.0) is None
+    assert q.rejected == 2
+    # hot's raised max_batch lifts the shared bound to 8; cold's share
+    # rides along within its own (host-scope) cap
+    batch = q.pop_batch()
+    assert len(batch) == 8
+    assert sum(r.tenant == "hot" for r in batch) == 6
+    assert sum(r.tenant == "cold" for r in batch) == 2
+    assert [r.tenant for r in q.pop_batch()] == ["hot", "hot"]
+
+
+def test_cluster_remove_host_hands_window_to_down_survivor_or_refuses():
+    cluster = _cluster(2, ["t0"])
+    other = [h for h in cluster.hosts if h != cluster.owner("t0")][0]
+    owner = cluster.owner("t0")
+    v2 = _publish(cluster, "t0", T=5, seed=9)     # on owner only
+    cluster.mark_down(other)                      # no up survivor left...
+    cluster.remove_host(owner)
+    # ...yet the window survived on the down replica
+    assert cluster.hosts[other].registry.latest("t0").fingerprint \
+        == v2.fingerprint
+    with pytest.raises(ValueError):
+        cluster.remove_host(other)                # last host: refuse
+
+
+def test_value_equal_kernel_policies_share_one_launch(monkeypatch):
+    """Tenants whose table entries resolve to value-identical policies
+    (e.g. every tenant pinning the same backend in JSON) must share one
+    packed cross-tenant launch, not one launch per tenant."""
+    from repro.serve import engine as engine_mod
+    reg = EnsembleRegistry()
+    for i, t in enumerate("abc"):
+        _publish(reg, t, seed=i)
+    pt = PolicyTable()
+    for t in "abc":                               # three distinct objects
+        pt.set_tenant(t, kernel=KernelPolicy(backend="xla"))
+    calls = []
+    real = engine_mod.kops.stump_vote_batched
+    monkeypatch.setattr(engine_mod.kops, "stump_vote_batched",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    server = EnsembleServer(reg, policy_table=pt, host_id="h",
+                            service_model=lambda n: 1e-4)
+    for t in "abc":
+        server.submit(t, np.zeros(6, np.float32), 0.0)
+    assert len(server.drain()) == 3
+    assert len(calls) == 1                        # one packed (B,T,N) launch
+
+
+def test_per_tenant_kernel_policy_partitions_launches():
+    reg = EnsembleRegistry()
+    snaps = {t: _publish(reg, t, seed=i) for i, t in enumerate("ab")}
+    xla, interp = KernelPolicy(backend="xla"), KernelPolicy(
+        backend="interpret")
+    pt = PolicyTable(BatchConfig(max_batch=16))
+    pt.set_tenant("a", kernel=xla)
+    pt.set_tenant("b", kernel=interp)
+    server = EnsembleServer(reg, policy_table=pt, host_id="h",
+                            service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(0)
+    xs = {t: rng.randn(6).astype(np.float32) for t in "ab"}
+    for t in "ab":
+        server.submit(t, xs[t], 0.0)
+    responses = server.drain()
+    assert len(responses) == 2
+    # each tenant's launch went through its own policy's dispatcher
+    assert {b for b in xla.choices.values()} == {"xla"}
+    assert {b for b in interp.choices.values()} == {"interpret"}
+    for r in responses:
+        sp = np.asarray(snaps[r.tenant].stump_params)
+        al = np.asarray(snaps[r.tenant].alphas)
+        xv = np.asarray(xs[r.tenant])[sp[:, 0].astype(int)]
+        want = float(np.dot(al, sp[:, 2] * np.sign(xv - sp[:, 1] + 1e-12)))
+        assert r.margin == pytest.approx(want, abs=1e-5)
+
+
+def test_explicit_cfg_composes_with_policy_table():
+    """An explicit BatchConfig passed alongside a table is not discarded:
+    it becomes the fleet default the table's overrides layer onto."""
+    cluster = _cluster(2, TENANTS[:2])
+    pt = PolicyTable(BatchConfig(queue_budget=999))
+    pt.set_tenant("t0", max_batch=4)
+    explicit = BatchConfig(queue_budget=5, adaptive=False,
+                           fixed_window_units=7)
+    server = ShardedEnsembleServer(cluster, explicit, policy_table=pt,
+                                   service_model=lambda n: 1e-4)
+    for s in server.servers.values():
+        assert s.cfg.queue_budget == 5          # explicit beats table default
+        assert s.cfg.fixed_window_units == 7
+    hid = next(iter(server.servers))
+    resolved = server.servers[hid].policy_table.batch_for("t0", hid)
+    assert resolved.max_batch == 4              # tenant override still layers
+    assert resolved.queue_budget == 5
+
+
+# ------------------------------------------------------------- membership
+def test_scale_out_warms_replica_before_joining():
+    cluster = _cluster(2, TENANTS)
+    digests = cluster.digests()
+    new = cluster.add_host("h-new")
+    assert new.up
+    # warmed via gossip pull before entering the ring: full replica at join
+    assert new.registry.digest() == next(iter(digests.values()))
+    assert "h-new" in cluster.host_ids()
+    with pytest.raises(ValueError):
+        cluster.add_host("h-new")
+
+
+def test_add_host_warms_from_down_replicas_under_total_outage():
+    """Replacing a dead fleet must not put an empty cold replica into the
+    ring: with zero up peers, warm-up pulls from the down replicas'
+    stores, so the first routable host still holds the data."""
+    cluster = _cluster(2, TENANTS)
+    want = {t: cluster.latest(t).fingerprint for t in TENANTS}
+    for hid in list(cluster.hosts):
+        cluster.mark_down(hid)
+    new = cluster.add_host("replacement")
+    assert new.up
+    for t in TENANTS:
+        assert new.registry.latest(t).fingerprint == want[t]
+    assert cluster.route(TENANTS[0]).host_id == "replacement"
+
+
+def test_remove_host_hands_unpublished_window_to_survivor():
+    cluster = _cluster(3, TENANTS)
+    owner = cluster.owner("t0")
+    v2 = _publish(cluster, "t0", T=5, seed=9)     # not yet gossiped out
+    assert v2.version == 2
+    cluster.remove_host(owner)
+    assert owner not in cluster.hosts
+    # the un-gossiped publish survived the removal on some survivor...
+    assert any(h.registry.get("t0", 2) is not None
+               for h in cluster.hosts.values())
+    # ...and anti-entropy then spreads it fleet-wide
+    cluster.run_until_quiescent()
+    assert cluster.converged()
+    for h in cluster.hosts.values():
+        assert h.registry.latest("t0").fingerprint == v2.fingerprint
+
+
+def test_scale_in_drains_without_losing_accepted_requests():
+    cluster = _cluster(3, TENANTS)
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(adaptive=False, fixed_window_units=10_000,
+                             max_batch=64, queue_budget=64),
+        service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(0)
+    accepted = []
+    for i in range(30):
+        ok, out = server.submit(TENANTS[i % len(TENANTS)],
+                                rng.randn(6).astype(np.float32), now=1e-4 * i)
+        assert ok and out == []                   # giant window: all queued
+    victims = [hid for hid, s in server.servers.items() if s.queue.depth]
+    victim = victims[0]
+    depth = server.servers[victim].queue.depth
+    responses, rerouted = server.remove_host(victim, now=0.01)
+    assert rerouted == depth and responses == []  # window far away: reroute
+    assert victim not in server.servers and victim not in cluster.hosts
+    responses += server.drain()
+    rids = sorted(r.rid for r in responses)
+    assert rids == list(range(30))                # zero loss, no duplicates
+    rep = server.report()
+    assert rep["completed"] == 30
+    assert rep["per_host"][victim]["status"] == "retired"
+    # rerouted requests kept their original submit time across the move
+    assert all(r.t_submit <= 1e-4 * 30 for r in responses)
+
+
+def test_remove_last_up_host_with_queued_requests_refuses():
+    cluster = _cluster(2, TENANTS[:2])
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(adaptive=False, fixed_window_units=10_000),
+        service_model=lambda n: 1e-4)
+    hid0, hid1 = list(server.servers)
+    server.remove_host(hid0)
+    loaded = server.servers[hid1]
+    assert server.submit(TENANTS[0], np.zeros(6, np.float32), 0.0)[0]
+    assert loaded.queue.depth == 1
+    with pytest.raises(ValueError):
+        server.remove_host(hid1)
+    assert hid1 in server.servers                 # refused: still serving
+    assert len(server.drain()) == 1
+
+
+def test_retired_host_id_cannot_be_reused():
+    cluster = _cluster(3, TENANTS)
+    server = ShardedEnsembleServer(cluster, BatchConfig(),
+                                   service_model=lambda n: 1e-4)
+    victim = next(iter(server.servers))
+    server.remove_host(victim)
+    with pytest.raises(ValueError):
+        server.add_host(victim)                 # report keys stay unique
+    server.add_host("fresh-0")
+    assert "fresh-0" in server.servers
+
+
+def test_autoscaler_sheds_downed_host_first_and_reroutes_its_queue():
+    """A host marked down by failover is not capacity: scale-in must pick
+    it over a live host and reroute its stuck queue onto survivors."""
+    cluster = _cluster(3, TENANTS)
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(adaptive=False, fixed_window_units=10_000,
+                             queue_budget=64),
+        service_model=lambda n: 1e-4)
+    scaler = FleetAutoscaler(server, AutoscaleConfig(
+        min_hosts=1, max_hosts=3, target_queue=64.0, adapt_every_s=0.01,
+        step_down=1.0))
+    rng = np.random.RandomState(0)
+    accepted = 0
+    for i in range(18):                         # queue a little everywhere
+        accepted += server.submit(TENANTS[i % len(TENANTS)],
+                                  rng.randn(6).astype(np.float32),
+                                  now=1e-4 * i)[0]
+    dead = max(server.servers,
+               key=lambda hid: server.servers[hid].queue.depth)
+    stuck = server.servers[dead].queue.depth
+    assert stuck > 0
+    cluster.mark_down(dead)
+    responses, t = [], 0.0
+    while scaler.stats.scale_ins == 0 and t < 2.0:   # idle: pressure ~ 0
+        t += 0.02
+        responses += server.advance(t)
+        responses += scaler.step(t)
+    assert scaler.stats.scale_ins >= 1
+    # the dead host is not capacity: the controller may first scale out a
+    # replacement (up-count below target), but the first host it *sheds*
+    # must be the dead replica, not a live one
+    ins = [e for e in scaler.stats.events if e[1] == "in"]
+    assert ins[0][2] == dead
+    assert scaler.stats.rerouted == stuck       # its queue moved, not lost
+    responses += server.drain()
+    rids = [r.rid for r in responses]
+    assert len(rids) == accepted and len(set(rids)) == accepted
+
+
+# -------------------------------------------------------------- controller
+def test_autoscaler_scales_out_under_pressure_and_back_in_when_idle():
+    cluster = _cluster(1, TENANTS)
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(queue_budget=16, max_batch=4, adaptive=False,
+                             fixed_window_units=1),
+        service_model=lambda n: 5e-3)
+    scaler = FleetAutoscaler(server, AutoscaleConfig(
+        min_hosts=1, max_hosts=3, target_queue=2.0, adapt_every_s=0.01,
+        step_down=1.0))
+    rng = np.random.RandomState(0)
+    responses, accepted, t = [], 0, 0.0
+    for i in range(300):                          # sustained overload
+        t += 5e-4
+        ok, out = server.submit(TENANTS[i % len(TENANTS)],
+                                rng.randn(6).astype(np.float32), t)
+        accepted += ok
+        responses += out
+        responses += scaler.step(t)
+    assert scaler.stats.scale_outs >= 1
+    assert len(server.servers) <= 3               # eq.-(1) clip: bounded
+    grown = len(server.servers)
+    assert grown > 1
+    for _ in range(200):                          # idle: pressure ~ 0
+        t += 0.02
+        responses += server.advance(t)
+        responses += scaler.step(t)
+    assert scaler.stats.scale_ins >= 1
+    assert len(server.servers) >= 1               # floor respected
+    assert len(server.servers) < grown
+    responses += server.drain()
+    rids = [r.rid for r in responses]
+    assert len(rids) == accepted and len(set(rids)) == accepted
+    assert server.report()["completed"] == accepted
+
+
+def test_rebuilt_autoscaler_skips_retired_ids():
+    """A second FleetAutoscaler on the same fleet restarts its id sequence;
+    its first scale-out must probe past ids already taken (live or
+    retired) instead of crashing on add_host's reuse refusal."""
+    cluster = _cluster(1, TENANTS)
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(queue_budget=16, max_batch=4, adaptive=False,
+                             fixed_window_units=1),
+        service_model=lambda n: 5e-3)
+    cfg = AutoscaleConfig(min_hosts=1, max_hosts=3, target_queue=2.0,
+                          adapt_every_s=0.01, step_down=1.0)
+
+    def overload(scaler, t0):
+        rng, t = np.random.RandomState(0), t0
+        for i in range(200):
+            t += 5e-4
+            server.submit(TENANTS[i % len(TENANTS)],
+                          rng.randn(6).astype(np.float32), t)
+            scaler.step(t)
+        return t
+
+    first = FleetAutoscaler(server, cfg)
+    t = overload(first, 0.0)
+    for _ in range(200):                          # drain back to min
+        t += 0.02
+        server.advance(t)
+        first.step(t)
+    assert first.stats.scale_ins >= 1             # 'scale-0' now retired
+    second = FleetAutoscaler(server, cfg)         # sequence restarts at 0
+    t = overload(second, t)
+    assert second.stats.scale_outs >= 1           # no ValueError collision
+    server.drain()
+
+
+def test_two_host_autoscaled_fleet_membership_churn_is_loss_free():
+    """The CI serve-fleet leg's anchor: a 2-host fleet under a bursty load
+    with live churn (autoscaler-driven scale-outs and scale-ins) must
+    answer every accepted request exactly once and keep a coherent merged
+    report."""
+    cluster = _cluster(2, TENANTS)
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(queue_budget=16, max_batch=4, adaptive=False,
+                             fixed_window_units=1),
+        service_model=lambda n: 4e-3)
+    scaler = FleetAutoscaler(server, AutoscaleConfig(
+        min_hosts=2, max_hosts=4, target_queue=2.0, adapt_every_s=0.01,
+        step_down=1.0))
+    rng = np.random.RandomState(7)
+    responses, accepted, t = [], 0, 0.0
+    for burst in range(4):                        # on/off phases force churn
+        for i in range(150):
+            t += 4e-4
+            ok, out = server.submit(TENANTS[rng.randint(len(TENANTS))],
+                                    rng.randn(6).astype(np.float32), t)
+            accepted += ok
+            responses += out
+            responses += scaler.step(t)
+        for _ in range(60):
+            t += 0.02
+            responses += server.advance(t)
+            responses += scaler.step(t)
+    responses += server.drain()
+    assert scaler.stats.scale_outs >= 1 and scaler.stats.scale_ins >= 1
+    rids = [r.rid for r in responses]
+    assert len(rids) == accepted and len(set(rids)) == accepted
+    rep = server.report()
+    assert rep["completed"] == accepted
+    assert 2 <= len(server.servers) <= 4
+    statuses = {h["status"] for h in rep["per_host"].values()}
+    assert "retired" in statuses and "up" in statuses

@@ -250,6 +250,29 @@ def test_generic_weak_learner_path():
     assert resp.margin == pytest.approx(want, abs=1e-5)
 
 
+def test_percentile_is_ceil_based_nearest_rank():
+    """Pin the quantile rule: rank = ceil(q/100 * n), 1-based, clamped.
+    The old int(round(...)) form used banker's rounding and drifted off
+    the nearest rank on even-length lists (e.g. q=50 over 4 samples)."""
+    from repro.serve.metrics import percentile
+    table = [
+        ([4.0], 50.0, 4.0),                   # singleton: any q
+        ([1.0, 2.0], 50.0, 1.0),              # ceil(1.0) = rank 1
+        ([1.0, 2.0], 75.0, 2.0),              # ceil(1.5) = rank 2
+        ([1.0, 2.0, 3.0, 4.0], 25.0, 1.0),    # ceil(1.0) = rank 1
+        ([1.0, 2.0, 3.0, 4.0], 50.0, 2.0),    # round() landed on 3 here
+        ([1.0, 2.0, 3.0, 4.0], 75.0, 3.0),
+        ([1.0, 2.0, 3.0, 4.0], 100.0, 4.0),
+        ([1.0, 2.0, 3.0], 50.0, 2.0),         # odd length: true median
+        ([float(v) for v in range(1, 101)], 99.0, 99.0),
+        ([float(v) for v in range(1, 101)], 0.0, 1.0),   # rank clamps to 1
+        ([], 99.0, 0.0),                      # empty: defined as 0
+    ]
+    for values, q, want in table:
+        assert percentile(values, q) == want, (values, q)
+    assert percentile([3.0, 1.0, 2.0], 50.0) == 2.0      # unsorted input
+
+
 def test_cold_tenant_abstains_and_metrics_report():
     reg = EnsembleRegistry()
     server = EnsembleServer(reg, BatchConfig(), service_model=lambda n: 1e-4)

@@ -162,6 +162,66 @@ def test_all_hosts_down_sheds_load():
     assert accepted is False and out == []
     with pytest.raises(RuntimeError):
         cluster.owner("t")
+    # the shed load is charged to the fleet report (per tenant), even
+    # though no per-host server ever saw the request
+    server.submit("other", np.zeros(6, np.float32), 0.0)
+    rep = server.report()
+    assert rep["rejected"] == 2
+    assert rep["tenants"]["t"]["rejected"] == 1
+    assert rep["tenants"]["other"]["rejected"] == 1
+    assert rep["completed"] == 0
+
+
+def test_report_merges_mixed_up_down_fleet():
+    """Fleet report merging under partial outage: per-tenant reservoirs
+    concatenate, last_version merges by max, cache counters aggregate, and
+    per-host rows carry their liveness status."""
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    tenants = ["a", "b", "c", "d"]
+    for i, t in enumerate(tenants):
+        _publish(cluster, t, seed=i)
+    _publish(cluster, "a", T=6, seed=9)           # a is at version 2
+    cluster.run_until_quiescent()
+    server = ShardedEnsembleServer(
+        cluster, BatchConfig(cache_capacity=64, adaptive=False,
+                             fixed_window_units=1),
+        service_model=lambda n: 1e-4)
+    rng = np.random.RandomState(0)
+    pools = {t: rng.randn(4, 6).astype(np.float32) for t in tenants}
+    accepted = 0
+    for i in range(24):
+        t = tenants[i % 4]
+        accepted += server.submit(t, pools[t][i % 4], now=1e-3 * i)[0]
+    victim = cluster.owner("a")
+    cluster.mark_down(victim)                     # mixed fleet from here on
+    for i in range(24, 48):
+        t = tenants[i % 4]
+        accepted += server.submit(t, pools[t][i % 4], now=1e-3 * i)[0]
+    server.drain()
+
+    rep = server.report()
+    assert accepted == 48
+    assert rep["completed"] == 48
+    per_host = rep["per_host"]
+    assert rep["completed"] == sum(h["completed"] for h in per_host.values())
+    assert rep["n_batches"] == sum(h["n_batches"] for h in per_host.values())
+    statuses = {hid: h["status"] for hid, h in per_host.items()}
+    assert statuses[victim] == "down"
+    assert sorted(statuses.values()) == ["down", "up", "up"]
+    # the downed owner served 'a' before the outage, the failover host
+    # after it: the merged tenant row must still carry the max version
+    assert rep["tenants"]["a"]["snapshot_version"] == 2
+    assert rep["tenants"]["a"]["completed"] == 12
+    # per-tenant latencies concatenate across hosts
+    assert sum(t["completed"] for t in rep["tenants"].values()) == 48
+    # cache counters aggregate over every host's cache (the same four
+    # vectors per tenant recur: hits must have accrued somewhere)
+    cache = rep["cache"]
+    assert cache["hits"] + cache["misses"] > 0
+    assert cache["hits"] == sum(
+        s.cache.stats.hits for s in server.servers.values())
+    assert cache["hit_rate"] == pytest.approx(
+        cache["hits"] / (cache["hits"] + cache["misses"]))
 
 
 def test_fleet_rids_unique_across_hosts():
