@@ -5,7 +5,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig, SchedulerConfig
+from repro.configs.paper_fedboost import FedBoostConfig, SchedulerConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.controllers import BudgetScheduler, TrendScheduler
 from repro.core.metrics import time_to_error

@@ -2,6 +2,12 @@
 asynchronous AdaBoost over synchronous distributed AdaBoost across the five
 application domains.
 
+Domain definitions and paper bands are sourced from the scenario registry
+(:mod:`repro.sim.scenarios`) — the single place that binds each domain to
+its environment, partitioner, behavior traces, and Table-1 bands.  This
+module reproduces the table under the ``legacy`` (scalar) behavior trace;
+``benchmarks/scenario_matrix.py`` sweeps the full trace matrix.
+
 Metrics per domain (mean over seeds):
   * training time down   — time to reach the common target error
                            (paper band: ~15-35 %)
@@ -13,53 +19,37 @@ Metrics per domain (mean over seeds):
 """
 from __future__ import annotations
 
-import json
 from typing import Dict, List
 
 import numpy as np
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
-from repro.core import FederatedBoostEngine
-from repro.core.metrics import common_target, pct_reduction, time_to_error
-from repro.data import make_domain_data
+from repro.sim.harness import result_row, train_pair
+from repro.sim.scenarios import base_scenarios, get_scenario
 
-PAPER_BANDS = {
-    # domain: (time down %, comm down %, conv down %, acc delta pp) midpoints
-    "edge_vision": (25, 30, 20, 1.0),
-    "blockchain": (32, 40, 20, 0.9),
-    "mobile": (22, 27, 15, 0.5),
-    "iot": (20, 25, 15, 0.0),
-    "healthcare": (17, 25, 20, 1.5),
-}
+
+def __getattr__(name: str):
+    # DEPRECATED: the bands table moved into the scenario registry; this
+    # shim keeps `benchmarks.domains.PAPER_BANDS` alive for one release.
+    if name == "PAPER_BANDS":
+        import warnings
+        warnings.warn(
+            "benchmarks.domains.PAPER_BANDS is deprecated; use "
+            "repro.sim.scenarios.PAPER_BANDS (band midpoints) or "
+            "get_scenario(name).band (full ranges)",
+            DeprecationWarning, stacklevel=2)
+        from repro.sim.scenarios import PAPER_BANDS
+        return PAPER_BANDS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def run_domain(name: str, n_rounds: int = 30, seeds=(0, 1, 2)) -> Dict:
-    dom = DOMAINS[name]
+    sc = get_scenario(name)
     rows = []
     for seed in seeds:
-        data = make_domain_data(dom, seed=seed)
-        cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=n_rounds,
-                             straggler_factor=dom.straggler_factor,
-                             dropout_prob=dom.dropout_prob,
-                             link_mbps=dom.link_mbps, seed=seed,
-                             balanced_init=dom.label_imbalance < 0.4)
-        runs = {m: FederatedBoostEngine(cfg, data, m).run()
-                for m in ("baseline", "enhanced")}
-        b, e = runs["baseline"], runs["enhanced"]
-        tgt = common_target([b.val_error_curve, e.val_error_curve])
-        tb = time_to_error(b.val_error_curve, tgt)
-        te = time_to_error(e.val_error_curve, tgt)
-        rows.append({
-            "time_down": pct_reduction(tb[0], te[0]) if tb and te else 0.0,
-            "comm_down": pct_reduction(b.total_bytes, e.total_bytes),
-            "msgs_down": pct_reduction(b.n_messages, e.n_messages),
-            "conv_down": pct_reduction(tb[1], te[1]) if tb and te else 0.0,
-            "acc_delta_pp": 100 * (b.final_test_error - e.final_test_error),
-            "base_err": b.final_test_error,
-            "enh_err": e.final_test_error,
-            "base_bytes": b.total_bytes,
-            "enh_bytes": e.total_bytes,
-        })
+        _, runs = train_pair(sc, "legacy", seed=seed, n_rounds=n_rounds)
+        row = result_row(runs)
+        row.pop("unavailable_rounds", None)
+        rows.append(row)
     agg = {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
     agg["domain"] = name
     return agg
@@ -75,13 +65,14 @@ def main(n_rounds: int = 30, seeds=(0, 1, 2)) -> List[Dict]:
     print(hdr)
     print("-" * 98)
     out = []
-    for name in DOMAINS:
+    for name in base_scenarios():
         agg = run_domain(name, n_rounds=n_rounds, seeds=seeds)
-        p = PAPER_BANDS[name]
+        p = get_scenario(name).band.midpoints
         print(f"{name:<13} {agg['time_down']:>7.1f} {agg['comm_down']:>7.1f} "
               f"{agg['msgs_down']:>7.1f} {agg['conv_down']:>7.1f} "
               f"{agg['acc_delta_pp']:>+7.1f} | "
-              f"~{p[0]}% / ~{p[1]}% / ~{p[2]}% / +{p[3]}pp", flush=True)
+              f"~{p[0]:.0f}% / ~{p[1]:.0f}% / ~{p[2]:.0f}% / +{p[3]}pp",
+              flush=True)
         out.append(agg)
     print("-" * 98)
     return out

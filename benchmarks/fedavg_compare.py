@@ -6,7 +6,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.federated import run_fedavg, run_fedasync
 from repro.data import make_domain_data

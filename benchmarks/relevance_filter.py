@@ -14,7 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 

@@ -25,14 +25,17 @@ def main() -> None:
     from benchmarks import (autoscale_load, backend_matrix,
                             controller_compare, domains, fedavg_compare,
                             kernel_bench, multipod_compare, relevance_filter,
-                            roofline, scheduler_ablation, serving_load,
-                            shard_gossip, staleness)
+                            roofline, scenario_matrix, scheduler_ablation,
+                            serving_load, shard_gossip, staleness)
 
     # the single benchmark registry: name -> thunk, in run order
     benches = {
         # Table 1 (the paper's main quantitative claim)
         "table1_domains": lambda: domains.main(n_rounds=n_rounds,
                                                seeds=seeds),
+        # scenario registry: domains x behavior traces, train -> serve
+        # (picks its own seed count: 2-seed means for the band checks)
+        "scenario_matrix": lambda: scenario_matrix.main(quick=args.quick),
         # scheduling-rule ablation (paper eq. 1)
         "scheduler_ablation": scheduler_ablation.main,
         # staleness compensation sweep (paper eq. 2)
@@ -100,6 +103,8 @@ def main() -> None:
             f"hosts={r['hosts_final']};out={r['scale_outs']};"
             f"in={r['scale_ins']};rerouted={r['rerouted']}"))
     csv_rows.extend(results.get("backend_matrix", []))
+    csv_rows.extend(scenario_matrix.csv_rows(
+        results.get("scenario_matrix", [])))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
 

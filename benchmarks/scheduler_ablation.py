@@ -10,8 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.configs.paper_fedboost import (DOMAINS, FedBoostConfig,
-                                          SchedulerConfig)
+from repro.configs.paper_fedboost import FedBoostConfig, SchedulerConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.metrics import time_to_error
 from repro.data import make_domain_data

@@ -10,8 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.configs.paper_fedboost import (CompensationConfig, DOMAINS,
-                                          FedBoostConfig)
+from repro.configs.paper_fedboost import CompensationConfig, FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 

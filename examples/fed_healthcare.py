@@ -4,27 +4,37 @@ patient data.  Compares the paper's enhanced async AdaBoost against the
 synchronous boosting baseline AND against FedAvg — showing the comm and
 robustness profile the paper claims for this domain.
 
-    PYTHONPATH=src python examples/fed_healthcare.py
+The domain definition, paper band, and behavior traces come from the
+scenario registry (repro.sim.scenarios); pass ``--trace maintenance`` to
+run the hospitals through correlated maintenance-window outages instead
+of the legacy scalar model.
+
+    PYTHONPATH=src python examples/fed_healthcare.py [--trace maintenance]
 """
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+import argparse
+
 from repro.core import FederatedBoostEngine
 from repro.core.federated import run_fedavg
 from repro.core.metrics import pct_reduction
-from repro.data import make_domain_data
+from repro.sim.scenarios import get_scenario
 
-dom = DOMAINS["healthcare"]
-data = make_domain_data(dom, seed=0)
+sc = get_scenario("healthcare")
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace", default="legacy", choices=sorted(sc.traces))
+trace = ap.parse_args().trace
+dom = sc.domain
+data = sc.make_data(seed=0)
 print(f"{dom.n_clients} hospitals, {dom.n_samples} records, "
       f"positive rate {dom.label_imbalance:.0%} (imbalanced), "
-      f"uplink {dom.link_mbps} Mb/s\n")
+      f"uplink {dom.link_mbps} Mb/s, behavior trace: {trace}\n")
 
-cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=30,
-                     straggler_factor=dom.straggler_factor,
-                     dropout_prob=dom.dropout_prob, link_mbps=dom.link_mbps)
+cfg = sc.fedboost_config(seed=0, n_rounds=30)
 
 runs = {
-    "sync AdaBoost (baseline)": FederatedBoostEngine(cfg, data, "baseline").run(),
-    "async AdaBoost (paper)": FederatedBoostEngine(cfg, data, "enhanced").run(),
+    "sync AdaBoost (baseline)": FederatedBoostEngine(
+        cfg, data, "baseline", behavior_for=sc.behavior_for(trace)).run(),
+    "async AdaBoost (paper)": FederatedBoostEngine(
+        cfg, data, "enhanced", behavior_for=sc.behavior_for(trace)).run(),
 }
 avg = run_fedavg(data, n_rounds=30, link_mbps=dom.link_mbps,
                  straggler_factor=dom.straggler_factor)
@@ -38,8 +48,11 @@ print(f"{'FedAvg (weights on wire)':<26} {avg.total_bytes:>10} "
 
 b = runs["sync AdaBoost (baseline)"]
 e = runs["async AdaBoost (paper)"]
+band = sc.band
 print(f"\npaper band check (healthcare): comm down "
       f"{pct_reduction(b.total_bytes, e.total_bytes):.0f}% "
-      f"(paper: ~20-30%), accuracy delta "
+      f"(paper: ~{band.comm_down[0]:.0f}-{band.comm_down[1]:.0f}%), "
+      f"accuracy delta "
       f"{100*(b.final_test_error - e.final_test_error):+.1f}pp "
-      f"(paper: +1-2pp under class imbalance)")
+      f"(paper: {band.acc_delta_pp[0]:+.0f}-{band.acc_delta_pp[1]:+.0f}pp "
+      f"under class imbalance)")

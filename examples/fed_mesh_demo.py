@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import fed_mesh
 from repro.data import make_domain_data
 from repro.models.weak import stump_thresholds

@@ -3,7 +3,8 @@ lines, using the public API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.metrics import common_target, pct_reduction, time_to_error
 from repro.data import make_domain_data

@@ -8,7 +8,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 from repro.serve import BatchConfig, EnsembleRegistry, EnsembleServer

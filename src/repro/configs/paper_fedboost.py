@@ -78,28 +78,22 @@ class DomainConfig:
     link_mbps: float
 
 
-# Five domains, parameterized to reflect each scenario's published traits.
-DOMAINS = {
-    "edge_vision": DomainConfig(
-        name="edge_vision", n_samples=4000, n_features=64, n_clients=12,
-        noniid_alpha=0.5, label_imbalance=0.5, noise=0.15,
-        straggler_factor=5.0, dropout_prob=0.10, link_mbps=8.0),
-    "blockchain": DomainConfig(
-        name="blockchain", n_samples=5000, n_features=32, n_clients=8,
-        noniid_alpha=1.0, label_imbalance=0.45, noise=0.20,
-        straggler_factor=2.0, dropout_prob=0.02, link_mbps=2.0),  # chain latency
-    "mobile": DomainConfig(
-        name="mobile", n_samples=6000, n_features=48, n_clients=32,
-        noniid_alpha=0.2, label_imbalance=0.5, noise=0.18,
-        straggler_factor=6.0, dropout_prob=0.15, link_mbps=5.0),
-    "iot": DomainConfig(
-        name="iot", n_samples=4000, n_features=24, n_clients=24,
-        noniid_alpha=0.3, label_imbalance=0.15, noise=0.10,  # anomalies are rare
-        straggler_factor=3.0, dropout_prob=0.12, link_mbps=1.0),
-    "healthcare": DomainConfig(
-        name="healthcare", n_samples=3000, n_features=40, n_clients=6,
-        noniid_alpha=0.8, label_imbalance=0.20, noise=0.12,  # class imbalance
-        straggler_factor=2.5, dropout_prob=0.03, link_mbps=20.0),
-}
+def __getattr__(name: str):
+    # DEPRECATED: the ad-hoc five-domain table moved into the scenario
+    # registry (repro.sim.scenarios), which binds each domain to a
+    # partitioner, behavior traces, and paper bands.  This shim keeps the
+    # old import working for one release.
+    if name == "DOMAINS":
+        import warnings
+        warnings.warn(
+            "repro.configs.paper_fedboost.DOMAINS is deprecated; the "
+            "domain table lives in the scenario registry — use "
+            "repro.sim.scenarios.DOMAINS (or get_scenario(name).domain)",
+            DeprecationWarning, stacklevel=2)
+        from repro.sim.scenarios import DOMAINS
+        return DOMAINS
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
 
 DEFAULT = FedBoostConfig()

@@ -20,23 +20,32 @@ Modes
 
 Cost model
 ----------
-* compute: client k spends ``base_round_s * speed_k`` simulated seconds per
-  boosting round, speed_k ~ LogUniform[1, straggler_factor].
-* uplink: ``bytes / (link_mbps/8 * 1e6) + latency_s`` per message; one
-  message per synchronization carrying the whole buffer (+ header).
+Every per-round cost is asked of the client's
+:class:`~repro.sim.behavior.ClientBehavior` (the ``behavior_for`` hook):
+
+* compute: ``behavior.compute_time(BASE_ROUND_S, t)`` simulated seconds per
+  boosting round; the default :class:`~repro.sim.behavior.LegacyBehavior`
+  shim reproduces ``base_round_s * speed_k`` with
+  speed_k ~ LogUniform[1, straggler_factor] bit-for-bit.
+* uplink: ``bytes / (bandwidth/8 * 1e6) + latency`` per message with
+  ``(latency, bandwidth) = behavior.link(t)``; one message per
+  synchronization carrying the whole buffer (+ header).
 * downlink: ensemble delta (learners merged since the client's last sync)
   broadcast back at sync; the synchronous baseline pays this every round
   for every client.
-* dropout: with probability p per round a client misses the round; in
-  baseline its learner arrives one round late (stale, uncompensated); in
-  enhanced the buffer simply grows (stale, compensated).
+* availability: a round where ``behavior.availability(t)`` is False is
+  missed (legacy shim: i.i.d. dropout with probability p); in baseline its
+  learner arrives one round late (stale, uncompensated); in enhanced the
+  buffer grows (stale, compensated) and the client stalls by
+  ``behavior.stall_time`` — one compute round for the legacy shim, the
+  rest of the window for an outage model.
 """
 from __future__ import annotations
 
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +58,7 @@ from repro.core.buffers import BufferEntry, ClientBuffer
 from repro.core.compensation import adaboost_alpha, compensate
 from repro.core.scheduling import HostScheduler
 from repro.models.weak import WeakLearnerSpec, get_weak_learner
+from repro.sim.behavior import ClientBehavior, legacy_behaviors
 
 
 @dataclass
@@ -63,6 +73,7 @@ class RunMetrics:
     rounds_to_target: Optional[int] = None
     time_to_target: Optional[float] = None
     snapshots_published: int = 0
+    rounds_unavailable: int = 0   # rounds lost to dropout/outage/deep fade
     val_error_curve: List[Tuple[float, int, float]] = field(default_factory=list)
     final_val_error: float = 1.0
     final_test_error: float = 1.0
@@ -79,7 +90,7 @@ class _Client:
     x: jnp.ndarray
     y: jnp.ndarray
     D: jnp.ndarray
-    speed: float                  # compute-time multiplier
+    behavior: ClientBehavior      # availability/compute/link model
     clock: float = 0.0
     local_round: int = 0
     buffer: ClientBuffer = None
@@ -95,10 +106,16 @@ class FederatedBoostEngine:
 
     def __init__(self, cfg: FedBoostConfig, data: Dict, mode: str,
                  weak: Optional[WeakLearnerSpec] = None,
-                 kernel_policy=None):
+                 kernel_policy=None,
+                 behavior_for: Optional[
+                     Callable[[int], ClientBehavior]] = None):
         assert mode in ("baseline", "enhanced")
         self.cfg = cfg
         self.mode = mode
+        # behavior_for: cid -> ClientBehavior, the client-heterogeneity
+        # hook (repro.sim).  None builds the LegacyBehavior shim from the
+        # cfg scalars — same RNG draws in the same order, so results at
+        # equal seeds are bit-for-bit identical to the pre-behavior engine.
         # kernel_policy: optional repro.kernels.KernelPolicy routing the
         # weak-learner fit through the backend dispatcher (re-resolved per
         # fit, so env/calibration changes apply mid-run); None keeps the
@@ -121,8 +138,11 @@ class FederatedBoostEngine:
         self._syncs_since_publish = 0
 
         n = len(data["clients"])
-        speeds = np.exp(self.rng.uniform(
-            0.0, math.log(cfg.straggler_factor), size=n))
+        if behavior_for is None:
+            shims = legacy_behaviors(cfg, n, self.rng,
+                                     latency_s=self.LATENCY_S)
+            behavior_for = lambda cid: shims[cid]
+        self.behavior_for = behavior_for
         self.clients = []
         for cid, (x, y) in enumerate(data["clients"]):
             n = x.shape[0]
@@ -138,7 +158,7 @@ class FederatedBoostEngine:
                 D = jnp.full((n,), 1.0 / n)
             self.clients.append(_Client(
                 cid=cid, x=x, y=y, D=D,
-                speed=float(speeds[cid]),
+                behavior=behavior_for(cid),
                 buffer=ClientBuffer(cid)))
 
     # ------------------------------------------------------- serving hook
@@ -294,18 +314,19 @@ class FederatedBoostEngine:
             # learners that arrived late from last round's dropouts merge now
             late, pending_late = pending_late, []
             for c in self.clients:
-                dropped = self.rng.rand() < cfg.dropout_prob
+                dropped = not c.behavior.availability(t)
                 e = self._train_one(c)
-                dur = self.BASE_ROUND_S * c.speed
+                dur = c.behavior.compute_time(self.BASE_ROUND_S, t)
                 if dropped:
                     # misses the barrier; arrives next round, stale by 1,
                     # merged at FULL weight (no compensation in baseline)
+                    m.rounds_unavailable += 1
                     pending_late.append((c.cid, e))
                     continue
                 up = self._entry_bytes(e) + cfg.header_bytes
                 m.uplink_bytes += up
                 m.n_messages += 1
-                durations.append(dur + self._tx_time(up))
+                durations.append(dur + self._tx_time(up, c, t))
                 on_time.append((c.cid, e))
             # barrier: the round closes at the slowest participant
             t += max(durations) if durations else self.BASE_ROUND_S
@@ -336,17 +357,21 @@ class FederatedBoostEngine:
         def advance(c: _Client) -> None:
             """Run client c until its next sync, pushing the sync event."""
             while c.local_round < cfg.n_rounds:
-                dropped = self.rng.rand() < cfg.dropout_prob
+                dropped = not c.behavior.availability(c.clock)
                 e = self._train_one(c)
-                c.clock += self.BASE_ROUND_S * c.speed
+                c.clock += c.behavior.compute_time(self.BASE_ROUND_S, c.clock)
                 c.buffer.add(e.params, e.eps, e.alpha, e.round_stamp)
                 if dropped:
-                    # stall: the client loses a round of wall-clock, but the
-                    # dropout stalls the *message*, not the interval rule —
-                    # a drop whose buffered learner fills I_t still syncs
-                    # (after the time penalty) rather than deferring the
-                    # trigger by a whole extra round
-                    c.clock += self.BASE_ROUND_S * c.speed
+                    # stall: the client loses wall-clock, but the dropout
+                    # stalls the *message*, not the interval rule — a drop
+                    # whose buffered learner fills I_t still syncs (after
+                    # the time penalty) rather than deferring the trigger
+                    # by a whole extra round.  The behavior decides the
+                    # penalty: legacy charges one compute round, an outage
+                    # model waits the window out.
+                    m.rounds_unavailable += 1
+                    c.clock += c.behavior.stall_time(self.BASE_ROUND_S,
+                                                     c.clock)
                 if len(c.buffer) >= c.known_interval:
                     self._push_sync(events, c)
                     return
@@ -397,13 +422,13 @@ class FederatedBoostEngine:
             payload = kept if kept else payload[-1:]
         nbytes = (sum(self._entry_bytes(x) for x in payload)
                   + cfg.header_bytes)
-        arrival = c.clock + self._tx_time(nbytes)
+        arrival = c.clock + self._tx_time(nbytes, c, c.clock)
         m.uplink_bytes += nbytes
         m.n_messages += 1
         heapq.heappush(events, (arrival, c.cid, payload))
 
-    def _tx_time(self, nbytes: int) -> float:
-        return nbytes / (self.cfg.link_mbps / 8.0 * 1e6) + self.LATENCY_S
+    def _tx_time(self, nbytes: int, c: _Client, t: float) -> float:
+        return c.behavior.link(t).tx_time(nbytes)
 
     def _finalize(self) -> None:
         m = self.metrics

@@ -21,10 +21,23 @@ def dirichlet_partition(x: np.ndarray, y: np.ndarray, n_clients: int,
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for cid, part in enumerate(np.split(idx, cuts)):
             client_idx[cid].extend(part.tolist())
+    # top up only with indices the client does not already hold — a client
+    # must never see the same sample twice (it would double that sample's
+    # boosting-distribution mass); cross-client overlap from topping up is
+    # fine and unavoidable.  The floor is min(8, n): with fewer than 8
+    # distinct samples in the whole dataset 8 distinct ones don't exist.
+    floor = min(8, len(y))
     pool = rng.permutation(len(y)).tolist()
     for cid in range(n_clients):
-        while len(client_idx[cid]) < 8:
-            client_idx[cid].append(pool.pop())
+        have = set(client_idx[cid])
+        while len(client_idx[cid]) < floor:
+            if not pool:
+                pool = rng.permutation(len(y)).tolist()
+            cand = pool.pop()
+            if cand in have:
+                continue
+            client_idx[cid].append(cand)
+            have.add(cand)
     out = []
     for cid in range(n_clients):
         sel = np.asarray(client_idx[cid])

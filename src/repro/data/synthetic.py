@@ -15,7 +15,8 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.configs.paper_fedboost import DomainConfig
-from repro.data.partition import dirichlet_partition
+from repro.data.partition import (
+    dirichlet_partition, iid_partition, label_shard_partition)
 
 
 def _base_problem(rng: np.random.RandomState, n: int, f: int,
@@ -38,8 +39,15 @@ def _base_problem(rng: np.random.RandomState, n: int, f: int,
 
 
 def make_domain_data(cfg: DomainConfig, seed: int = 0,
-                     val_frac: float = 0.15, test_frac: float = 0.15) -> Dict:
-    """Returns {"clients": [(x,y)...], "val": (x,y), "test": (x,y)}."""
+                     val_frac: float = 0.15, test_frac: float = 0.15,
+                     partitioner: str = "dirichlet",
+                     shards_per_client: int = 2) -> Dict:
+    """Returns {"clients": [(x,y)...], "val": (x,y), "test": (x,y)}.
+
+    ``partitioner`` selects the client split (scenario registry binding):
+    ``dirichlet`` (default, skew from ``cfg.noniid_alpha``), ``iid``, or
+    ``label_shard`` (McMahan-style pathological split with
+    ``shards_per_client`` shards per client)."""
     # stable across processes (python's hash() is salted per-interpreter)
     name_tag = zlib.crc32(cfg.name.encode()) % 997
     rng = np.random.RandomState(seed * 1000 + name_tag)
@@ -65,8 +73,18 @@ def make_domain_data(cfg: DomainConfig, seed: int = 0,
     val_idx, test_idx, train_idx = (
         idx[:n_val], idx[n_val:n_val + n_test], idx[n_val + n_test:])
 
-    clients = dirichlet_partition(
-        x[train_idx], y[train_idx], cfg.n_clients, cfg.noniid_alpha, rng)
+    if partitioner == "dirichlet":
+        clients = dirichlet_partition(
+            x[train_idx], y[train_idx], cfg.n_clients, cfg.noniid_alpha, rng)
+    elif partitioner == "iid":
+        clients = iid_partition(x[train_idx], y[train_idx],
+                                cfg.n_clients, rng)
+    elif partitioner == "label_shard":
+        clients = label_shard_partition(x[train_idx], y[train_idx],
+                                        cfg.n_clients, shards_per_client, rng)
+    else:
+        raise ValueError(f"unknown partitioner {partitioner!r}; choose "
+                         "from dirichlet | iid | label_shard")
     import jax.numpy as jnp
     to_j = lambda a, b: (jnp.asarray(a), jnp.asarray(b))
     return {

@@ -26,7 +26,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 from repro.kernels.dispatch import KernelPolicy
@@ -68,7 +69,8 @@ def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int,
 def serve(cluster: ShardCluster, pools, rate: float, duration: float,
           seed: int, fixed_window_ms: float = 0.0, cache_capacity: int = 4096,
           kill_owner: bool = False, policy=None, policy_table=None,
-          autoscale_max: int = 0):
+          autoscale_max: int = 0, budget_per_host: float = None,
+          budget_per_hour: float = None):
     # the flag-built config composes with a policy table: it becomes the
     # fleet default the table's host/tenant/pair overrides layer onto
     cfg = (BatchConfig(adaptive=False,
@@ -83,7 +85,13 @@ def serve(cluster: ShardCluster, pools, rate: float, duration: float,
     if autoscale_max > 0:
         scaler = FleetAutoscaler(server, AutoscaleConfig(
             min_hosts=len(cluster.hosts),
-            max_hosts=max(autoscale_max, len(cluster.hosts))))
+            max_hosts=max(autoscale_max, len(cluster.hosts))),
+            budget_per_host=budget_per_host,
+            budget_per_hour=budget_per_hour)
+    elif budget_per_host is not None or budget_per_hour is not None:
+        print("  WARNING: --budget-per-host/--budget-per-hour only apply "
+              "to an autoscaled fleet; pass --autoscale MAX to enable "
+              "the cost cap (budget flags ignored)")
     tenants = sorted(pools)
     victim = cluster.owner(tenants[0]) if kill_owner else None
     rng = np.random.RandomState(seed)
@@ -112,6 +120,11 @@ def serve(cluster: ShardCluster, pools, rate: float, duration: float,
               f"{st.scale_ins} scale-in(s), {st.rerouted} request(s) "
               f"rerouted, peak pressure {st.pressure_peak:.2f}, "
               f"final fleet {len(server.servers)} host(s)")
+        if st.budget_capped:
+            print(f"  budget: {st.budget_capped} scale-out(s) refused at "
+                  f"{scaler.projected_cost():.2f} $/h projected "
+                  f"(cap {scaler.budget_per_hour:.2f} $/h, "
+                  f"{scaler.cost_per_host_hour:.2f} $/h per host)")
         for when, action, hid, size in st.events:
             print(f"    t={when:.2f}s scale-{action:<3} {hid:<10} "
                   f"-> {size} hosts")
@@ -139,6 +152,12 @@ def main() -> None:
                     help="autoscale the fleet between --hosts and MAX "
                          "hosts on queue-depth/p99 pressure (0 = fixed "
                          "fleet)")
+    ap.add_argument("--budget-per-host", type=float, default=None,
+                    metavar="$/H", help="projected cost of one serving "
+                    "host in $/hour (cost-aware autoscaling)")
+    ap.add_argument("--budget-per-hour", type=float, default=None,
+                    metavar="$/H", help="fleet budget in $/hour: "
+                    "scale-outs that would exceed it are refused")
     ap.add_argument("--policy-table", default=None, metavar="JSON",
                     help="per-(tenant, host) batching/kernel policy table "
                          "(see repro.serve.policy for the JSON shape); "
@@ -175,7 +194,9 @@ def main() -> None:
                    fixed_window_ms=args.fixed_window,
                    cache_capacity=args.cache, kill_owner=args.kill_owner,
                    policy=policy, policy_table=policy_table,
-                   autoscale_max=args.autoscale)
+                   autoscale_max=args.autoscale,
+                   budget_per_host=args.budget_per_host,
+                   budget_per_hour=args.budget_per_hour)
 
     rep = server.report()
     mode = ("adaptive" if args.fixed_window <= 0

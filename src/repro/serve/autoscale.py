@@ -76,6 +76,14 @@ class AutoscaleConfig:
     release: float = 0.4          # pressure the integrator bleeds per period
     theta1: float = -0.25         # high water: scale out above release-theta1
     theta2: float = 0.25          # low water: scale in below release-theta2
+    # cost awareness (ROADMAP "cost-aware autoscaling"): each up host is
+    # projected to cost `cost_per_host_hour` $/h; a scale-out that would
+    # push the fleet's projected spend past `budget_per_hour` is skipped
+    # (and counted in stats.budget_capped).  None = uncapped.  The budget
+    # acts as a dynamic i_max — it never forces a scale-in below
+    # min_hosts, it only refuses growth the operator can't pay for.
+    cost_per_host_hour: float = 1.0
+    budget_per_hour: Optional[float] = None
 
     def scheduler(self, init_hosts: int) -> SchedulerConfig:
         """The eq.-(1) constants with the host count as the interval."""
@@ -91,6 +99,7 @@ class AutoscaleStats:
     scale_outs: int = 0
     scale_ins: int = 0
     rerouted: int = 0             # requests moved by scale-in drains
+    budget_capped: int = 0        # scale-outs refused by the $/hour budget
     pressure_peak: float = 0.0
     # (now, "out"/"in", host_id, fleet size after the event)
     events: List[Tuple[float, str, str, int]] = field(default_factory=list)
@@ -107,9 +116,20 @@ class FleetAutoscaler:
 
     def __init__(self, server: ShardedEnsembleServer,
                  cfg: Optional[AutoscaleConfig] = None,
-                 host_prefix: str = "scale"):
+                 host_prefix: str = "scale", *,
+                 budget_per_host: Optional[float] = None,
+                 budget_per_hour: Optional[float] = None):
+        # budget_per_host / budget_per_hour override the cfg cost knobs:
+        # a host is projected to cost budget_per_host $/h and scale-out is
+        # refused once (n+1) hosts would exceed budget_per_hour $/h
         self.server = server
         self.cfg = cfg or AutoscaleConfig()
+        self.cost_per_host_hour = (self.cfg.cost_per_host_hour
+                                   if budget_per_host is None
+                                   else float(budget_per_host))
+        self.budget_per_hour = (self.cfg.budget_per_hour
+                                if budget_per_hour is None
+                                else float(budget_per_hour))
         n0 = min(max(len(server.servers), self.cfg.min_hosts),
                  self.cfg.max_hosts)
         self.sched = HostScheduler(self.cfg.scheduler(n0))
@@ -142,6 +162,25 @@ class FleetAutoscaler:
         if self._lat:
             p = max(p, percentile(self._lat, 99.0) / self.cfg.target_p99_s)
         return p
+
+    # --------------------------------------------------------------- cost
+    def projected_cost(self, n_hosts: Optional[int] = None) -> float:
+        """Projected fleet spend in $/hour for ``n_hosts`` (default: the
+        current up count)."""
+        n = len(self._up_hosts()) if n_hosts is None else n_hosts
+        return n * self.cost_per_host_hour
+
+    def max_affordable(self) -> int:
+        """The largest fleet the $/hour budget pays for (never below
+        ``min_hosts`` — the budget refuses growth, it does not force a
+        scale-in under the floor)."""
+        if self.budget_per_hour is None:
+            return self.cfg.max_hosts
+        # epsilon before flooring: a budget that exactly pays for N hosts
+        # must afford N even when the division lands at N - 1ulp
+        afford = int(self.budget_per_hour
+                     / max(self.cost_per_host_hour, 1e-12) + 1e-9)
+        return max(self.cfg.min_hosts, min(afford, self.cfg.max_hosts))
 
     # ------------------------------------------------------------ control
     def step(self, now: float) -> List[Response]:
@@ -188,6 +227,15 @@ class FleetAutoscaler:
         current = len(up)
         target = self.sched.interval            # fractional eq.-(1) state
         if target >= current + 1:
+            if current + 1 > self.max_affordable():
+                # the budget binds: refuse the scale-out and clamp the
+                # eq.-(1) state at the affordable fleet (a dynamic i_max)
+                # so the integrator doesn't wind up unboundedly and make
+                # the eventual scale-in sluggish
+                self.stats.budget_capped += 1
+                self.sched.interval = min(self.sched.interval,
+                                          float(self.max_affordable()))
+                return []
             return self._scale_out(now)
         if (target <= current - 1 and current > self.cfg.min_hosts
                 and current > 1):

@@ -1,0 +1,25 @@
+# repro.sim — trace-driven client-heterogeneity simulation: the
+# ClientBehavior device/link models under the federated engines, the
+# scenario registry binding the five paper domains (+ stress variants) to
+# partitioners/behavior mixes/paper bands, and the train->serve harness.
+#
+# The harness is imported lazily (PEP 562): it depends on repro.core and
+# repro.serve, while repro.core.async_engine imports repro.sim.behavior —
+# eager re-export here would close that cycle.
+from repro.sim.behavior import (  # noqa: F401
+    BlockchainLedger, BlockDelayBehavior, ClientBehavior, DiurnalBehavior,
+    GilbertLinkBehavior, LegacyBehavior, Link, SiteBehavior,
+    SiteOutageProcess, TraceSchedule, legacy_behaviors)
+from repro.sim.scenarios import (  # noqa: F401
+    DOMAINS, PAPER_BANDS, SCENARIOS, PaperBand, Scenario, base_scenarios,
+    get_scenario, register, variant_scenarios)
+
+_HARNESS_NAMES = ("ScenarioReport", "run_scenario", "replay_serve",
+                  "train_pair", "summarize")
+
+
+def __getattr__(name: str):
+    if name in _HARNESS_NAMES:
+        from repro.sim import harness
+        return getattr(harness, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,249 @@
+"""Scenario harness: one registered scenario end to end — train both
+engine modes through a behavior trace, then replay the resulting
+publish/request trace into the serving fleet.
+
+Training drives :class:`~repro.core.async_engine.FederatedBoostEngine`
+(baseline and enhanced) with the scenario's ``behavior_for`` hook; the
+enhanced run publishes snapshots mid-training into a
+:class:`~repro.serve.shard.ShardCluster` (stamped with the simulated
+clock).  The serve phase gossip-converges the cluster, rebases the
+publisher clocks, and replays a request trace *derived from the same
+behavior models* — each client emits Poisson requests thinned by its
+availability and delayed by its link latency (an offline phone sends
+nothing; a congested chain peer's requests arrive late) — through a
+:class:`~repro.serve.service.ShardedEnsembleServer` under the eq.-(1)
+:class:`~repro.serve.autoscale.FleetAutoscaler`.  One
+:class:`ScenarioReport` per (scenario, trace, seed) carries both halves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import FederatedBoostEngine
+from repro.core.async_engine import RunMetrics
+from repro.core.metrics import common_target, pct_reduction, time_to_error
+from repro.serve import (AutoscaleConfig, BatchConfig, FleetAutoscaler,
+                         GossipConfig, ShardCluster, ShardedEnsembleServer)
+from repro.sim.scenarios import Scenario, get_scenario
+
+# serve-replay fleet defaults: small fleet, autoscalable, analytic service
+# model (same c0 + c1*n regime as benchmarks/autoscale_load)
+SERVE_BATCH = BatchConfig(queue_budget=64, max_batch=16, cache_capacity=1024)
+
+
+def _autoscale_config(n_hosts: int) -> AutoscaleConfig:
+    # the caller's fleet size is the floor (like serve_ensemble) — the
+    # autoscaler may grow the fleet, never drain below what was asked for
+    return AutoscaleConfig(min_hosts=n_hosts, max_hosts=max(6, n_hosts),
+                           target_queue=16.0, target_p99_s=0.10,
+                           adapt_every_s=0.02, step_down=0.1)
+
+
+def _service_model(n_kernel: int) -> float:
+    return 1.2e-3 + 4.0e-4 * n_kernel
+
+
+@dataclass
+class ScenarioReport:
+    """Train->serve results for one (scenario, trace, seed)."""
+    scenario: str
+    trace: str
+    seed: int
+    baseline: RunMetrics
+    enhanced: RunMetrics
+    row: Dict[str, float]            # Table-1-style relative improvements
+    band_failures: List[str]         # empty = within paper band
+    serve: Optional[Dict] = None     # serving-replay summary (None = skipped)
+
+    @property
+    def within_band(self) -> bool:
+        return not self.band_failures
+
+
+def train_pair(sc: Scenario, trace: str, seed: int = 0,
+               n_rounds: Optional[int] = None,
+               cluster: Optional[ShardCluster] = None,
+               publish_every: int = 2
+               ) -> Tuple[Dict, Dict[str, RunMetrics]]:
+    """Run baseline + enhanced through one behavior trace on one dataset.
+    The enhanced engine publishes into ``cluster`` (when given) so the
+    serve phase replays real mid-training snapshots."""
+    data = sc.make_data(seed)
+    cfg = sc.fedboost_config(seed=seed, n_rounds=n_rounds)
+    runs: Dict[str, RunMetrics] = {}
+    for mode in ("baseline", "enhanced"):
+        # a fresh behavior set per engine: stateful models (Gilbert
+        # chains, outage processes) must not leak state across runs
+        eng = FederatedBoostEngine(cfg, data, mode,
+                                   behavior_for=sc.behavior_for(trace, seed))
+        if mode == "enhanced" and cluster is not None:
+            eng.attach_registry(cluster, sc.name, publish_every=publish_every)
+        runs[mode] = eng.run()
+    return data, runs
+
+
+def result_row(runs: Dict[str, RunMetrics]) -> Dict[str, float]:
+    """The Table-1 relative-improvement row for one baseline/enhanced pair
+    (same metric definitions as benchmarks/domains.py)."""
+    b, e = runs["baseline"], runs["enhanced"]
+    tgt = common_target([b.val_error_curve, e.val_error_curve])
+    tb = time_to_error(b.val_error_curve, tgt)
+    te = time_to_error(e.val_error_curve, tgt)
+    return {
+        "time_down": pct_reduction(tb[0], te[0]) if tb and te else 0.0,
+        "comm_down": pct_reduction(b.total_bytes, e.total_bytes),
+        "msgs_down": pct_reduction(b.n_messages, e.n_messages),
+        "conv_down": pct_reduction(tb[1], te[1]) if tb and te else 0.0,
+        "acc_delta_pp": 100.0 * (b.final_test_error - e.final_test_error),
+        "base_err": b.final_test_error,
+        "enh_err": e.final_test_error,
+        "base_bytes": float(b.total_bytes),
+        "enh_bytes": float(e.total_bytes),
+        "unavailable_rounds": float(e.rounds_unavailable),
+    }
+
+
+def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
+                 trace: str, seed: int = 0, duration_s: float = 1.5,
+                 autoscale: bool = True) -> Dict:
+    """Replay the scenario's request trace into the serving fleet.
+
+    Each client emits Poisson requests at ``serve_rate / n_clients``; the
+    *same behavior models* that shaped training gate them — a request is
+    dropped while the client is unavailable and delayed by its link
+    latency.  Serving time runs ``time_warp`` times slower than behavior
+    time, so diurnal cycles and outage windows project onto the replay
+    window.  Asserts the fleet's zero-loss invariant (every accepted
+    request answered exactly once across membership churn)."""
+    cluster.run_until_quiescent()
+    cluster.rebase_clock(0.0)
+    server = ShardedEnsembleServer(cluster, SERVE_BATCH,
+                                   service_model=_service_model)
+    scaler = (FleetAutoscaler(server, _autoscale_config(len(cluster.hosts)))
+              if autoscale else None)
+
+    # request trace from the behavior models (fresh instances: the serve
+    # epoch is a different day than training).  Candidate emission times
+    # are gated in *global* time order so stateful behaviors — including
+    # processes shared across clients, like a site-outage window or the
+    # blockchain ledger — see non-decreasing timestamps.
+    behavior_for = sc.behavior_for(trace, seed + 101)
+    xs = np.asarray(data["test"][0], np.float32)
+    rng = np.random.RandomState(seed * 31 + 7)
+    per_client = sc.serve_rate / sc.domain.n_clients
+    candidates: List[Tuple[float, int]] = []
+    for cid in range(sc.domain.n_clients):
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / per_client)
+            if t >= duration_s:
+                break
+            candidates.append((t, cid))
+    candidates.sort()
+
+    behaviors = ([behavior_for(c) for c in range(sc.domain.n_clients)]
+                 if behavior_for is not None else None)
+    arrivals: List[Tuple[float, int]] = []
+    offline = 0
+    for t, cid in candidates:
+        if behaviors is None:
+            arrivals.append((t, cid))
+            continue
+        beh = behaviors[cid]
+        bt = t * sc.time_warp            # serve-s -> behavior-s
+        if not beh.availability(bt):
+            offline += 1                 # device offline: nothing sent
+            continue
+        # query delay is measured in behavior-seconds; project it back
+        # onto the serving clock (reads never pay training-commit costs)
+        arrivals.append((t + beh.query_delay(bt) / sc.time_warp, cid))
+    arrivals.sort()
+
+    accepted, rids = 0, []
+    for t, cid in arrivals:
+        ok, out = server.submit(sc.name, xs[rng.randint(xs.shape[0])], t)
+        accepted += ok
+        rids.extend(r.rid for r in out)
+        if scaler is not None:
+            rids.extend(r.rid for r in scaler.step(t))
+    rids.extend(r.rid for r in server.drain())
+    if len(rids) != accepted or len(set(rids)) != len(rids):
+        raise AssertionError(
+            f"request loss under churn: accepted={accepted} "
+            f"answered={len(rids)} unique={len(set(rids))}")
+
+    rep = server.report()
+    tenant = rep["tenants"].get(sc.name, {})
+    return {
+        "offered": len(arrivals), "offline_suppressed": offline,
+        "completed": rep["completed"], "rejected": rep["rejected"],
+        "p50_ms": rep["p50_ms"], "p99_ms": rep["p99_ms"],
+        "throughput_rps": rep["throughput_rps"],
+        "mean_batch": rep["mean_batch"],
+        "cache_hit_rate": rep["cache"]["hit_rate"],
+        "snapshot_version": tenant.get("snapshot_version", 0),
+        "hosts_final": len(server.servers),
+        "scale_outs": scaler.stats.scale_outs if scaler else 0,
+        "scale_ins": scaler.stats.scale_ins if scaler else 0,
+        "rerouted": scaler.stats.rerouted if scaler else 0,
+    }
+
+
+def run_scenario(name_or_scenario, trace: str = "legacy", seed: int = 0,
+                 n_rounds: Optional[int] = None, serve: bool = True,
+                 serve_duration_s: float = 1.5, hosts: int = 2,
+                 autoscale: bool = True, publish_every: int = 2
+                 ) -> ScenarioReport:
+    """One scenario end to end: train both modes through ``trace``, check
+    the paper band, then (optionally) replay the publish/request trace
+    into an autoscaled serving fleet."""
+    sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
+          else get_scenario(name_or_scenario))
+    cluster = (ShardCluster(hosts, GossipConfig(seed=seed))
+               if serve else None)
+    data, runs = train_pair(sc, trace, seed=seed, n_rounds=n_rounds,
+                            cluster=cluster, publish_every=publish_every)
+    row = result_row(runs)
+    report = ScenarioReport(
+        scenario=sc.name, trace=trace, seed=seed,
+        baseline=runs["baseline"], enhanced=runs["enhanced"],
+        row=row, band_failures=sc.band.check(row))
+    if serve:
+        report.serve = replay_serve(sc, cluster, data, trace, seed=seed,
+                                    duration_s=serve_duration_s,
+                                    autoscale=autoscale)
+    return report
+
+
+def summarize(rep: ScenarioReport) -> str:
+    """Human-readable one-scenario summary (the run_scenario CLI output)."""
+    sc = get_scenario(rep.scenario)
+    lines = [
+        f"scenario {rep.scenario} · trace {rep.trace} · seed {rep.seed}",
+        f"  train: time_down {rep.row['time_down']:+.1f}%  "
+        f"comm_down {rep.row['comm_down']:+.1f}%  "
+        f"msgs_down {rep.row['msgs_down']:+.1f}%  "
+        f"acc_delta {rep.row['acc_delta_pp']:+.1f}pp  "
+        f"(unavailable rounds: {rep.row['unavailable_rounds']:.0f})",
+        f"  band:  time ~{sc.band.time_down[0]:.0f}-"
+        f"{sc.band.time_down[1]:.0f}%  comm ~{sc.band.comm_down[0]:.0f}-"
+        f"{sc.band.comm_down[1]:.0f}%  acc {sc.band.acc_delta_pp[0]:+.1f}.."
+        f"{sc.band.acc_delta_pp[1]:+.1f}pp  -> "
+        + ("WITHIN BAND" if rep.within_band
+           else "OUT OF BAND: " + "; ".join(rep.band_failures)),
+    ]
+    if rep.serve is not None:
+        s = rep.serve
+        lines.append(
+            f"  serve: {s['completed']} done / {s['rejected']} shed "
+            f"(+{s['offline_suppressed']} never sent)  "
+            f"p50 {s['p50_ms']:.2f} ms  p99 {s['p99_ms']:.2f} ms  "
+            f"cache {s['cache_hit_rate']:.0%}  "
+            f"snapshot v{s['snapshot_version']}  "
+            f"hosts {s['hosts_final']} "
+            f"({s['scale_outs']} out / {s['scale_ins']} in, "
+            f"{s['rerouted']} rerouted)")
+    return "\n".join(lines)

@@ -5,7 +5,8 @@ import dataclasses
 
 import pytest
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.metrics import common_target, time_to_error
 from repro.data import make_domain_data

@@ -496,3 +496,72 @@ def test_two_host_autoscaled_fleet_membership_churn_is_loss_free():
     assert 2 <= len(server.servers) <= 4
     statuses = {h["status"] for h in rep["per_host"].values()}
     assert "retired" in statuses and "up" in statuses
+
+
+# ----------------------------------------------------- cost-aware budget
+def _bursty_submit(server, scaler, rate, duration, seed=0):
+    """Drive a bursty closed loop (3x on-phase / 0.1x off-phase, as in
+    benchmarks/autoscale_load) and return (accepted, rids, max_hosts)."""
+    rng = np.random.RandomState(seed)
+    accepted, rids, max_hosts, t = 0, [], len(server.servers), 0.0
+    while t < duration:
+        lam = rate * (3.0 if (t % 0.5) < 0.25 else 0.1)
+        t += rng.exponential(1.0 / max(lam, 1e-9))
+        if t >= duration:
+            break
+        ok, out = server.submit(TENANTS[rng.randint(len(TENANTS))],
+                                rng.randn(6).astype(np.float32), t)
+        accepted += ok
+        rids.extend(r.rid for r in out)
+        if scaler is not None:
+            rids.extend(r.rid for r in scaler.step(t))
+            max_hosts = max(max_hosts, len(server.servers))
+    rids.extend(r.rid for r in server.drain())
+    return accepted, rids, max_hosts
+
+
+def test_budget_caps_scale_out_under_1800rps_burst():
+    """Cost-aware knob: with hosts at 0.5 $/h and a 1.5 $/h budget the
+    fleet may afford 3 hosts; the same 1800 rps burst that grows an
+    uncapped fleet past 3 must leave the capped fleet at <= 3 with the
+    refusals counted — and still lose no accepted request."""
+    cfg = AutoscaleConfig(min_hosts=2, max_hosts=8, target_queue=16.0,
+                          target_p99_s=0.10, adapt_every_s=0.02,
+                          step_down=0.1)
+    batch = BatchConfig(queue_budget=64, max_batch=16)
+    model = lambda n: 1.2e-3 + 8.0e-4 * n
+
+    results = {}
+    for label, kwargs in (("uncapped", {}),
+                          ("capped", {"budget_per_host": 0.5,
+                                      "budget_per_hour": 1.5})):
+        cluster = _cluster(2, TENANTS)
+        server = ShardedEnsembleServer(cluster, batch, service_model=model)
+        scaler = FleetAutoscaler(server, cfg, **kwargs)
+        accepted, rids, max_hosts = _bursty_submit(server, scaler,
+                                                   rate=1800.0, duration=1.5)
+        assert len(rids) == accepted and len(set(rids)) == accepted
+        results[label] = (scaler, max_hosts)
+
+    uncapped, uncapped_max = results["uncapped"]
+    capped, capped_max = results["capped"]
+    assert uncapped_max > 3              # the burst genuinely wants > 3 hosts
+    assert capped_max <= 3               # ... but the budget binds
+    assert capped.stats.budget_capped > 0
+    assert capped.max_affordable() == 3
+    assert capped.projected_cost(3) == pytest.approx(1.5)
+    assert uncapped.stats.budget_capped == 0
+
+
+def test_budget_never_forces_below_min_hosts():
+    # a budget below the floor refuses growth but never drives the fleet
+    # under min_hosts
+    cluster = _cluster(2, TENANTS)
+    server = ShardedEnsembleServer(cluster, BatchConfig(queue_budget=32))
+    scaler = FleetAutoscaler(server,
+                             AutoscaleConfig(min_hosts=2, max_hosts=8),
+                             budget_per_host=1.0, budget_per_hour=0.5)
+    assert scaler.max_affordable() == 2
+    for i in range(50):
+        scaler.step(i * 0.1)
+    assert len(server.servers) == 2

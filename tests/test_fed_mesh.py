@@ -14,7 +14,8 @@ SCRIPT = textwrap.dedent("""
     import json, dataclasses
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
-    from repro.configs.paper_fedboost import FedBoostConfig, DOMAINS
+    from repro.configs.paper_fedboost import FedBoostConfig
+    from repro.sim.scenarios import DOMAINS
     from repro.core import fed_mesh
     from repro.data import make_domain_data
     from repro.models.weak import stump_thresholds

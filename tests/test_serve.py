@@ -8,8 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.paper_fedboost import (
-    DOMAINS, FedBoostConfig, SchedulerConfig)
+from repro.configs.paper_fedboost import FedBoostConfig, SchedulerConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.scheduling import HostScheduler, init_state
 from repro.data import make_domain_data

@@ -62,7 +62,8 @@ def test_engine_publish_notifies_owning_shard():
     """The async engine's publish hook, pointed at a cluster, must land
     snapshots on the tenant's owning shard (and count them)."""
     import dataclasses
-    from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+    from repro.configs.paper_fedboost import FedBoostConfig
+    from repro.sim.scenarios import DOMAINS
     from repro.core import FederatedBoostEngine
     from repro.data import make_domain_data
     dom = dataclasses.replace(DOMAINS["edge_vision"], n_samples=400,

@@ -1,0 +1,331 @@
+"""repro.sim: behavior models, JSON trace replay, the scenario registry,
+the engine's behavior_for hook (legacy shim bit-for-bit), deprecation
+shims, and the train->serve harness."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FederatedBoostEngine
+from repro.sim.behavior import (
+    BlockDelayBehavior, ClientBehavior, DiurnalBehavior, GilbertLinkBehavior,
+    LegacyBehavior, Link, SiteBehavior, SiteOutageProcess, TraceSchedule,
+    legacy_behaviors)
+from repro.sim.harness import result_row, run_scenario, train_pair
+from repro.sim.scenarios import (
+    DOMAINS, PaperBand, SCENARIOS, base_scenarios, get_scenario,
+    variant_scenarios)
+
+
+def _small_scenario(name="edge_vision", n_samples=400, n_clients=4):
+    sc = get_scenario(name)
+    return dataclasses.replace(
+        sc, domain=dataclasses.replace(sc.domain, n_samples=n_samples,
+                                       n_clients=n_clients))
+
+
+# ------------------------------------------------------- legacy shim parity
+def test_legacy_shim_bitwise_equal_to_default():
+    """An engine with the explicit LegacyBehavior shim must reproduce the
+    default (no behavior_for) engine bit-for-bit — same RNG draws in the
+    same order, same float expressions.  The default path is itself the
+    pre-behavior engine's code path, so this pins the acceptance criterion
+    that the shim reproduces pre-PR results at equal seeds."""
+    sc = _small_scenario()
+    data = sc.make_data(seed=3)
+    cfg = sc.fedboost_config(seed=3, n_rounds=5)
+    for mode in ("baseline", "enhanced"):
+        a = FederatedBoostEngine(cfg, data, mode).run()
+        shims = legacy_behaviors(cfg, len(data["clients"]),
+                                 np.random.RandomState(cfg.seed),
+                                 latency_s=FederatedBoostEngine.LATENCY_S)
+        b = FederatedBoostEngine(cfg, data, mode,
+                                 behavior_for=lambda c: shims[c]).run()
+        assert a.total_bytes == b.total_bytes
+        assert a.sim_time_s == b.sim_time_s
+        assert a.final_val_error == b.final_val_error
+        assert a.n_syncs == b.n_syncs
+        assert a.rounds_unavailable == b.rounds_unavailable
+
+
+def test_legacy_trace_factory_returns_none():
+    # None tells the engine to install its own shim from the same RNG
+    # stream — the only way to stay bit-for-bit with the pre-PR engine
+    assert get_scenario("mobile").behavior_for("legacy", 0) is None
+
+
+# ------------------------------------------------------------ engine hook
+def test_custom_behavior_drives_sim_time():
+    class Slow(ClientBehavior):
+        def compute_time(self, work, t=0.0):
+            return 50.0 * work
+
+    sc = _small_scenario()
+    data = sc.make_data(seed=0)
+    cfg = sc.fedboost_config(seed=0, n_rounds=3)
+    fast = FederatedBoostEngine(cfg, data, "enhanced").run()
+    slow = FederatedBoostEngine(cfg, data, "enhanced",
+                                behavior_for=lambda c: Slow()).run()
+    assert slow.sim_time_s > fast.sim_time_s * 5
+
+
+def test_unavailable_rounds_counted():
+    class Offline(ClientBehavior):
+        def availability(self, t):
+            return False
+
+    sc = _small_scenario()
+    data = sc.make_data(seed=0)
+    cfg = sc.fedboost_config(seed=0, n_rounds=3)
+    m = FederatedBoostEngine(cfg, data, "enhanced",
+                             behavior_for=lambda c: Offline()).run()
+    assert m.rounds_unavailable == len(data["clients"]) * 3
+    # nothing is lost: buffered learners still sync after the stalls
+    assert m.learners_merged == len(data["clients"]) * 3
+
+
+# --------------------------------------------------------- behavior models
+def test_diurnal_day_night_cycle():
+    b = DiurnalBehavior(speed=2.0, period_s=24.0, phase_s=0.0,
+                        rng=np.random.RandomState(0), peak=1.0, trough=0.0,
+                        night_slowdown=1.0, link_mbps=10.0)
+    noon, midnight = 6.0, 18.0           # sin peak / trough for phase 0
+    assert b.daylight(noon) == pytest.approx(1.0)
+    assert b.daylight(midnight) == pytest.approx(0.0, abs=1e-9)
+    assert b.availability(noon) is True          # p = peak = 1
+    assert b.availability(midnight) is False     # p = trough = 0
+    assert b.compute_time(1.0, midnight) == pytest.approx(4.0)  # 2x slower
+    assert b.compute_time(1.0, noon) == pytest.approx(2.0)
+    assert b.link(noon).bandwidth_mbps > b.link(midnight).bandwidth_mbps
+
+
+def test_gilbert_link_bursts_and_degrades():
+    good, bad = Link(0.05, 1.0), Link(0.5, 0.05)
+    b = GilbertLinkBehavior(1.0, np.random.RandomState(1), mean_good_s=2.0,
+                            mean_bad_s=1.0, good=good, bad=bad,
+                            drop_in_bad=1.0, drop_in_good=0.0)
+    states = [b.in_good_state(t) for t in np.linspace(0, 60, 600)]
+    assert any(states) and not all(states)       # both states visited
+    # state runs are bursty: consecutive samples mostly agree
+    agree = np.mean([a == c for a, c in zip(states, states[1:])])
+    assert agree > 0.8
+    t_bad = next(t for t, s in zip(np.linspace(0, 60, 600), states) if not s)
+    assert b.link(60.0) in (good, bad)
+    bb = GilbertLinkBehavior(1.0, np.random.RandomState(1), mean_good_s=2.0,
+                             mean_bad_s=1.0, good=good, bad=bad,
+                             drop_in_bad=1.0, drop_in_good=0.0)
+    assert bb.link(t_bad) is bad                 # degraded while fading
+    assert bb.availability(t_bad) is False       # dropped in the deep fade
+
+
+def test_site_outages_are_correlated_and_waited_out():
+    site = SiteOutageProcess(np.random.RandomState(2), mean_up_s=5.0,
+                             mean_down_s=2.0)
+    a = SiteBehavior(site, speed=1.0)
+    b = SiteBehavior(site, speed=3.0)
+    ts = np.linspace(0.0, 100.0, 1000)
+    avail_a = [a.availability(t) for t in ts]
+    down_t = [t for t, up in zip(ts, avail_a) if not up]
+    assert down_t and len(down_t) < len(ts)      # outages happen, end
+    # correlation: the second client on the site sees identical windows
+    assert [b.availability(t) for t in ts] == avail_a
+    t0 = down_t[0]
+    assert site.remaining(t0) > 0.0
+    # an unavailable round stalls until the outage clears, not one round
+    assert a.stall_time(1.0, t0) >= site.remaining(t0)
+
+
+def test_block_delay_latency_floor():
+    b = BlockDelayBehavior(1.0, np.random.RandomState(3),
+                           block_interval_s=0.5, confirmations=3,
+                           congestion_prob=0.0, latency_s=0.05)
+    for t in (0.0, 1.0, 2.0):
+        # at least (confirmations-1) full block intervals on every message
+        assert b.link(t).latency_s >= 0.05 + 2 * 0.5
+
+
+def test_blockchain_ledger_serializes_commit_bursts():
+    # K simultaneous commits queue on block capacity: slots are pairwise
+    # >= one block gap apart, so the burst spans >= (K-1) gaps — the cost
+    # a synchronous round pays and a sparse async sync does not
+    from repro.sim.behavior import BlockchainLedger
+    ledger = BlockchainLedger(np.random.RandomState(0),
+                              block_interval_s=0.5, commits_per_block=1)
+    waits = [ledger.commit(0.0) for _ in range(8)]
+    slots = sorted(waits)
+    assert all(b - a >= 0.5 - 1e-9 for a, b in zip(slots, slots[1:]))
+    assert slots[-1] >= slots[0] + 7 * 0.5
+    # a lone commit long after the backlog clears waits ~one block again
+    assert ledger.commit(1000.0) < 0.5 * 8
+
+
+def test_blockchain_ledger_is_call_order_independent():
+    # an early-simulated-time commit issued *late* (the enhanced engine
+    # advances clients one at a time) must not queue behind later-time
+    # slots it precedes on chain
+    from repro.sim.behavior import BlockchainLedger
+    ledger = BlockchainLedger(np.random.RandomState(1),
+                              block_interval_s=0.5)
+    ledger.commit(100.0)                         # client 0, far future
+    wait = ledger.commit(1.0)                    # client 1, early clock
+    assert wait < 50.0                           # not pushed past t=100
+
+
+# ------------------------------------------------------------ trace replay
+def test_trace_schedule_segments_loop_and_json_roundtrip():
+    trace = TraceSchedule(
+        [{"t": 0.0, "speed": 1.0},
+         {"t": 4.0, "speed": 3.0, "bandwidth_mbps": 1.0},
+         {"t": 8.0, "available": False}],
+        base=None, loop_s=10.0)
+    assert trace.compute_time(1.0, 1.0) == pytest.approx(1.0)
+    assert trace.compute_time(1.0, 5.0) == pytest.approx(3.0)
+    assert trace.link(5.0).bandwidth_mbps == pytest.approx(1.0)
+    assert trace.availability(9.0) is False
+    assert trace.availability(11.0) is True      # looped back to segment 0
+    assert trace.compute_time(1.0, 15.0) == pytest.approx(3.0)
+    clone = TraceSchedule.from_json(trace.to_json())
+    for t in np.linspace(0, 25, 50):
+        assert clone.availability(t) == trace.availability(t)
+        assert clone.compute_time(1.0, t) == trace.compute_time(1.0, t)
+
+
+def test_trace_schedule_phase_rotates_cycle_and_roundtrips():
+    segs = [{"t": 0.0, "available": True}, {"t": 6.0, "available": False}]
+    base = TraceSchedule(segs, loop_s=8.0)
+    shifted = TraceSchedule(segs, loop_s=8.0, phase_s=3.0)
+    for t in np.linspace(0.0, 40.0, 200):
+        assert shifted.availability(t) == base.availability(t + 3.0)
+    # a staggered client still sleeps its recorded fraction of the cycle
+    ts = np.linspace(0.0, 80.0, 4000)
+    off = np.mean([not shifted.availability(t) for t in ts])
+    assert off == pytest.approx(0.25, abs=0.02)
+    # phase survives the JSON round-trip
+    clone = TraceSchedule.from_json(shifted.to_json())
+    assert clone.phase_s == shifted.phase_s
+    for t in np.linspace(0.0, 20.0, 100):
+        assert clone.availability(t) == shifted.availability(t)
+    # before the first start a looped cycle continues its last segment
+    late_start = TraceSchedule([{"t": 2.0, "available": True},
+                                {"t": 6.0, "available": False}], loop_s=8.0)
+    assert late_start.availability(1.0) is False   # mid "off" from t=6
+    one_shot = TraceSchedule([{"t": 2.0, "available": False}])
+    assert one_shot.availability(1.0) is False     # clamps to first
+
+
+def test_trace_schedule_layers_over_base():
+    class Base(ClientBehavior):
+        def compute_time(self, work, t=0.0):
+            return 2.0 * work
+
+        def link(self, t):
+            return Link(0.1, 8.0)
+
+    trace = TraceSchedule([{"t": 0.0, "speed": 2.0, "latency_s": 0.3}],
+                          base=Base())
+    assert trace.compute_time(1.0, 0.0) == pytest.approx(4.0)  # 2 x 2
+    link = trace.link(0.0)
+    assert link.latency_s == pytest.approx(0.3)  # trace overrides latency
+    assert link.bandwidth_mbps == pytest.approx(8.0)  # base bandwidth kept
+
+
+def test_trace_schedule_rejects_unknown_fields():
+    with pytest.raises(ValueError):
+        TraceSchedule([{"t": 0.0, "spede": 1.0}])
+    with pytest.raises(ValueError):
+        TraceSchedule([])
+
+
+def test_trace_schedule_from_file(tmp_path):
+    import json
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps({"loop_s": 4.0,
+                                "segments": [{"t": 0.0, "available": True},
+                                             {"t": 2.0, "available": False}]}))
+    trace = TraceSchedule.from_file(path)
+    assert trace.availability(1.0) is True
+    assert trace.availability(3.0) is False
+
+
+# -------------------------------------------------------- scenario registry
+def test_registry_has_five_domains_with_nontrivial_traces():
+    assert base_scenarios() == ["edge_vision", "blockchain", "mobile",
+                                "iot", "healthcare"]
+    for name in base_scenarios():
+        sc = get_scenario(name)
+        assert "legacy" in sc.traces
+        assert len(sc.nontrivial_traces) >= 2, name
+        # factories build one fresh behavior per client
+        for trace in sc.nontrivial_traces:
+            bf = sc.behavior_for(trace, seed=0)
+            behaviors = [bf(c) for c in range(sc.domain.n_clients)]
+            assert all(isinstance(b, ClientBehavior) for b in behaviors)
+    assert set(variant_scenarios()) == {"mobile_x4", "edge_vision_churn",
+                                        "iot_coldstart"}
+
+
+def test_registry_unknown_names_raise():
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+    with pytest.raises(KeyError):
+        get_scenario("mobile").behavior_for("nope")
+
+
+def test_band_check_flags_below_floor():
+    band = PaperBand((15, 35), (20, 40), (15, 25), (0.0, 2.0),
+                     tol_time=5.0, tol_comm=5.0, tol_acc=1.0)
+    ok = {"time_down": 20.0, "comm_down": 30.0, "acc_delta_pp": 1.0}
+    assert band.check(ok) == []
+    bad = {"time_down": 2.0, "comm_down": 5.0, "acc_delta_pp": -3.0}
+    assert len(band.check(bad)) == 3
+
+
+def test_domains_shim_warns_and_matches_registry():
+    import repro.configs.paper_fedboost as pf
+    with pytest.warns(DeprecationWarning):
+        shim = pf.DOMAINS
+    assert shim == DOMAINS
+    assert sorted(shim) == sorted(base_scenarios())
+    with pytest.raises(AttributeError):
+        pf.NOPE
+
+
+def test_paper_bands_shim_warns():
+    import benchmarks.domains as bd
+    from repro.sim.scenarios import PAPER_BANDS
+    with pytest.warns(DeprecationWarning):
+        shim = bd.PAPER_BANDS
+    assert shim == PAPER_BANDS
+    # midpoints preserved from the old ad-hoc table
+    assert shim["edge_vision"] == pytest.approx((25.0, 30.0, 20.0, 1.0))
+
+
+# ----------------------------------------------------------------- harness
+def test_train_serve_harness_end_to_end():
+    sc = _small_scenario("edge_vision", n_samples=500, n_clients=4)
+    rep = run_scenario(sc, trace="rack_outage", seed=0, n_rounds=4,
+                       serve=True, serve_duration_s=0.5)
+    assert rep.scenario == "edge_vision" and rep.trace == "rack_outage"
+    assert rep.enhanced.snapshots_published > 0
+    assert rep.enhanced.learners_merged > 0
+    assert set(rep.row) >= {"time_down", "comm_down", "conv_down",
+                            "acc_delta_pp"}
+    s = rep.serve
+    assert s is not None and s["completed"] > 0
+    assert s["snapshot_version"] > 0             # served a trained snapshot
+    assert s["hosts_final"] >= 2
+    # band check ran (pass or fail — the matrix asserts compliance on the
+    # full-size domains, not this shrunken smoke)
+    assert isinstance(rep.band_failures, list)
+
+
+def test_harness_trace_changes_training_profile():
+    sc = _small_scenario("iot", n_samples=400, n_clients=4)
+    _, legacy = train_pair(sc, "legacy", seed=0, n_rounds=4)
+    _, gilbert = train_pair(sc, "gilbert", seed=0, n_rounds=4)
+    # different behavior models => different simulated cost profile
+    assert (gilbert["enhanced"].sim_time_s != legacy["enhanced"].sim_time_s
+            or gilbert["enhanced"].total_bytes
+            != legacy["enhanced"].total_bytes)
+    row = result_row(gilbert)
+    assert np.isfinite(row["comm_down"])

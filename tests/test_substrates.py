@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis")  # property tests; CI installs requirements-de
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import latest_step, prune, restore, save
-from repro.configs.paper_fedboost import DOMAINS
+from repro.sim.scenarios import DOMAINS
 from repro.data import make_domain_data, dirichlet_partition, iid_partition
 from repro.data.tokens import MarkovTokens
 from repro.optim import (adamw, clip_by_global_norm, cosine_schedule,

@@ -9,7 +9,8 @@ benchmarks/domains.py).
 """
 import pytest
 
-from repro.configs.paper_fedboost import DOMAINS, FedBoostConfig
+from repro.configs.paper_fedboost import FedBoostConfig
+from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.core.federated import run_fedavg, run_fedasync
 from repro.core.metrics import common_target, pct_reduction, time_to_error
