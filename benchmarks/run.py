@@ -6,16 +6,72 @@ convention); the human-readable tables precede them.
     PYTHONPATH=src python -m benchmarks.run --quick    # 1 seed, fewer rounds
     PYTHONPATH=src python -m benchmarks.run backend_matrix serving_load
                                                        # named subset only
+
+Each benchmark additionally persists its raw result as
+``BENCH_<name>.json`` under ``--out-dir`` (default ``artifacts/bench``) so
+runs are diffable across commits — the perf trajectory.  ``--timestamp``
+stamps the files (CI passes the commit SHA); ``--out-dir ''`` disables
+the JSON emission entirely.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import time
+
+
+def _jsonable(x):
+    """Best-effort conversion of a benchmark result to JSON-serializable
+    plain data: dataclasses -> dicts, numpy scalars/arrays -> python,
+    tuples/sets -> lists, anything else unknown -> str."""
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return _jsonable(dataclasses.asdict(x))
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple, set, frozenset)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    if hasattr(x, "item") and not hasattr(x, "__len__"):   # numpy scalar
+        return _jsonable(x.item())
+    if hasattr(x, "tolist"):                               # numpy array
+        return _jsonable(x.tolist())
+    return str(x)
+
+
+def write_bench_json(out_dir: str, name: str, result, *, wall_us: float,
+                     quick: bool, seeds, n_rounds: int,
+                     timestamp: str) -> str:
+    """One ``BENCH_<name>.json`` per benchmark: the raw result plus enough
+    config to reproduce it.  Returns the path written."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {
+        "name": name,
+        "config": {"quick": quick, "seeds": list(seeds),
+                   "n_rounds": n_rounds},
+        "seeds": list(seeds),
+        "wall_us": round(wall_us, 1),
+        "metrics": _jsonable(result),
+        "timestamp": timestamp,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out-dir", default="artifacts/bench", metavar="DIR",
+                    help="write BENCH_<name>.json result files here "
+                         "('' disables; default: artifacts/bench)")
+    ap.add_argument("--timestamp", default=None, metavar="TAG",
+                    help="stamp for the BENCH json files (e.g. a commit "
+                         "SHA; default: current UTC time)")
     ap.add_argument("only", nargs="*", metavar="BENCH",
                     help="run only the named benchmarks (default: all)")
     args = ap.parse_args()
@@ -65,17 +121,24 @@ def main() -> None:
         ap.error(f"unknown benchmark(s) {unknown}; "
                  f"choose from {', '.join(benches)}")
 
+    stamp = args.timestamp or time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                            time.gmtime())
     csv_rows = []
     results = {}
+    written = []
     for name, fn in benches.items():
         if args.only and name not in args.only:
             continue
-        if name == "kernel_bench":        # emits CSV rows, no wall timing
-            results[name] = fn()
-            continue
         t0 = time.time()
         results[name] = fn()
-        csv_rows.append((name, (time.time() - t0) * 1e6, "bench-wall"))
+        wall_us = (time.time() - t0) * 1e6
+        if name != "kernel_bench":        # kernel_bench emits its own CSV
+            csv_rows.append((name, wall_us, "bench-wall"))
+        if args.out_dir:
+            written.append(write_bench_json(
+                args.out_dir, name, results[name], wall_us=wall_us,
+                quick=args.quick, seeds=seeds, n_rounds=n_rounds,
+                timestamp=stamp))
 
     print("\n--- kernel microbench + harness CSV ---")
     csv_rows.extend(results.get("kernel_bench", []))
@@ -107,6 +170,9 @@ def main() -> None:
         results.get("scenario_matrix", [])))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
+    if written:
+        print(f"\nwrote {len(written)} BENCH json file(s) "
+              f"[{stamp}]: {', '.join(written)}")
 
 
 if __name__ == "__main__":

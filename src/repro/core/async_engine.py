@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.paper_fedboost import FedBoostConfig
 from repro.core.boosting import (
     Ensemble, update_distribution, weighted_error)
@@ -187,11 +188,16 @@ class FederatedBoostEngine:
         there is nothing to publish yet."""
         if self._registry is None or not self.ensemble.learners:
             return None
-        snap = self._registry.publish(
-            self._tenant, list(self.ensemble.learners),
-            list(self.ensemble.alphas), clock=float(clock),
-            train_progress=self.metrics.learners_merged,
-            weak_name=self.weak.name)
+        with obs.span("train.publish", sim_t=clock, tenant=self._tenant,
+                      n_learners=len(self.ensemble.learners)) as sp:
+            snap = self._registry.publish(
+                self._tenant, list(self.ensemble.learners),
+                list(self.ensemble.alphas), clock=float(clock),
+                train_progress=self.metrics.learners_merged,
+                weak_name=self.weak.name)
+            sp.set(version=getattr(snap, "version", None))
+            sp.end_sim(clock)
+        obs.count("train.publishes")
         self.metrics.snapshots_published += 1
         return snap
 
@@ -209,7 +215,10 @@ class FederatedBoostEngine:
         return sub
 
     def _train_one(self, c: _Client) -> BufferEntry:
-        params = self.weak.fit(c.x, c.y, c.D, self._next_key())
+        with obs.span("train.fit", sim_t=c.clock, cid=c.cid,
+                      round=c.local_round):
+            params = self.weak.fit(c.x, c.y, c.D, self._next_key())
+        obs.count("train.fits")
         h = self.weak.predict(params, c.x)
         eps = float(weighted_error(c.D, c.y, h))
         alpha = float(adaboost_alpha(eps))
@@ -250,7 +259,11 @@ class FederatedBoostEngine:
             a = self._server_alpha(e.params)
             if compensated:
                 tau = max(0, sync_round - e.round_stamp)
+                raw = a
                 a = float(compensate(a, tau, self.cfg.compensation))
+                if obs.enabled():
+                    obs.point("train.compensate", cid=owner, staleness=tau,
+                              alpha_raw=raw, alpha=a)
             self.ensemble.add(e.params, a)
             self._owners.append(owner)
             self._fold_into_margins(e.params, a)
@@ -309,6 +322,7 @@ class FederatedBoostEngine:
         t = 0.0
         pending_late: List[Tuple[int, BufferEntry]] = []
         for r in range(cfg.n_rounds):
+            rsp = obs.span("train.round", sim_t=t, round=r)
             on_time: List[Tuple[int, BufferEntry]] = []
             durations: List[float] = []
             # learners that arrived late from last round's dropouts merge now
@@ -341,8 +355,13 @@ class FederatedBoostEngine:
                 m.n_messages += 1
                 self._client_catch_up(c)
             m.n_syncs += 1
+            obs.count("train.syncs")
+            obs.count("train.learners_merged", delta)
             self._maybe_publish(t)
             self._record(t)
+            rsp.set(on_time=len(on_time), late=len(late),
+                    merged=delta, val_error=m.val_error_curve[-1][2])
+            rsp.end(sim_t=t)
         m.sim_time_s = t
 
     # enhanced: asynchronous with adaptive intervals + compensation --------
@@ -386,12 +405,20 @@ class FederatedBoostEngine:
         while events:
             t, cid, payload = heapq.heappop(events)
             c = self.clients[cid]
+            sync_round = c.local_round - 1
+            ssp = obs.span(
+                "train.sync", sim_t=t, cid=cid, n_entries=len(payload),
+                staleness=max((max(0, sync_round - e.round_stamp)
+                               for e in payload), default=0))
             merged_before = len(self.ensemble.learners)
             # staleness: rounds the entry waited since it was trained
             # (the freshest entry has stamp == local_round-1 -> tau = 0)
-            self._merge(payload, sync_round=c.local_round - 1,
+            self._merge(payload, sync_round=sync_round,
                         compensated=True, owner=c.cid)
             m.n_syncs += 1
+            obs.count("train.syncs")
+            obs.count("train.learners_merged",
+                      len(self.ensemble.learners) - merged_before)
             # server observes the new global error and adapts the interval
             self.scheduler.observe(self._val_error())
             # downlink: ensemble delta since this client's last sync
@@ -401,8 +428,13 @@ class FederatedBoostEngine:
             m.n_messages += 1
             self._client_catch_up(c)
             c.known_interval = self.scheduler.current
+            obs.get_registry().gauge("train.interval").set(
+                self.scheduler.current)
             self._maybe_publish(t)
             self._record(t)
+            ssp.set(interval=self.scheduler.current,
+                    val_error=m.val_error_curve[-1][2])
+            ssp.end(sim_t=t)
             if not finished[cid]:
                 advance(c)
         m.sim_time_s = max(t, max(c.clock for c in self.clients))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.configs.paper_fedboost import FedBoostConfig
 from repro.core import scheduling
 from repro.core.compensation import adaboost_alpha, compensate
@@ -272,9 +273,15 @@ def publish_snapshot(state: FedMeshState, registry, tenant: str, *,
     n = int(jax.device_get(state.ens_count))
     params = jnp.asarray(jax.device_get(state.ens_params)[:n])
     alphas = jnp.asarray(jax.device_get(state.ens_alpha)[:n])
-    return registry.publish_packed(
-        tenant, params, alphas, clock=float(clock),
-        train_progress=int(jax.device_get(state.counter)))
+    with obs.span("train.publish", sim_t=clock, tenant=tenant,
+                  n_learners=n) as sp:
+        snap = registry.publish_packed(
+            tenant, params, alphas, clock=float(clock),
+            train_progress=int(jax.device_get(state.counter)))
+        sp.set(version=getattr(snap, "version", None))
+        sp.end_sim(clock)
+    obs.count("train.publishes")
+    return snap
 
 
 def state_shardings(mesh, client_axis: str) -> FedMeshState:

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 Params = Dict[str, jnp.ndarray]
 
 
@@ -89,6 +91,7 @@ def run_fedavg(data: Dict, n_rounds: int = 30, lr: float = 0.1,
     t = 0.0
     xt, yt = data["test"]
     for r in range(n_rounds):
+        rsp = obs.span("train.round", sim_t=t, round=r, mode="fedavg")
         locs, durs = [], []
         for k, (x, y) in enumerate(clients):
             locs.append(local_sgd(params, x, y, lr, local_steps))
@@ -102,6 +105,8 @@ def run_fedavg(data: Dict, n_rounds: int = 30, lr: float = 0.1,
         m.n_messages += K
         err = float(jnp.mean(jnp.sign(mlp_forward(params, xt)) != yt))
         m.error_curve.append((t, err))
+        rsp.set(val_error=err)
+        rsp.end(sim_t=t)
     m.sim_time_s = t
     m.final_test_error = m.error_curve[-1][1]
     return m
@@ -147,6 +152,9 @@ def run_fedasync(data: Dict, n_rounds: int = 30, lr: float = 0.1,
         params = jax.tree.map(lambda a, b: (1 - w) * a + w * b, params, loc)
         server_version += 1
         merges += 1
+        if obs.enabled():
+            obs.point("train.sync", sim_t0=t, sim_t1=t, cid=int(k),
+                      staleness=int(tau), mode="fedasync")
         m.downlink_bytes += pbytes + header_bytes
         m.n_messages += 1
         if merges % K == 0:

@@ -48,6 +48,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.dist_update import dist_update_kernel
 from repro.kernels.ensemble_vote import (
@@ -534,5 +535,60 @@ def dispatch(kernel: str, args: Sequence, kwargs: Optional[dict] = None, *,
             backend = "interpret" if interpret else "mosaic"
     pol = policy if policy is not None else _DEFAULT_POLICY
     bucket = bucket_of(kernel, args, kwargs)
-    return pol.resolve(kernel, bucket, explicit=backend).run(
-        kernel, *args, **kwargs)
+    be = pol.resolve(kernel, bucket, explicit=backend)
+    if not obs.profiling_enabled():
+        return be.run(kernel, *args, **kwargs)
+    # profiling path: timing a launch requires blocking on the device, so
+    # this only runs while obs profiling is switched on
+    blabel = bucket_label(bucket)
+    with obs.span(f"kernel.{kernel}", backend=be.name, bucket=blabel):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(be.run(kernel, *args, **kwargs))
+        dt = time.perf_counter() - t0
+    reg = obs.get_registry()
+    labels = dict(kernel=kernel, bucket=blabel, backend=be.name)
+    reg.counter("kernel.launches", **labels).inc()
+    reg.histogram("kernel.wall_s", **labels).observe(dt)
+    return out
+
+
+def bucket_label(bucket: Bucket) -> str:
+    """Render a shape bucket as a metrics label ("256x8x8")."""
+    return "x".join(str(int(d)) for d in bucket)
+
+
+def calibration_check(policy: Optional[KernelPolicy] = None,
+                      registry=None) -> List[Dict[str, object]]:
+    """Sanity-check the calibration table against *observed* launch timings.
+
+    For every (kernel, bucket) the policy has a calibrated winner for,
+    compare the winner's observed p50 wall time (from the
+    ``kernel.wall_s{kernel,bucket,backend}`` histograms that profiled
+    dispatches record) against every other backend observed on the same
+    bucket.  Returns one flag dict per entry where a non-winner was
+    measurably faster — i.e. the persisted calibration no longer matches
+    live behavior and a recalibration pass is warranted.  Entries with no
+    cross-backend observations are skipped, not flagged."""
+    pol = policy if policy is not None else _DEFAULT_POLICY
+    reg = registry if registry is not None else obs.get_registry()
+    observed: Dict[Tuple[str, str], Dict[str, object]] = {}
+    for name, labels, h in reg.histograms():
+        if name != "kernel.wall_s" or h.count == 0:
+            continue
+        key = (labels.get("kernel", ""), labels.get("bucket", ""))
+        observed.setdefault(key, {})[labels.get("backend", "")] = h
+    flags: List[Dict[str, object]] = []
+    for (kern, bucket), winner in sorted(pol.table.items()):
+        hists = observed.get((kern, bucket_label(bucket)))
+        if not hists or winner not in hists or len(hists) < 2:
+            continue
+        best = min(hists, key=lambda b: hists[b].p50)
+        if best != winner and hists[best].p50 < hists[winner].p50:
+            flags.append({
+                "kernel": kern, "bucket": bucket_label(bucket),
+                "calibrated": winner,
+                "calibrated_p50_s": hists[winner].p50,
+                "observed_best": best,
+                "observed_best_p50_s": hists[best].p50,
+            })
+    return flags

@@ -1,0 +1,292 @@
+"""Trace reporter: where did the time go, from an exported obs trace.
+
+    PYTHONPATH=src python -m repro.launch.obs_report TRACE.jsonl
+    PYTHONPATH=src python -m repro.launch.obs_report TRACE.jsonl \
+        --metrics METRICS.json --top 20 --folded out.folded --check
+
+Reads the JSON Lines trace written by ``Tracer.export_jsonl`` (schema in
+``src/repro/obs/README.md``) and prints:
+
+* **top spans** aggregated by name — count, total/self wall time, p50/p99
+  span duration (self time excludes child spans, so a phase that merely
+  *contains* the work doesn't dominate its own children);
+* a **per-phase breakdown** by namespace prefix (``train.`` / ``serve.`` /
+  ``kernel.`` / ``gossip.`` / ...) of self wall time;
+* with ``--metrics``, the **kernel profile** table from the registry
+  snapshot's ``kernel.wall_s{...}`` histograms, cross-checked against the
+  persisted backend-calibration table (a calibrated winner that the live
+  timings contradict is flagged for recalibration);
+* with ``--folded``, flamegraph-style folded stacks (``a;b;c <usec>`` of
+  self time per unique stack — feed to any FlameGraph renderer).
+
+``--check`` validates the trace instead of decorating it: every line must
+parse, every parent must exist and wall-contain its children, and every
+``serve.request`` must decompose (queue_s + batch_s + kernel_s ==
+latency_s == sim_t1 - sim_t0) within tolerance.  Exits non-zero on any
+violation — the CI obs job runs it on a freshly traced scenario.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from collections import defaultdict
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs import load_jsonl, percentile
+
+TOL = 1e-6      # seconds of slack for float accumulation in checks
+
+
+# ------------------------------------------------------------------ analysis
+def self_times(spans: List[Dict]) -> Dict[int, float]:
+    """Wall self time per span id: own duration minus direct children."""
+    dur = {s["span"]: (s["t1"] or s["t0"]) - s["t0"] for s in spans}
+    child_sum: Dict[int, float] = defaultdict(float)
+    for s in spans:
+        if s["parent"] is not None:
+            child_sum[s["parent"]] += dur[s["span"]]
+    return {sid: max(0.0, d - child_sum.get(sid, 0.0))
+            for sid, d in dur.items()}
+
+def aggregate(spans: List[Dict]) -> List[Dict]:
+    """Per-name aggregate rows, sorted by total wall time descending."""
+    self_t = self_times(spans)
+    rows: Dict[str, Dict] = {}
+    for s in spans:
+        r = rows.setdefault(s["name"], {"name": s["name"], "count": 0,
+                                        "total_s": 0.0, "self_s": 0.0,
+                                        "durs": []})
+        d = (s["t1"] or s["t0"]) - s["t0"]
+        r["count"] += 1
+        r["total_s"] += d
+        r["self_s"] += self_t[s["span"]]
+        r["durs"].append(d)
+    out = []
+    for r in rows.values():
+        out.append({"name": r["name"], "count": r["count"],
+                    "total_s": r["total_s"], "self_s": r["self_s"],
+                    "p50_s": percentile(r["durs"], 50.0),
+                    "p99_s": percentile(r["durs"], 99.0)})
+    return sorted(out, key=lambda r: -r["total_s"])
+
+def phase_breakdown(spans: List[Dict]) -> List[Tuple[str, float, int]]:
+    """(namespace, self wall seconds, span count), biggest first."""
+    self_t = self_times(spans)
+    agg: Dict[str, List[float]] = defaultdict(lambda: [0.0, 0])
+    for s in spans:
+        ns = s["name"].split(".", 1)[0]
+        agg[ns][0] += self_t[s["span"]]
+        agg[ns][1] += 1
+    return sorted(((ns, v[0], int(v[1])) for ns, v in agg.items()),
+                  key=lambda r: -r[1])
+
+def folded_stacks(spans: List[Dict]) -> Dict[str, int]:
+    """Flamegraph folded stacks: 'root;child;leaf' -> self usec."""
+    by_id = {s["span"]: s for s in spans}
+    self_t = self_times(spans)
+
+    def stack(s: Dict) -> str:
+        names = [s["name"]]
+        seen = {s["span"]}
+        p = s["parent"]
+        while p is not None and p in by_id and p not in seen:
+            seen.add(p)
+            names.append(by_id[p]["name"])
+            p = by_id[p]["parent"]
+        return ";".join(reversed(names))
+
+    out: Dict[str, int] = defaultdict(int)
+    for s in spans:
+        usec = int(round(1e6 * self_t[s["span"]]))
+        if usec > 0:
+            out[stack(s)] += usec
+    return dict(out)
+
+
+# --------------------------------------------------------------- validation
+def check_trace(spans: List[Dict]) -> List[str]:
+    """Structural violations in a trace (empty list = valid)."""
+    errors: List[str] = []
+    by_id: Dict[int, Dict] = {}
+    for s in spans:
+        if s["span"] in by_id:
+            errors.append(f"duplicate span id {s['span']}")
+        by_id[s["span"]] = s
+    for s in spans:
+        if s["t1"] is None:
+            errors.append(f"span {s['span']} ({s['name']}) never ended")
+            continue
+        if s["t1"] < s["t0"]:
+            errors.append(f"span {s['span']} ({s['name']}) ends before "
+                          f"it starts")
+        p = by_id.get(s["parent"]) if s["parent"] is not None else None
+        if s["parent"] is not None and p is None:
+            # a bounded ring may have dropped the parent of a retained
+            # child; only flag when nothing was dropped upstream
+            errors.append(f"span {s['span']} ({s['name']}) references "
+                          f"missing parent {s['parent']}")
+        elif p is not None and p["t1"] is not None:
+            if s["t0"] < p["t0"] - TOL or s["t1"] > p["t1"] + TOL:
+                errors.append(
+                    f"span {s['span']} ({s['name']}) escapes parent "
+                    f"{p['span']} ({p['name']}) wall window")
+        if s["name"] == "serve.request":
+            a = s["attrs"]
+            parts = a.get("queue_s", 0) + a.get("batch_s", 0) + \
+                a.get("kernel_s", 0)
+            if abs(parts - a.get("latency_s", 0)) > TOL:
+                errors.append(
+                    f"serve.request {s['span']}: queue+batch+kernel = "
+                    f"{parts:.6f}s != latency {a.get('latency_s'):.6f}s")
+            if (s["sim_t0"] is not None and s["sim_t1"] is not None and
+                    abs((s["sim_t1"] - s["sim_t0"])
+                        - a.get("latency_s", 0)) > TOL):
+                errors.append(
+                    f"serve.request {s['span']}: sim interval != latency")
+    return errors
+
+
+# ------------------------------------------------------------ kernel profile
+_LABELED = re.compile(r"^kernel\.wall_s\{(.*)\}$")
+
+def kernel_profile(metrics_snapshot: Dict,
+                   calibration_path: Optional[str] = None
+                   ) -> Tuple[List[Dict], List[str]]:
+    """(profile rows, calibration warnings) from a registry snapshot.
+
+    Rows come from ``kernel.wall_s{backend=...,bucket=...,kernel=...}``
+    histograms.  When a calibration table exists, each (kernel, bucket)
+    observed on 2+ backends is checked: if the calibrated winner's p50 is
+    not the fastest observed, a recalibration warning is emitted."""
+    rows: List[Dict] = []
+    launches = metrics_snapshot.get("counters", {})
+    for key, h in sorted(metrics_snapshot.get("histograms", {}).items()):
+        m = _LABELED.match(key)
+        if not m:
+            continue
+        labels = dict(kv.split("=", 1) for kv in m.group(1).split(","))
+        n = launches.get(key.replace("kernel.wall_s", "kernel.launches"),
+                         h.get("count", 0))
+        rows.append({"kernel": labels.get("kernel", "?"),
+                     "bucket": labels.get("bucket", "?"),
+                     "backend": labels.get("backend", "?"),
+                     "launches": int(n), "p50_s": h["p50"],
+                     "p99_s": h["p99"]})
+    warnings: List[str] = []
+    table: Dict[Tuple[str, str], str] = {}
+    if calibration_path and Path(calibration_path).exists():
+        data = json.loads(Path(calibration_path).read_text())
+        for e in data.get("table", []):
+            blabel = "x".join(str(int(d)) for d in e["bucket"])
+            table[(e["kernel"], blabel)] = e["backend"]
+    if table:
+        grouped: Dict[Tuple[str, str], Dict[str, float]] = defaultdict(dict)
+        for r in rows:
+            grouped[(r["kernel"], r["bucket"])][r["backend"]] = r["p50_s"]
+        for (kern, bucket), by_backend in sorted(grouped.items()):
+            winner = table.get((kern, bucket))
+            if winner is None or winner not in by_backend \
+                    or len(by_backend) < 2:
+                continue
+            best = min(by_backend, key=by_backend.get)
+            if best != winner:
+                warnings.append(
+                    f"calibration stale: {kern}@{bucket} calibrated to "
+                    f"'{winner}' (observed p50 {by_backend[winner]*1e3:.3f} "
+                    f"ms) but '{best}' measured faster "
+                    f"({by_backend[best]*1e3:.3f} ms) — recalibrate")
+    return rows, warnings
+
+
+# ----------------------------------------------------------------- printing
+def _fmt_s(s: float) -> str:
+    return f"{1e3 * s:10.3f}ms"
+
+def print_report(spans: List[Dict], top: int,
+                 metrics_snapshot: Optional[Dict],
+                 calibration_path: Optional[str]) -> None:
+    total_self = sum(self_times(spans).values())
+    print(f"{len(spans)} spans · {total_self * 1e3:.1f} ms traced self time")
+    print(f"\n-- top {top} span names (by total wall time) --")
+    print(f"{'name':<24}{'count':>7}{'total':>13}{'self':>13}"
+          f"{'p50':>13}{'p99':>13}")
+    for r in aggregate(spans)[:top]:
+        print(f"{r['name']:<24}{r['count']:>7}{_fmt_s(r['total_s']):>13}"
+              f"{_fmt_s(r['self_s']):>13}{_fmt_s(r['p50_s']):>13}"
+              f"{_fmt_s(r['p99_s']):>13}")
+    print("\n-- per-phase self time --")
+    for ns, sec, n in phase_breakdown(spans):
+        pct = 100.0 * sec / total_self if total_self else 0.0
+        print(f"{ns:<12}{_fmt_s(sec):>13}  {pct:5.1f}%  ({n} spans)")
+    if metrics_snapshot is not None:
+        rows, warns = kernel_profile(metrics_snapshot, calibration_path)
+        if rows:
+            print("\n-- kernel profile --")
+            print(f"{'kernel':<22}{'bucket':<16}{'backend':<11}"
+                  f"{'launches':>9}{'p50':>13}{'p99':>13}")
+            for r in rows:
+                print(f"{r['kernel']:<22}{r['bucket']:<16}"
+                      f"{r['backend']:<11}{r['launches']:>9}"
+                      f"{_fmt_s(r['p50_s']):>13}{_fmt_s(r['p99_s']):>13}")
+        for w in warns:
+            print(f"WARNING: {w}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-phase time breakdown from an obs JSONL trace")
+    ap.add_argument("trace", help="JSONL trace (Tracer.export_jsonl output)")
+    ap.add_argument("--metrics", default=None,
+                    help="registry snapshot JSON (MetricsRegistry.save)")
+    ap.add_argument("--calibration",
+                    default="artifacts/backend_calibration.json",
+                    help="backend calibration table to sanity-check "
+                         "against observed kernel timings")
+    ap.add_argument("--top", type=int, default=15,
+                    help="span names to show (default 15)")
+    ap.add_argument("--folded", default=None, metavar="OUT",
+                    help="write flamegraph folded stacks here")
+    ap.add_argument("--check", action="store_true",
+                    help="validate structure (parse, nesting, request "
+                         "decomposition); non-zero exit on violation")
+    args = ap.parse_args(argv)
+
+    try:
+        spans = load_jsonl(args.trace)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable trace {args.trace!r}: {e}", file=sys.stderr)
+        return 2
+    if not spans:
+        print(f"empty trace {args.trace!r}", file=sys.stderr)
+        return 2
+
+    snapshot = None
+    if args.metrics:
+        snapshot = json.loads(Path(args.metrics).read_text())
+
+    if args.check:
+        errors = check_trace(spans)
+        if errors:
+            for e in errors[:50]:
+                print(f"CHECK FAILED: {e}", file=sys.stderr)
+            print(f"{len(errors)} violation(s) in {len(spans)} spans",
+                  file=sys.stderr)
+            return 1
+        print(f"trace OK: {len(spans)} spans parse, nest, and decompose")
+
+    print_report(spans, args.top, snapshot, args.calibration)
+
+    if args.folded:
+        stacks = folded_stacks(spans)
+        with Path(args.folded).open("w") as f:
+            for stack, usec in sorted(stacks.items()):
+                f.write(f"{stack} {usec}\n")
+        print(f"\nwrote {len(stacks)} folded stacks -> {args.folded}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,7 @@ from __future__ import annotations
 import argparse
 import sys
 
+from repro import obs
 from repro.sim.harness import run_scenario, summarize
 from repro.sim.scenarios import (SCENARIOS, base_scenarios, get_scenario,
                                  variant_scenarios)
@@ -62,6 +63,14 @@ def main() -> None:
                     help="train + band check only")
     ap.add_argument("--no-autoscale", action="store_true",
                     help="fixed fleet during the serve replay")
+    # --trace names the *behavior* trace (pre-dates the obs layer), so the
+    # observability exports take the -out suffix here; serve_ensemble has
+    # no such clash and uses the plain --trace/--metrics spelling
+    ap.add_argument("--trace-out", default=None, metavar="OUT.jsonl",
+                    help="export the obs span timeline here (enables "
+                         "tracing + kernel profiling for the run)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="export the obs metrics-registry snapshot here")
     args = ap.parse_args()
 
     if args.list_ or args.scenario is None:
@@ -72,11 +81,21 @@ def main() -> None:
     if args.trace not in sc.traces:
         ap.error(f"scenario {sc.name!r} has no trace {args.trace!r}; "
                  f"choose from: legacy, {', '.join(sc.nontrivial_traces)}")
+    tracer = None
+    if args.trace_out or args.metrics_out:
+        tracer = obs.configure(trace=True)
     rep = run_scenario(sc, trace=args.trace, seed=args.seed,
                        n_rounds=args.rounds, serve=not args.no_serve,
                        serve_duration_s=args.serve_duration,
                        hosts=args.hosts, autoscale=not args.no_autoscale)
     print(summarize(rep))
+    if tracer is not None:
+        if args.trace_out:
+            print(f"trace: {len(tracer)} spans -> "
+                  f"{tracer.export_jsonl(args.trace_out)}")
+        if args.metrics_out:
+            print(f"metrics: -> {obs.get_registry().save(args.metrics_out)}")
+        obs.disable()
     sys.exit(0 if rep.within_band else 1)
 
 

@@ -26,14 +26,15 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.configs.paper_fedboost import FedBoostConfig
 from repro.sim.scenarios import DOMAINS
 from repro.core import FederatedBoostEngine
 from repro.data import make_domain_data
 from repro.kernels.dispatch import KernelPolicy
 from repro.serve import (AutoscaleConfig, BatchConfig, FleetAutoscaler,
-                         GossipConfig, PolicyTable, ShardCluster,
-                         ShardedEnsembleServer)
+                         GossipConfig, PolicyTable, ServeMetrics,
+                         ShardCluster, ShardedEnsembleServer)
 
 
 def train_tenants(cluster: ShardCluster, domains, rounds: int, seed: int,
@@ -172,7 +173,16 @@ def main() -> None:
                     help="backend-calibration table written by "
                          "benchmarks.backend_matrix; per-bucket winners "
                          "drive kernel dispatch")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="export the obs span timeline here (enables "
+                         "tracing + kernel profiling for the whole run)")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="export the obs metrics-registry snapshot here")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace or args.metrics:
+        tracer = obs.configure(trace=True)
 
     policy = None
     if args.backend:
@@ -223,6 +233,21 @@ def main() -> None:
         print(f"  tenant {name:<12} served {t['completed']:>5} "
               f"p99 {t['p99_ms']:>6.2f} ms  snapshot v{t['snapshot_version']} "
               f"staleness {t['mean_staleness_s']:.2f}s")
+
+    if tracer is not None:
+        if args.trace:
+            print(f"  trace: {len(tracer)} spans -> "
+                  f"{tracer.export_jsonl(args.trace)}")
+        if args.metrics:
+            # fold the fleet's per-host serving counters into the global
+            # registry snapshot so one file carries train + serve + kernel
+            fleet_view = ServeMetrics(obs.get_registry())
+            for _hid, _status, m in server._all_metrics():
+                ShardedEnsembleServer._merge_into(fleet_view, m)
+            ShardedEnsembleServer._merge_into(fleet_view, server.metrics)
+            print(f"  metrics: -> "
+                  f"{obs.get_registry().save(args.metrics)}")
+        obs.disable()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,204 @@
+"""Process-wide event/trace layer: nested spans on two clocks.
+
+Every span records a *wall-clock* interval (``time.perf_counter``) and,
+optionally, a *simulated-clock* interval (``sim_t0``/``sim_t1``) — the
+engines stamp spans with the event-queue virtual time, the serving stack
+with the caller-supplied serving clock, so one exported timeline merges
+"what the hardware did" with "when the simulation said it happened".
+
+Tracing is **off by default** and the disabled path is a true no-op: the
+module-level :func:`span` helper returns the shared :data:`NULL_SPAN`
+singleton without allocating anything, so instrumentation costs one global
+load and one ``is None`` test on the serving hot path (pinned by
+``tests/test_obs.py::test_disabled_span_is_shared_noop``).
+
+Finished spans land in a bounded in-memory ring (oldest dropped first) and
+export as JSON Lines — one object per line::
+
+    {"name": "serve.batch",          # dotted namespace (train./serve./...)
+     "span": 7, "parent": 3,         # ids; parent null for roots
+     "t0": 0.0123, "t1": 0.0456,     # wall clock, perf_counter seconds
+     "sim_t0": 1.5, "sim_t1": 1.52,  # simulated clock (null when unstamped)
+     "attrs": {"tenant": "mobile", "queue_s": 0.004, ...}}
+
+Nesting is by ``parent`` ids: a span opened while another is open becomes
+its child (one implicit stack per tracer; the tree is validated by
+``repro.launch.obs_report --check``).  The tracer is deliberately
+single-threaded — everything in this repo advances a simulated clock from
+one thread; a threaded ingress would hold one tracer per worker.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from collections import deque
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional
+
+
+class Span:
+    """One traced interval.  Use as a context manager (``with tracer.span
+    (...)``) or end explicitly via :meth:`end`."""
+
+    __slots__ = ("name", "span_id", "parent_id", "t0", "t1",
+                 "sim_t0", "sim_t1", "attrs", "_tracer")
+
+    def __init__(self, tracer: "Tracer", name: str, span_id: int,
+                 parent_id: Optional[int], sim_t: Optional[float],
+                 attrs: Dict):
+        self._tracer = tracer
+        self.name = name
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.t0 = time.perf_counter()
+        self.t1: Optional[float] = None
+        self.sim_t0 = None if sim_t is None else float(sim_t)
+        self.sim_t1: Optional[float] = None
+        self.attrs = attrs
+
+    # ------------------------------------------------------------- surface
+    def set(self, **attrs) -> "Span":
+        """Attach/overwrite attributes; returns self for chaining."""
+        self.attrs.update(attrs)
+        return self
+
+    def end_sim(self, sim_t: float) -> "Span":
+        """Stamp the simulated end time (wall end still set by end())."""
+        self.sim_t1 = float(sim_t)
+        return self
+
+    def end(self, sim_t: Optional[float] = None) -> None:
+        if self.t1 is not None:       # idempotent: with-block + manual end
+            return
+        if sim_t is not None:
+            self.sim_t1 = float(sim_t)
+        self.t1 = time.perf_counter()
+        self._tracer._finish(self)
+
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.attrs.setdefault("error", exc_type.__name__)
+        self.end()
+
+    # --------------------------------------------------------------- export
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "span": self.span_id,
+                "parent": self.parent_id, "t0": self.t0, "t1": self.t1,
+                "sim_t0": self.sim_t0, "sim_t1": self.sim_t1,
+                "attrs": self.attrs}
+
+
+class _NullSpan:
+    """The shared disabled-tracing span: every operation is a no-op.  A
+    single module-level instance is returned for *every* span request while
+    tracing is off, so the hot path never allocates."""
+
+    __slots__ = ()
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+    def end_sim(self, sim_t: float) -> "_NullSpan":
+        return self
+
+    def end(self, sim_t: Optional[float] = None) -> None:
+        pass
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        pass
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Span factory + bounded ring of finished spans.
+
+    ``ring`` bounds memory: a long soak keeps the most recent spans and
+    drops the oldest (dropped count in :attr:`dropped`).
+    """
+
+    def __init__(self, ring: int = 65536):
+        self._ring: deque = deque(maxlen=int(ring))
+        self._stack: List[int] = []        # open span ids (nesting)
+        self._ids = itertools.count(1)
+        self.dropped = 0
+        self.started = 0
+
+    # ------------------------------------------------------------ creation
+    def span(self, name: str, sim_t: Optional[float] = None,
+             **attrs) -> Span:
+        """Open a nested span; the parent is the innermost open span."""
+        parent = self._stack[-1] if self._stack else None
+        sp = Span(self, name, next(self._ids), parent, sim_t, attrs)
+        self._stack.append(sp.span_id)
+        self.started += 1
+        return sp
+
+    def point(self, name: str, sim_t0: Optional[float] = None,
+              sim_t1: Optional[float] = None, **attrs) -> Span:
+        """Record an already-finished (instant) span — an event.  It is a
+        child of the innermost open span but never enters the stack."""
+        parent = self._stack[-1] if self._stack else None
+        sp = Span(self, name, next(self._ids), parent, sim_t0, attrs)
+        sp.sim_t1 = None if sim_t1 is None else float(sim_t1)
+        self.started += 1
+        sp.end()
+        return sp
+
+    def _finish(self, sp: Span) -> None:
+        # pop through the stack to this span: children left open by an
+        # early exit are abandoned rather than corrupting later parents
+        if sp.span_id in self._stack:
+            while self._stack and self._stack[-1] != sp.span_id:
+                self._stack.pop()
+            if self._stack:
+                self._stack.pop()
+        if len(self._ring) == self._ring.maxlen:
+            self.dropped += 1
+        self._ring.append(sp.to_dict())
+
+    # -------------------------------------------------------------- export
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def finished(self) -> List[Dict]:
+        """Finished spans, oldest first (copies the ring)."""
+        return list(self._ring)
+
+    def iter_finished(self) -> Iterator[Dict]:
+        return iter(self._ring)
+
+    def clear(self) -> None:
+        self._ring.clear()
+        self._stack.clear()
+        self.dropped = 0
+        self.started = 0
+
+    def export_jsonl(self, path) -> str:
+        """Write the ring as JSON Lines; returns the path written."""
+        p = Path(path)
+        if p.parent != Path(""):
+            p.parent.mkdir(parents=True, exist_ok=True)
+        with p.open("w") as f:
+            for d in self._ring:
+                f.write(json.dumps(d) + "\n")
+        return str(p)
+
+
+def load_jsonl(path) -> List[Dict]:
+    """Parse a trace file written by :meth:`Tracer.export_jsonl`."""
+    out = []
+    with Path(path).open() as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -51,6 +51,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+from repro import obs
 from repro.configs.paper_fedboost import SchedulerConfig
 from repro.core.scheduling import HostScheduler
 from repro.serve.engine import Response
@@ -253,6 +254,10 @@ class FleetAutoscaler:
         self.stats.scale_outs += 1
         self.stats.events.append((now, "out", host_id,
                                   len(self.server.servers)))
+        obs.count("autoscale.scale_outs")
+        if obs.enabled():
+            obs.point("autoscale.scale_out", sim_t0=now, sim_t1=now,
+                      host=host_id, hosts=len(self.server.servers))
         return []
 
     def _shed(self, pool: List[str], now: float) -> List[Response]:
@@ -265,4 +270,10 @@ class FleetAutoscaler:
         self.stats.rerouted += rerouted
         self.stats.events.append((now, "in", victim,
                                   len(self.server.servers)))
+        obs.count("autoscale.scale_ins")
+        obs.count("autoscale.rerouted", rerouted)
+        if obs.enabled():
+            obs.point("autoscale.scale_in", sim_t0=now, sim_t1=now,
+                      host=victim, hosts=len(self.server.servers),
+                      rerouted=rerouted)
         return responses

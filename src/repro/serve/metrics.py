@@ -2,95 +2,143 @@
 sizes, snapshot staleness — the operational counters the load benchmark and
 the `serve_ensemble` driver report.
 
-Latencies are kept in a bounded reservoir per tenant (uniform-ish by keeping
-every k-th sample once full) so a long soak doesn't grow memory unboundedly.
+Since the `repro.obs` layer landed, this module is a thin *view* over a
+:class:`~repro.obs.registry.MetricsRegistry` rather than a parallel
+implementation: every per-tenant counter is a registry ``Counter``/
+``Gauge`` and every latency reservoir a registry ``Histogram`` (the single
+bounded-reservoir estimator in the repo — keep every sample until full,
+then every 8th under a sweeping cursor).  Each :class:`ServeMetrics` owns a
+*private* registry, because per-host serving counters must merge per fleet
+(``ShardedEnsembleServer.report``) rather than blending into the
+process-wide namespace; pass ``registry=obs.get_registry()`` to publish a
+single server's counters globally.
+
+Fleet percentiles weight each tenant's retained samples by how many stream
+observations they stand for (``Histogram.weight_per_sample``) — see
+:meth:`ServeMetrics.fleet_percentile` for why plain concatenation is
+biased.
 """
 from __future__ import annotations
 
-import math
 from collections import Counter
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.obs.registry import (MetricsRegistry, percentile,
+                                weighted_percentile)
 
-def percentile(values: List[float], q: float) -> float:
-    """Nearest-rank percentile (no numpy dependency on the hot path).
-
-    Explicit ceil form: the smallest sample value with at least ``q``\\ % of
-    the sorted sample at or below it, i.e. rank ``ceil(q/100 * n)``
-    (1-based).  An earlier ``int(round(...))`` formulation used banker's
-    rounding, which can land an index off the nearest rank on even-length
-    lists; the behavior is pinned by a table-driven test."""
-    if not values:
-        return 0.0
-    s = sorted(values)
-    rank = math.ceil(q / 100.0 * len(s))          # 1-based nearest rank
-    return s[min(len(s) - 1, max(0, rank - 1))]
+__all__ = ["percentile", "weighted_percentile", "TenantMetrics",
+           "ServeMetrics"]
 
 
-@dataclass
 class TenantMetrics:
-    completed: int = 0
-    rejected: int = 0
-    latencies: List[float] = field(default_factory=list)
-    staleness_sum: float = 0.0       # snapshot age summed at completion time
-    last_version: int = 0
-    _reservoir: int = 4096
-    _skip: int = 0
+    """One tenant's serving counters — a view over registry instruments
+    (``serve.completed{tenant=...}``, ``serve.latency_s{tenant=...}``, ...)
+    that keeps the pre-obs read surface (``completed``, ``latencies``,
+    ``p50``, ``mean_staleness``) intact for callers and tests."""
 
+    __slots__ = ("_completed", "_rejected", "_staleness", "_lat", "_version")
+
+    def __init__(self, registry: MetricsRegistry, tenant: str):
+        self._completed = registry.counter("serve.completed", tenant=tenant)
+        self._rejected = registry.counter("serve.rejected", tenant=tenant)
+        self._staleness = registry.counter("serve.staleness_s_sum",
+                                           tenant=tenant)
+        self._lat = registry.histogram("serve.latency_s", tenant=tenant)
+        self._version = registry.gauge("serve.snapshot_version",
+                                       tenant=tenant)
+
+    # ------------------------------------------------------------- records
     def record(self, latency_s: float, staleness_s: float, version: int
                ) -> None:
-        self.completed += 1
-        self.staleness_sum += max(0.0, staleness_s)
-        self.last_version = version
-        if len(self.latencies) < self._reservoir:
-            self.latencies.append(latency_s)
-        else:                        # thin the stream: keep every 8th sample
-            self._skip += 1
-            if self._skip % 8 == 0:
-                # dedicated write cursor so successive writes sweep the whole
-                # reservoir (completed % size would revisit only size/8 slots)
-                self.latencies[(self._skip // 8) % self._reservoir] = latency_s
+        self._completed.inc()
+        self._staleness.inc(max(0.0, staleness_s))
+        self._version.max(version)
+        self._lat.observe(latency_s)
+
+    def record_rejected(self) -> None:
+        self._rejected.inc()
+
+    def merge_from(self, other: "TenantMetrics") -> None:
+        """Fold another host's counters for the *same* tenant in (fleet
+        report merging): counters add, the latency histogram extends with
+        retained samples + stream totals, version merges by max."""
+        self._completed.inc(other._completed.value)
+        self._rejected.inc(other._rejected.value)
+        self._staleness.inc(other._staleness.value)
+        self._lat.extend(other._lat)
+        self._version.max(other._version.value)
+
+    # --------------------------------------------------------------- reads
+    @property
+    def completed(self) -> int:
+        return int(self._completed.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._rejected.value)
+
+    @property
+    def latencies(self) -> List[float]:
+        """The retained latency reservoir (thinned once past capacity)."""
+        return self._lat.values
+
+    @property
+    def latency_hist(self):
+        return self._lat
+
+    @property
+    def staleness_sum(self) -> float:
+        return self._staleness.value
+
+    @property
+    def last_version(self) -> int:
+        return int(self._version.value)
 
     @property
     def p50(self) -> float:
-        return percentile(self.latencies, 50.0)
+        return self._lat.p50
 
     @property
     def p99(self) -> float:
-        return percentile(self.latencies, 99.0)
+        return self._lat.p99
 
     @property
     def mean_staleness(self) -> float:
         return self.staleness_sum / self.completed if self.completed else 0.0
 
 
-@dataclass
 class ServeMetrics:
-    """Aggregated serving counters (per tenant + fleet-wide)."""
-    tenants: Dict[str, TenantMetrics] = field(default_factory=dict)
-    batch_size_hist: Counter = field(default_factory=Counter)
-    window_units_hist: Counter = field(default_factory=Counter)
-    queue_depth_peak: int = 0
-    n_batches: int = 0
-    first_submit_t: Optional[float] = None
-    last_finish_t: Optional[float] = None
+    """Aggregated serving counters (per tenant + fleet-wide) over one
+    private :class:`MetricsRegistry` (injectable for a global namespace)."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tenants: Dict[str, TenantMetrics] = {}
+        self.batch_size_hist: Counter = Counter()
+        self.window_units_hist: Counter = Counter()
+        self.first_submit_t: Optional[float] = None
+        self.last_finish_t: Optional[float] = None
+        self._batches = self.registry.counter("serve.batches")
+        self._depth_peak = self.registry.gauge("serve.queue_depth_peak")
 
     def tenant(self, name: str) -> TenantMetrics:
-        return self.tenants.setdefault(name, TenantMetrics())
+        t = self.tenants.get(name)
+        if t is None:
+            t = self.tenants[name] = TenantMetrics(self.registry, name)
+        return t
 
     # ------------------------------------------------------------- records
     def record_submit(self, now: float, depth: int) -> None:
         if self.first_submit_t is None:
             self.first_submit_t = now
-        self.queue_depth_peak = max(self.queue_depth_peak, depth)
+        self._depth_peak.max(depth)
 
     def record_rejected(self, tenant: str) -> None:
-        self.tenant(tenant).rejected += 1
+        self.tenant(tenant).record_rejected()
 
     def record_batch(self, size: int, window_units: int, finish_t: float
                      ) -> None:
-        self.n_batches += 1
+        self._batches.inc()
         self.batch_size_hist[size] += 1
         self.window_units_hist[window_units] += 1
         self.last_finish_t = (finish_t if self.last_finish_t is None
@@ -110,6 +158,14 @@ class ServeMetrics:
         return sum(t.rejected for t in self.tenants.values())
 
     @property
+    def n_batches(self) -> int:
+        return int(self._batches.value)
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return int(self._depth_peak.value)
+
+    @property
     def mean_batch(self) -> float:
         n = sum(self.batch_size_hist.values())
         return (sum(k * v for k, v in self.batch_size_hist.items()) / n
@@ -123,19 +179,39 @@ class ServeMetrics:
         return self.completed / (self.last_finish_t - self.first_submit_t)
 
     def all_latencies(self) -> List[float]:
+        """Every retained latency sample, concatenated across tenants.
+
+        NOTE this concatenation is *biased* once any tenant's reservoir has
+        thinned: a tenant with 100k completions holds the same ~4096
+        samples as one with 4096 completions, so its traffic is undercounted
+        ~25x in any quantile of the concatenation (fleet p99 skews toward
+        low-traffic tenants).  Use :meth:`fleet_percentile` for fleet
+        quantiles; this list remains for mean-style uses and debugging."""
         out: List[float] = []
         for t in self.tenants.values():
             out.extend(t.latencies)
         return out
 
+    def fleet_percentile(self, q: float) -> float:
+        """Fleet-wide latency percentile with per-tenant sample weighting:
+        each retained sample counts as ``completed / len(reservoir)`` stream
+        observations, so tenants whose reservoirs thinned at different
+        rates contribute in proportion to their true traffic.  With no
+        thinning anywhere, this equals ``percentile(all_latencies(), q)``
+        exactly."""
+        pairs = []
+        for t in self.tenants.values():
+            w = t.latency_hist.weight_per_sample
+            pairs.extend((v, w) for v in t.latencies)
+        return weighted_percentile(pairs, q)
+
     def report(self) -> Dict:
-        lats = self.all_latencies()
         return {
             "completed": self.completed,
             "rejected": self.rejected,
             "throughput_rps": self.throughput(),
-            "p50_ms": 1e3 * percentile(lats, 50.0),
-            "p99_ms": 1e3 * percentile(lats, 99.0),
+            "p50_ms": 1e3 * self.fleet_percentile(50.0),
+            "p99_ms": 1e3 * self.fleet_percentile(99.0),
             "mean_batch": self.mean_batch,
             "n_batches": self.n_batches,
             "queue_depth_peak": self.queue_depth_peak,
@@ -151,3 +227,7 @@ class ServeMetrics:
                 for name, t in sorted(self.tenants.items())
             },
         }
+
+    def snapshot(self) -> Dict:
+        """The underlying registry snapshot (obs export surface)."""
+        return self.registry.snapshot()

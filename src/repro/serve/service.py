@@ -36,6 +36,7 @@ import time
 import warnings
 from typing import Callable, Iterator, List, Optional, Tuple
 
+from repro import obs
 from repro.kernels.dispatch import KernelPolicy
 from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
 from repro.serve.cache import ResultCache
@@ -129,23 +130,34 @@ class EnsembleServer:
         return req is not None, out
 
     # ----------------------------------------------------------- dispatch
-    def _next_due(self) -> Optional[float]:
-        """Earliest instant the head batch may dispatch, or None if empty."""
+    def _window_due(self) -> Optional[float]:
+        """Instant the head batch becomes dispatchable — its micro-batch
+        window closing (or size cap filling) — *ignoring* server busyness.
+        The gap between this and the actual dispatch instant is queueing
+        delay behind the in-flight batch, which the request traces report
+        separately from batching delay."""
         oldest = self.queue.oldest_t()
         if oldest is None:
             return None
         full_t = self.queue.full_batch_t()
-        due = full_t if full_t is not None else oldest + self.window.window_s
-        return max(due, self._busy_until)
+        return full_t if full_t is not None else oldest + self.window.window_s
+
+    def _next_due(self) -> Optional[float]:
+        """Earliest instant the head batch may dispatch, or None if empty."""
+        due = self._window_due()
+        return None if due is None else max(due, self._busy_until)
 
     def advance(self, now: float) -> List[Response]:
         """Dispatch every batch due at or before ``now``."""
         out: List[Response] = []
         while True:
-            due = self._next_due()
-            if due is None or due > now:
+            window_due = self._window_due()
+            if window_due is None:
                 return out
-            out.extend(self._dispatch(due))
+            due = max(window_due, self._busy_until)
+            if due > now:
+                return out
+            out.extend(self._dispatch(due, window_due))
 
     def drain(self) -> List[Response]:
         """Flush the queue: dispatch remaining batches as their windows (or
@@ -159,15 +171,27 @@ class EnsembleServer:
             self._unsubscribe()
             self._unsubscribe = None
 
-    def _dispatch(self, at: float) -> List[Response]:
+    def _dispatch(self, at: float,
+                  window_due: Optional[float] = None) -> List[Response]:
+        # window_due <= at: `at` adds only the wait behind the in-flight
+        # batch (single-server discipline).  drain()-style callers that
+        # dispatch without a window bound collapse batching delay into
+        # queueing delay by passing nothing.
+        if window_due is None:
+            window_due = at
+        traced = obs.enabled()
         batch = self.queue.pop_batch()
+        bsp = obs.span("serve.batch", sim_t=at, host=self.host_id or "",
+                       size=len(batch))
         if self.service_model is not None:
-            responses = self.evaluator.evaluate(batch)
+            with obs.span("serve.kernel"):
+                responses = self.evaluator.evaluate(batch)
             service_s = float(self.service_model(
                 self.evaluator.last_eval.kernel_requests))
         else:
             t0 = time.perf_counter()
-            responses = self.evaluator.evaluate(batch)
+            with obs.span("serve.kernel"):
+                responses = self.evaluator.evaluate(batch)
             service_s = time.perf_counter() - t0
         finish = at + service_s
         self._busy_until = finish
@@ -181,6 +205,24 @@ class EnsembleServer:
                 r.tenant, latency,
                 staleness_s=self.registry.staleness(r.tenant, finish),
                 version=r.snapshot_version)
+            if traced:
+                # exact decomposition: batch_s (waiting for the window to
+                # close) + queue_s (waiting for the server to free up) +
+                # kernel_s (the batch's service time) == latency, whether
+                # the request arrived before or after the window closed
+                obs.point(
+                    "serve.request", sim_t0=r.t_submit, sim_t1=finish,
+                    rid=r.rid, tenant=r.tenant,
+                    batch_s=max(0.0, window_due - r.t_submit),
+                    queue_s=at - max(r.t_submit, window_due),
+                    kernel_s=service_s, latency_s=latency)
+        if traced:
+            le = self.evaluator.last_eval
+            bsp.set(window_units=self.window.units, service_s=service_s,
+                    kernel_requests=le.kernel_requests,
+                    cached=le.cached_requests, deduped=le.deduped_requests,
+                    abstained=le.abstained_requests)
+        bsp.end(sim_t=finish)
         return responses
 
 
@@ -385,17 +427,12 @@ class ShardedEnsembleServer:
     @staticmethod
     def _merge_into(merged: ServeMetrics, m: ServeMetrics) -> None:
         for name, t in m.tenants.items():
-            mt = merged.tenant(name)
-            mt.completed += t.completed
-            mt.rejected += t.rejected
-            mt.latencies.extend(t.latencies)
-            mt.staleness_sum += t.staleness_sum
-            mt.last_version = max(mt.last_version, t.last_version)
+            merged.tenant(name).merge_from(t)
         merged.batch_size_hist.update(m.batch_size_hist)
         merged.window_units_hist.update(m.window_units_hist)
-        merged.n_batches += m.n_batches
-        merged.queue_depth_peak = max(merged.queue_depth_peak,
-                                      m.queue_depth_peak)
+        merged.registry.counter("serve.batches").inc(m.n_batches)
+        merged.registry.gauge("serve.queue_depth_peak").max(
+            m.queue_depth_peak)
         t0, t1 = m.first_submit_t, m.last_finish_t
         if t0 is not None:
             merged.first_submit_t = (t0 if merged.first_submit_t is None

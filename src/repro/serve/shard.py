@@ -34,6 +34,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.serve.registry import EnsembleRegistry, EnsembleSnapshot
 
 
@@ -241,12 +242,20 @@ class ShardCluster:
         random up peers.  Returns cumulative stats."""
         up = self.host_ids()
         self.stats.rounds += 1
-        for hid in up:
-            peers = [p for p in up if p != hid]
-            self._rng.shuffle(peers)
-            for pid in peers[:self.cfg.fanout]:
-                self._anti_entropy(self.hosts[hid], self.hosts[pid], now)
-                self.stats.exchanges += 1
+        pulled0, rec0 = self.stats.pulled, self.stats.reconciled
+        with obs.span("gossip.round", sim_t=now, hosts=len(up)) as sp:
+            for hid in up:
+                peers = [p for p in up if p != hid]
+                self._rng.shuffle(peers)
+                for pid in peers[:self.cfg.fanout]:
+                    self._anti_entropy(self.hosts[hid], self.hosts[pid], now)
+                    self.stats.exchanges += 1
+            sp.set(pulled=self.stats.pulled - pulled0,
+                   reconciled=self.stats.reconciled - rec0)
+            sp.end_sim(now)
+        obs.count("gossip.rounds")
+        obs.count("gossip.pulled", self.stats.pulled - pulled0)
+        obs.count("gossip.reconciled", self.stats.reconciled - rec0)
         return self.stats
 
     def run_until_quiescent(self, now: float = 0.0, max_rounds: int = 64

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import FederatedBoostEngine
 from repro.core.async_engine import RunMetrics
 from repro.core.metrics import common_target, pct_reduction, time_to_error
@@ -81,7 +82,10 @@ def train_pair(sc: Scenario, trace: str, seed: int = 0,
                                    behavior_for=sc.behavior_for(trace, seed))
         if mode == "enhanced" and cluster is not None:
             eng.attach_registry(cluster, sc.name, publish_every=publish_every)
-        runs[mode] = eng.run()
+        with obs.span("scenario.train", sim_t=0.0, scenario=sc.name,
+                      trace=trace, seed=seed, mode=mode) as sp:
+            runs[mode] = eng.run()
+            sp.end_sim(runs[mode].sim_time_s)
     return data, runs
 
 
@@ -118,6 +122,8 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
     time, so diurnal cycles and outage windows project onto the replay
     window.  Asserts the fleet's zero-loss invariant (every accepted
     request answered exactly once across membership churn)."""
+    sp = obs.span("scenario.serve_replay", sim_t=0.0, scenario=sc.name,
+                  trace=trace, seed=seed)
     cluster.run_until_quiescent()
     cluster.rebase_clock(0.0)
     server = ShardedEnsembleServer(cluster, SERVE_BATCH,
@@ -177,6 +183,8 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
 
     rep = server.report()
     tenant = rep["tenants"].get(sc.name, {})
+    sp.set(completed=rep["completed"], hosts_final=len(server.servers))
+    sp.end(sim_t=duration_s)
     return {
         "offered": len(arrivals), "offline_suppressed": offline,
         "completed": rep["completed"], "rejected": rep["rejected"],
@@ -202,19 +210,20 @@ def run_scenario(name_or_scenario, trace: str = "legacy", seed: int = 0,
     into an autoscaled serving fleet."""
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get_scenario(name_or_scenario))
-    cluster = (ShardCluster(hosts, GossipConfig(seed=seed))
-               if serve else None)
-    data, runs = train_pair(sc, trace, seed=seed, n_rounds=n_rounds,
-                            cluster=cluster, publish_every=publish_every)
-    row = result_row(runs)
-    report = ScenarioReport(
-        scenario=sc.name, trace=trace, seed=seed,
-        baseline=runs["baseline"], enhanced=runs["enhanced"],
-        row=row, band_failures=sc.band.check(row))
-    if serve:
-        report.serve = replay_serve(sc, cluster, data, trace, seed=seed,
-                                    duration_s=serve_duration_s,
-                                    autoscale=autoscale)
+    with obs.span("scenario.run", scenario=sc.name, trace=trace, seed=seed):
+        cluster = (ShardCluster(hosts, GossipConfig(seed=seed))
+                   if serve else None)
+        data, runs = train_pair(sc, trace, seed=seed, n_rounds=n_rounds,
+                                cluster=cluster, publish_every=publish_every)
+        row = result_row(runs)
+        report = ScenarioReport(
+            scenario=sc.name, trace=trace, seed=seed,
+            baseline=runs["baseline"], enhanced=runs["enhanced"],
+            row=row, band_failures=sc.band.check(row))
+        if serve:
+            report.serve = replay_serve(sc, cluster, data, trace, seed=seed,
+                                        duration_s=serve_duration_s,
+                                        autoscale=autoscale)
     return report
 
 
