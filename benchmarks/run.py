@@ -81,8 +81,9 @@ def main() -> None:
     from benchmarks import (autoscale_load, backend_matrix,
                             controller_compare, domains, fedavg_compare,
                             kernel_bench, multipod_compare, relevance_filter,
-                            roofline, scenario_matrix, scheduler_ablation,
-                            serving_load, shard_gossip, staleness)
+                            roofline, scale_matrix, scenario_matrix,
+                            scheduler_ablation, serving_load, shard_gossip,
+                            staleness)
 
     # the single benchmark registry: name -> thunk, in run order
     benches = {
@@ -113,6 +114,8 @@ def main() -> None:
         "autoscale_load": lambda: autoscale_load.main(quick=args.quick),
         # kernel x backend x shape-bucket wall-clock + calibration table
         "backend_matrix": lambda: backend_matrix.main(quick=args.quick),
+        # 100k-client fleet-scale smoke through the vectorized fleet profile
+        "scale_matrix": lambda: scale_matrix.main(quick=args.quick),
         # per-kernel microbench rows (not wall-timed by the harness)
         "kernel_bench": kernel_bench.rows,
     }
@@ -168,6 +171,8 @@ def main() -> None:
     csv_rows.extend(results.get("backend_matrix", []))
     csv_rows.extend(scenario_matrix.csv_rows(
         results.get("scenario_matrix", [])))
+    csv_rows.extend(scale_matrix.csv_rows(
+        results.get("scale_matrix", [])))
     for name, us, derived in csv_rows:
         print(f"{name},{us:.1f},{derived}")
     if written:

@@ -1,0 +1,100 @@
+"""Fleet-scale matrix: the 100k-client scenario through the vectorized
+fleet profile (repro.core.fleet) — the event core's scale acceptance.
+
+Runs the registered ``*_100k`` scenario(s) end to end (train both modes;
+the serve replay is off by scenario design) and records per-cell
+wall-clock, simulated-time, communication, and band results.  Asserts the
+whole matrix completes inside ``WALL_BUDGET_S`` — the scale-smoke CI job
+runs the quick matrix under this budget and archives the BENCH json.
+
+    PYTHONPATH=src python -m benchmarks.scale_matrix            # full
+    PYTHONPATH=src python -m benchmarks.scale_matrix --quick    # 1 trace, 2 rounds
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.sim.harness import run_scenario
+from repro.sim.scenarios import SCENARIOS, get_scenario
+
+# wall-clock acceptance budget for the whole matrix (seconds)
+WALL_BUDGET_S = {"quick": 900.0, "full": 3600.0}
+
+
+def scale_scenarios() -> List[str]:
+    return [n for n in SCENARIOS if n.endswith("_100k")]
+
+
+def run_cell(name: str, trace: str, seed: int, n_rounds: int) -> Dict:
+    sc = get_scenario(name)
+    t0 = time.time()
+    rep = run_scenario(sc, trace=trace, seed=seed, n_rounds=n_rounds)
+    wall = time.time() - t0
+    b, e = rep.baseline, rep.enhanced
+    return {
+        "scenario": name, "trace": trace, "seed": seed,
+        "n_clients": sc.domain.n_clients, "n_rounds": n_rounds,
+        "wall_s": round(wall, 1),
+        "sim_time_baseline_s": b.sim_time_s,
+        "sim_time_enhanced_s": e.sim_time_s,
+        "learners_merged": e.learners_merged,
+        "syncs_enhanced": e.n_syncs,
+        "bytes_baseline": b.total_bytes, "bytes_enhanced": e.total_bytes,
+        **{k: rep.row[k] for k in ("time_down", "comm_down", "msgs_down",
+                                   "acc_delta_pp")},
+        "band_failures": rep.band_failures,
+        "within_band": rep.within_band,
+    }
+
+
+def main(quick: bool = False, seeds: Optional[Sequence[int]] = None,
+         n_rounds: Optional[int] = None) -> List[Dict]:
+    names = scale_scenarios()
+    rounds = n_rounds if n_rounds is not None else (2 if quick else 4)
+    seeds = seeds if seeds is not None else (0,)
+    budget = WALL_BUDGET_S["quick" if quick else "full"]
+
+    print("=" * 100)
+    print(f"fleet-scale matrix: {', '.join(names)} "
+          f"({rounds} rounds, seeds {tuple(seeds)}, "
+          f"budget {budget:.0f}s wall)")
+    print("=" * 100)
+    t0 = time.time()
+    results: List[Dict] = []
+    for name in names:
+        sc = get_scenario(name)
+        traces = ["legacy"] if quick else ["legacy"] + sc.nontrivial_traces
+        for trace in traces:
+            for seed in seeds:
+                cell = run_cell(name, trace, seed, rounds)
+                results.append(cell)
+                print(f"{name:<14} {trace:<10} seed {seed}: "
+                      f"wall {cell['wall_s']:7.1f}s  "
+                      f"time_down {cell['time_down']:+6.1f}%  "
+                      f"comm_down {cell['comm_down']:+6.1f}%  "
+                      f"acc {cell['acc_delta_pp']:+5.2f}pp  "
+                      + ("WITHIN BAND" if cell["within_band"] else
+                         "OUT OF BAND: " + "; ".join(cell["band_failures"])))
+    total_wall = time.time() - t0
+    print(f"\ntotal wall: {total_wall:.1f}s (budget {budget:.0f}s)")
+    assert total_wall <= budget, (
+        f"scale matrix blew its wall-clock budget: "
+        f"{total_wall:.1f}s > {budget:.0f}s")
+    return results
+
+
+def csv_rows(results: List[Dict]) -> List:
+    return [(f"scale_{r['scenario']}_{r['trace']}", r["wall_s"] * 1e6,
+             f"time_down={r['time_down']:.1f}%;"
+             f"comm_down={r['comm_down']:.1f}%;"
+             f"within_band={int(r['within_band'])}")
+            for r in results]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

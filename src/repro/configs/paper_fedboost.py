@@ -11,7 +11,7 @@ EXPERIMENTS.md §Paper for the sensitivity sweep over these choices.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -32,9 +32,19 @@ class SchedulerConfig:
 
 @dataclass(frozen=True)
 class CompensationConfig:
-    """Delayed weight compensation α̃ = α·exp(−λτ) (paper eq. 2)."""
-    lam: float = 0.15           # staleness decay constant λ
+    """Delayed weight compensation α̃ = α·s(τ) (paper eq. 2 generalized).
+
+    ``decay`` selects s(τ) from the FedAsync staleness family
+    (repro.core.compensation): ``exp`` is the paper's eq.-(2)
+    exp(−λτ) and the default; ``constant``/``hinge``/``poly`` are the
+    FedAsync alternatives (FLGo's defaults for a and b).  τ is clamped to
+    [0, tau_cap] for every family."""
+    lam: float = 0.15           # staleness decay constant λ (exp family)
     tau_cap: int = 32           # clamp pathological delays
+    decay: str = "exp"          # exp | constant | hinge | poly
+    hinge_a: float = 10.0       # hinge slope 1/(a·(τ−b)) beyond b
+    hinge_b: float = 6.0        # hinge grace period in rounds
+    poly_a: float = 0.5         # polynomial exponent (τ+1)^(−a)
 
 
 @dataclass(frozen=True)
@@ -61,6 +71,12 @@ class FedBoostConfig:
     # communication model: bytes per learner and per sync message header
     link_mbps: float = 10.0      # client uplink
     header_bytes: int = 256
+    # scale knob: at sync, replay at most this many of the newest foreign
+    # learners into the client's local distribution (None = exact/paper-
+    # faithful replay of the whole window).  Fleet-scale scenarios cap this
+    # so catch-up work per sync is O(cap), not O(ensemble); it applies to
+    # both modes so the baseline/enhanced comparison stays apples-to-apples.
+    catch_up_cap: Optional[int] = None
 
 
 @dataclass(frozen=True)

@@ -39,6 +39,26 @@ Every per-round cost is asked of the client's
   buffer grows (stale, compensated) and the client stalls by
   ``behavior.stall_time`` — one compute round for the legacy shim, the
   rest of the window for an outage model.
+
+Execution engines
+-----------------
+``engine="events"`` (the default) runs both modes on the
+:mod:`repro.core.events` priority-queue virtual clock: round completions,
+stalls, sync triggers, message arrivals, and round barriers are all
+events.  Client legs between syncs are *causally closed* — a client
+observes server state only at its own sync, and its behavior draws depend
+only on its own clock — so each leg's math is evaluated at schedule time
+in exactly the legacy call order, which keeps results bit-for-bit
+identical to ``engine="loop"`` (the retained client-at-a-time legacy
+loops, kept as the golden parity oracle) at equal seeds.
+
+``fleet=True`` (auto-enabled at >= ``FLEET_AUTO_CLIENTS`` clients)
+switches the event core to the vectorized fleet profile
+(:mod:`repro.core.fleet`): stump fits are deferred and batched into
+bucketed ``stump_scan_batched`` launches, and per-sync server math runs
+vectorized in numpy.  Communication accounting is integer math and stays
+exact; floating-point results match the reference profile up to summation
+order.  This is the profile that makes 100k+-client scenarios tractable.
 """
 from __future__ import annotations
 
@@ -53,10 +73,12 @@ import numpy as np
 
 from repro import obs
 from repro.configs.paper_fedboost import FedBoostConfig
+from repro.core import events
 from repro.core.boosting import (
     Ensemble, update_distribution, weighted_error)
-from repro.core.buffers import BufferEntry, ClientBuffer
-from repro.core.compensation import adaboost_alpha, compensate
+from repro.core.buffers import BufferEntry, ClientBuffer, entry_wire_bytes
+from repro.core.compensation import (
+    adaboost_alpha, compensate, staleness_scale)
 from repro.core.scheduling import HostScheduler
 from repro.models.weak import WeakLearnerSpec, get_weak_learner
 from repro.sim.behavior import ClientBehavior, legacy_behaviors
@@ -90,13 +112,19 @@ class _Client:
     cid: int
     x: jnp.ndarray
     y: jnp.ndarray
-    D: jnp.ndarray
+    # D is None only under the fleet profile, which keeps the whole
+    # fleet's distributions stacked in one array (repro.core.fleet)
+    D: Optional[jnp.ndarray]
     behavior: ClientBehavior      # availability/compute/link model
     clock: float = 0.0
     local_round: int = 0
-    buffer: ClientBuffer = None
+    buffer: Optional[ClientBuffer] = None
     known_interval: int = 1
     last_merged_idx: int = 0      # ensemble size at client's last sync
+
+    def __post_init__(self) -> None:
+        if self.buffer is None:
+            self.buffer = ClientBuffer(self.cid)
 
 
 class FederatedBoostEngine:
@@ -104,15 +132,34 @@ class FederatedBoostEngine:
 
     BASE_ROUND_S = 1.0            # nominal compute seconds per boosting round
     LATENCY_S = 0.05
+    # fleets at/above this size auto-select the vectorized fleet profile
+    # (no legacy expectation exists up there — the loop engine never ran
+    # fleets beyond a few hundred clients)
+    FLEET_AUTO_CLIENTS = 4096
 
     def __init__(self, cfg: FedBoostConfig, data: Dict, mode: str,
                  weak: Optional[WeakLearnerSpec] = None,
                  kernel_policy=None,
                  behavior_for: Optional[
-                     Callable[[int], ClientBehavior]] = None):
+                     Callable[[int], ClientBehavior]] = None,
+                 engine: str = "events",
+                 fleet: Optional[bool] = None):
         assert mode in ("baseline", "enhanced")
+        assert engine in ("events", "loop")
         self.cfg = cfg
         self.mode = mode
+        # engine="events": the event-queue virtual-clock core (default);
+        # engine="loop": the legacy client-at-a-time loops, kept as the
+        # golden bit-for-bit parity oracle.  fleet=None auto-selects the
+        # vectorized fleet profile at FLEET_AUTO_CLIENTS+ clients; the
+        # fleet profile always runs on the event core.
+        self.engine_kind = engine
+        n_fleet = len(data["clients"])
+        self._fleet = (bool(fleet) if fleet is not None
+                       else n_fleet >= self.FLEET_AUTO_CLIENTS)
+        if self._fleet:
+            self.engine_kind = "events"
+        self.kernel_policy = kernel_policy
         # behavior_for: cid -> ClientBehavior, the client-heterogeneity
         # hook (repro.sim).  None builds the LegacyBehavior shim from the
         # cfg scalars — same RNG draws in the same order, so results at
@@ -146,6 +193,13 @@ class FederatedBoostEngine:
         self.behavior_for = behavior_for
         self.clients = []
         for cid, (x, y) in enumerate(data["clients"]):
+            if self._fleet:
+                # the fleet profile owns the distributions as one stacked
+                # array; per-client jnp construction at 100k+ clients would
+                # cost one device dispatch per client
+                self.clients.append(_Client(
+                    cid=cid, x=x, y=y, D=None, behavior=behavior_for(cid)))
+                continue
             n = x.shape[0]
             if cfg.balanced_init:
                 # class-balanced D_0: standard boosting practice for rare-
@@ -229,7 +283,9 @@ class FederatedBoostEngine:
         return entry
 
     def _entry_bytes(self, e: BufferEntry) -> int:
-        return int(self.weak.param_bytes(e.params)) + 12
+        # single source: repro.core.buffers.entry_wire_bytes (the same
+        # helper ClientBuffer.nbytes sums over)
+        return entry_wire_bytes(e, self.weak.param_bytes)
 
     def _server_alpha(self, params) -> float:
         """Global vote weight from the learner's error on the server's
@@ -287,19 +343,33 @@ class FederatedBoostEngine:
     def _client_catch_up(self, c: _Client) -> None:
         """Apply distribution updates for foreign learners received at sync.
         The client's own learners are skipped — it already applied them
-        locally at training time."""
+        locally at training time.  ``cfg.catch_up_cap`` bounds the replay
+        to the newest ``cap`` foreign learners (None = exact)."""
         lo = c.last_merged_idx
-        for params, a, owner in zip(self.ensemble.learners[lo:],
-                                    self.ensemble.alphas[lo:],
-                                    self._owners[lo:]):
-            if owner == c.cid:
-                continue
-            h = self.weak.predict(params, c.x)
-            c.D, _ = update_distribution(c.D, a, c.y, h)
-        c.last_merged_idx = len(self.ensemble.learners)
+        hi = len(self.ensemble.learners)
+        cap = self.cfg.catch_up_cap
+        if cap is None:
+            idxs = [i for i in range(lo, hi) if self._owners[i] != c.cid]
+        else:
+            # reverse scan: O(cap + own-entries), never O(window)
+            idxs = []
+            i = hi - 1
+            while i >= lo and len(idxs) < cap:
+                if self._owners[i] != c.cid:
+                    idxs.append(i)
+                i -= 1
+            idxs.reverse()
+        for i in idxs:
+            h = self.weak.predict(self.ensemble.learners[i], c.x)
+            c.D, _ = update_distribution(c.D, self.ensemble.alphas[i],
+                                         c.y, h)
+        c.last_merged_idx = hi
 
-    def _record(self, t: float) -> None:
-        err = self._val_error()
+    def _record(self, t: float, err: Optional[float] = None) -> None:
+        # the fleet profile passes its numpy-computed error to keep the
+        # per-sync hot path off the device
+        if err is None:
+            err = self._val_error()
         m = self.metrics
         m.val_error_curve.append((t, m.learners_merged, err))
         if (self.cfg.target_error > 0 and err <= self.cfg.target_error
@@ -309,7 +379,15 @@ class FederatedBoostEngine:
 
     # ---------------------------------------------------------------- run
     def run(self) -> RunMetrics:
-        if self.mode == "baseline":
+        if self._fleet:
+            from repro.core.fleet import FleetCore
+            FleetCore(self).run()
+        elif self.engine_kind == "events":
+            if self.mode == "baseline":
+                self._run_baseline_events()
+            else:
+                self._run_enhanced_events()
+        elif self.mode == "baseline":
             self._run_baseline()
         else:
             self._run_enhanced()
@@ -344,6 +422,12 @@ class FederatedBoostEngine:
                 on_time.append((c.cid, e))
             # barrier: the round closes at the slowest participant
             t += max(durations) if durations else self.BASE_ROUND_S
+            # last round's dropped messages are delivered now: charge their
+            # uplink at delivery time (their transfer rides outside the
+            # barrier, which only on-time participants set)
+            for cid, e in late:
+                m.uplink_bytes += self._entry_bytes(e) + cfg.header_bytes
+                m.n_messages += 1
             merged_before = len(self.ensemble.learners)
             for cid, e in late + on_time:
                 self._merge([e], r, compensated=False, owner=cid)
@@ -362,7 +446,33 @@ class FederatedBoostEngine:
             rsp.set(on_time=len(on_time), late=len(late),
                     merged=delta, val_error=m.val_error_curve[-1][2])
             rsp.end(sim_t=t)
-        m.sim_time_s = t
+        m.sim_time_s = self._flush_late(pending_late, t)
+
+    def _flush_late(self, pending_late: List[Tuple[int, BufferEntry]],
+                    t: float) -> float:
+        """Deliver the final round's dropped-client messages after the last
+        barrier: charge their uplink and fold them into the ensemble (stale
+        by one, uncompensated — baseline semantics) instead of silently
+        discarding trained-and-counted work.  No downlink or sync tick:
+        training is over, nothing is broadcast back.  Returns the simulated
+        time the last flush message landed."""
+        cfg, m = self.cfg, self.metrics
+        if not pending_late:
+            return t
+        t_flush = t
+        for cid, e in pending_late:
+            c = self.clients[cid]
+            up = self._entry_bytes(e) + cfg.header_bytes
+            m.uplink_bytes += up
+            m.n_messages += 1
+            t_flush = max(t_flush, t + self._tx_time(up, c, t))
+        for cid, e in pending_late:
+            self._merge([e], cfg.n_rounds, compensated=False, owner=cid)
+        if obs.enabled():
+            obs.point("train.late_flush", sim_t0=t_flush,
+                      n=len(pending_late))
+        self._record(t_flush)
+        return t_flush
 
     # enhanced: asynchronous with adaptive intervals + compensation --------
     def _run_enhanced(self) -> None:
@@ -439,25 +549,203 @@ class FederatedBoostEngine:
                 advance(c)
         m.sim_time_s = max(t, max(c.clock for c in self.clients))
 
-    def _push_sync(self, events, c: _Client) -> None:
+    # event-queue virtual-clock core (engine="events", the default) -------
+    def _run_baseline_events(self) -> None:
+        """Synchronous baseline on the event queue: each round is a TRIGGER
+        (schedule the fleet's round of work), a set of ARRIVAL events (the
+        on-time messages), and a BARRIER (merge + broadcast).  Per-client
+        math runs at schedule time in client order — the exact legacy call
+        order — and the barrier folds messages in client order (a
+        synchronous server treats the round as one batch), so results are
+        bit-for-bit identical to the loop engine at equal seeds."""
         cfg, m = self.cfg, self.metrics
-        payload = c.buffer.flush()
-        if cfg.relevance_filter > 0 and len(payload) > 1:
+        vc = events.VirtualClock()
+        pending_late: List[Tuple[int, BufferEntry]] = []
+        late: List[Tuple[int, BufferEntry]] = []
+        arrived: List[Tuple[int, BufferEntry]] = []
+        rsp = None
+        t = 0.0
+        vc.push(0.0, events.TRIGGER, payload=0)
+        while vc:
+            ev = vc.pop()
+            if ev.kind == events.TRIGGER:
+                r, t0 = ev.payload, ev.t
+                rsp = obs.span("train.round", sim_t=t0, round=r)
+                late, pending_late = pending_late, []
+                arrived = []
+                durations: List[float] = []
+                for c in self.clients:
+                    dropped = not c.behavior.availability(t0)
+                    e = self._train_one(c)
+                    dur = c.behavior.compute_time(self.BASE_ROUND_S, t0)
+                    if dropped:
+                        # misses the barrier; arrives next round, stale by
+                        # 1, merged at FULL weight (no compensation here)
+                        m.rounds_unavailable += 1
+                        pending_late.append((c.cid, e))
+                        if obs.enabled():
+                            obs.point("train.stall", sim_t0=t0, cid=c.cid)
+                        continue
+                    up = self._entry_bytes(e) + cfg.header_bytes
+                    m.uplink_bytes += up
+                    m.n_messages += 1
+                    d = dur + self._tx_time(up, c, t0)
+                    durations.append(d)
+                    vc.push(t0 + d, events.ARRIVAL, c.cid, e)
+                close = t0 + (max(durations) if durations
+                              else self.BASE_ROUND_S)
+                vc.push(close, events.BARRIER, payload=r)
+            elif ev.kind == events.ARRIVAL:
+                arrived.append((ev.cid, ev.payload))
+            elif ev.kind == events.BARRIER:
+                r, t = ev.payload, ev.t
+                # delivery-time charge for last round's dropped messages
+                for cid, e in late:
+                    m.uplink_bytes += self._entry_bytes(e) + cfg.header_bytes
+                    m.n_messages += 1
+                # merge in client order (not arrival order): the
+                # synchronous server folds the whole round as one batch —
+                # exactly what the legacy loop does
+                arrived.sort(key=lambda ce: ce[0])
+                merged_before = len(self.ensemble.learners)
+                for cid, e in late + arrived:
+                    self._merge([e], r, compensated=False, owner=cid)
+                delta = len(self.ensemble.learners) - merged_before
+                pkg = delta * 16 + cfg.header_bytes
+                for c in self.clients:
+                    m.downlink_bytes += pkg
+                    m.n_messages += 1
+                    self._client_catch_up(c)
+                m.n_syncs += 1
+                obs.count("train.syncs")
+                obs.count("train.learners_merged", delta)
+                self._maybe_publish(t)
+                self._record(t)
+                rsp.set(on_time=len(arrived), late=len(late), merged=delta,
+                        val_error=m.val_error_curve[-1][2])
+                rsp.end(sim_t=t)
+                if r + 1 < cfg.n_rounds:
+                    vc.push(t, events.TRIGGER, payload=r + 1)
+        obs.count("train.events", vc.n_popped)
+        m.sim_time_s = self._flush_late(pending_late, t)
+
+    def _run_enhanced_events(self) -> None:
+        """The paper's algorithm on the event queue.  Client legs between
+        syncs are causally closed — a client observes server state only at
+        its own sync, and its behavior draws depend only on its own clock —
+        so each leg's math runs eagerly at schedule time (the legacy call
+        order, preserving bit-for-bit parity) while its round completions,
+        stalls, triggers, and the sync-message arrival become events.
+        Arrivals pop in (t, kind, cid) order: the legacy heap's
+        ``(arrival, cid)`` order exactly."""
+        cfg, m = self.cfg, self.metrics
+        vc = events.VirtualClock()
+        for c in self.clients:
+            c.known_interval = self.scheduler.current
+        finished = [False] * len(self.clients)
+
+        def advance(c: _Client) -> None:
+            trace = obs.enabled()
+            while c.local_round < cfg.n_rounds:
+                dropped = not c.behavior.availability(c.clock)
+                e = self._train_one(c)
+                c.clock += c.behavior.compute_time(self.BASE_ROUND_S,
+                                                   c.clock)
+                if trace:
+                    vc.push(c.clock, events.ROUND, c.cid)
+                c.buffer.add(e.params, e.eps, e.alpha, e.round_stamp)
+                if dropped:
+                    # see _run_enhanced: the dropout stalls the *message*,
+                    # not the interval rule
+                    m.rounds_unavailable += 1
+                    c.clock += c.behavior.stall_time(self.BASE_ROUND_S,
+                                                     c.clock)
+                    if trace:
+                        vc.push(c.clock, events.STALL, c.cid)
+                if len(c.buffer) >= c.known_interval:
+                    if trace:
+                        vc.push(c.clock, events.TRIGGER, c.cid)
+                    arrival, payload = self._prepare_sync(c)
+                    vc.push(arrival, events.ARRIVAL, c.cid, payload)
+                    return
+            finished[c.cid] = True
+            if len(c.buffer):             # flush the tail buffer
+                arrival, payload = self._prepare_sync(c)
+                vc.push(arrival, events.ARRIVAL, c.cid, payload)
+
+        for c in self.clients:
+            advance(c)
+        t = 0.0
+        while vc:
+            ev = vc.pop()
+            if ev.kind == events.ROUND:
+                obs.point("train.client_round", sim_t0=ev.t, cid=ev.cid)
+                continue
+            if ev.kind == events.STALL:
+                obs.point("train.stall", sim_t0=ev.t, cid=ev.cid)
+                continue
+            if ev.kind == events.TRIGGER:
+                obs.point("train.trigger", sim_t0=ev.t, cid=ev.cid)
+                continue
+            t, cid, payload = ev.t, ev.cid, ev.payload
+            c = self.clients[cid]
+            sync_round = c.local_round - 1
+            ssp = obs.span(
+                "train.sync", sim_t=t, cid=cid, n_entries=len(payload),
+                staleness=max((max(0, sync_round - e.round_stamp)
+                               for e in payload), default=0))
+            merged_before = len(self.ensemble.learners)
+            self._merge(payload, sync_round=sync_round,
+                        compensated=True, owner=c.cid)
+            m.n_syncs += 1
+            obs.count("train.syncs")
+            obs.count("train.learners_merged",
+                      len(self.ensemble.learners) - merged_before)
+            self.scheduler.observe(self._val_error())
+            delta = len(self.ensemble.learners) - c.last_merged_idx
+            pkg = delta * 16 + cfg.header_bytes
+            m.downlink_bytes += pkg
+            m.n_messages += 1
+            self._client_catch_up(c)
+            c.known_interval = self.scheduler.current
+            obs.get_registry().gauge("train.interval").set(
+                self.scheduler.current)
+            self._maybe_publish(t)
+            self._record(t)
+            ssp.set(interval=self.scheduler.current,
+                    val_error=m.val_error_curve[-1][2])
+            ssp.end(sim_t=t)
+            if not finished[cid]:
+                advance(c)
+        obs.count("train.events", vc.n_popped)
+        m.sim_time_s = max(t, max(c.clock for c in self.clients))
+
+    def _prepare_sync(self, c: _Client) -> Tuple[float, List[BufferEntry]]:
+        """Relevance-filter the buffer, charge the uplink (sized through
+        ``ClientBuffer.nbytes`` — the single wire-size source), and return
+        the sync message's ``(arrival_time, payload)``."""
+        cfg, m = self.cfg, self.metrics
+        if cfg.relevance_filter > 0 and len(c.buffer) > 1:
             # beyond-paper: don't ship learners whose compensated weight is
             # negligible — the client can compute this locally before uplink
             now = c.local_round - 1
-            w = [abs(e.alpha) * math.exp(
-                    -cfg.compensation.lam * max(0, now - e.round_stamp))
-                 for e in payload]
+            entries = c.buffer.entries
+            w = [abs(e.alpha) * staleness_scale(
+                    max(0, now - e.round_stamp), cfg.compensation)
+                 for e in entries]
             cut = cfg.relevance_filter * max(w)
-            kept = [e for e, wi in zip(payload, w) if wi >= cut]
-            payload = kept if kept else payload[-1:]
-        nbytes = (sum(self._entry_bytes(x) for x in payload)
-                  + cfg.header_bytes)
+            kept = [e for e, wi in zip(entries, w) if wi >= cut]
+            c.buffer.entries = kept if kept else entries[-1:]
+        nbytes = c.buffer.nbytes(self.weak.param_bytes) + cfg.header_bytes
+        payload = c.buffer.flush()
         arrival = c.clock + self._tx_time(nbytes, c, c.clock)
         m.uplink_bytes += nbytes
         m.n_messages += 1
-        heapq.heappush(events, (arrival, c.cid, payload))
+        return arrival, payload
+
+    def _push_sync(self, events_heap, c: _Client) -> None:
+        arrival, payload = self._prepare_sync(c)
+        heapq.heappush(events_heap, (arrival, c.cid, payload))
 
     def _tx_time(self, nbytes: int, c: _Client, t: float) -> float:
         return c.behavior.link(t).tx_time(nbytes)

@@ -8,7 +8,13 @@ compensation to each entry based on its staleness.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List
+from typing import Callable, Dict, Iterable, List
+
+# Per-entry wire overhead beyond the learner params themselves:
+# eps (f32) + alpha (f32) + round stamp (i32).  This is THE single source
+# for the constant — the engine's accounting and ClientBuffer.nbytes both
+# route through entry_wire_bytes so they cannot drift apart.
+ENTRY_OVERHEAD_BYTES = 12
 
 
 @dataclass
@@ -17,6 +23,17 @@ class BufferEntry:
     eps: float
     alpha: float
     round_stamp: int          # client-local boosting round when trained
+
+
+def entry_wire_bytes(entry: "BufferEntry", param_bytes: Callable) -> int:
+    """Bytes one buffered entry occupies on the wire."""
+    return int(param_bytes(entry.params)) + ENTRY_OVERHEAD_BYTES
+
+
+def payload_wire_bytes(entries: Iterable["BufferEntry"],
+                       param_bytes: Callable) -> int:
+    """Wire size of a sync payload (sans message header)."""
+    return sum(entry_wire_bytes(e, param_bytes) for e in entries)
 
 
 @dataclass
@@ -36,4 +53,4 @@ class ClientBuffer:
 
     def nbytes(self, param_bytes: Callable) -> int:
         """Wire size of the buffered payload (params + eps/alpha/stamp)."""
-        return sum(int(param_bytes(e.params)) + 12 for e in self.entries)
+        return payload_wire_bytes(self.entries, param_bytes)

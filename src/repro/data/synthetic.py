@@ -41,13 +41,18 @@ def _base_problem(rng: np.random.RandomState, n: int, f: int,
 def make_domain_data(cfg: DomainConfig, seed: int = 0,
                      val_frac: float = 0.15, test_frac: float = 0.15,
                      partitioner: str = "dirichlet",
-                     shards_per_client: int = 2) -> Dict:
+                     shards_per_client: int = 2,
+                     as_numpy: bool = False) -> Dict:
     """Returns {"clients": [(x,y)...], "val": (x,y), "test": (x,y)}.
 
     ``partitioner`` selects the client split (scenario registry binding):
     ``dirichlet`` (default, skew from ``cfg.noniid_alpha``), ``iid``, or
     ``label_shard`` (McMahan-style pathological split with
-    ``shards_per_client`` shards per client)."""
+    ``shards_per_client`` shards per client).
+
+    ``as_numpy=True`` keeps every array as numpy — the fleet-profile
+    engine stacks shards itself, and converting 100k+ client shards to
+    individual device arrays would cost one dispatch each."""
     # stable across processes (python's hash() is salted per-interpreter)
     name_tag = zlib.crc32(cfg.name.encode()) % 997
     rng = np.random.RandomState(seed * 1000 + name_tag)
@@ -85,10 +90,14 @@ def make_domain_data(cfg: DomainConfig, seed: int = 0,
     else:
         raise ValueError(f"unknown partitioner {partitioner!r}; choose "
                          "from dirichlet | iid | label_shard")
-    import jax.numpy as jnp
-    to_j = lambda a, b: (jnp.asarray(a), jnp.asarray(b))
+    if as_numpy:
+        to_a = lambda a, b: (np.ascontiguousarray(a),
+                             np.ascontiguousarray(b))
+    else:
+        import jax.numpy as jnp
+        to_a = lambda a, b: (jnp.asarray(a), jnp.asarray(b))
     return {
-        "clients": [to_j(cx, cy) for cx, cy in clients],
-        "val": to_j(x[val_idx], y[val_idx]),
-        "test": to_j(x[test_idx], y[test_idx]),
+        "clients": [to_a(cx, cy) for cx, cy in clients],
+        "val": to_a(x[val_idx], y[val_idx]),
+        "test": to_a(x[test_idx], y[test_idx]),
     }

@@ -37,6 +37,7 @@ calibration pass.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import statistics
@@ -125,6 +126,18 @@ def _pallas_stump_scan(x, y, w, thresholds, *, block_n=256, interpret=True):
     return err[:F, :T]
 
 
+def _pallas_stump_scan_batched(x, y, w, thresholds, *, block_n=256,
+                               interpret=True):
+    # vmap lifts the batch dim onto the launch grid; per-slot padding is
+    # identical to _pallas_stump_scan.  block_n shrinks to the next power
+    # of two covering N so fleet batches of tiny shards don't pad 64x.
+    N = x.shape[1]
+    bn = min(block_n, max(8, next_pow2(N)))
+    fn = functools.partial(_pallas_stump_scan, block_n=bn,
+                           interpret=interpret)
+    return jax.vmap(fn)(x, y, w, thresholds)
+
+
 def _pallas_ensemble_vote(margins, alphas, *, block_t=128, block_n=512,
                           interpret=True):
     # pad T with zero-alpha rows and N with dummy columns (sliced off)
@@ -199,6 +212,7 @@ def _pallas_dist_update(alpha, D, y, h, *, block_n=1024, interpret=True):
 
 _PALLAS_IMPLS: Dict[str, Callable] = {
     "stump_scan": _pallas_stump_scan,
+    "stump_scan_batched": _pallas_stump_scan_batched,
     "ensemble_vote": _pallas_ensemble_vote,
     "ensemble_vote_batched": _pallas_ensemble_vote_batched,
     "stump_vote_batched": _pallas_stump_vote_batched,
@@ -214,6 +228,7 @@ _PALLAS_IMPLS: Dict[str, Callable] = {
 # ---------------------------------------------------------------------------
 
 _jit_stump_scan_ref = jax.jit(ref.stump_scan_ref)
+_jit_stump_scan_batched_ref = jax.jit(ref.stump_scan_batched_ref)
 _jit_ensemble_vote_ref = jax.jit(ref.ensemble_vote_ref)
 _jit_ensemble_vote_batched_ref = jax.jit(ref.ensemble_vote_batched_ref)
 _jit_stump_vote_batched_ref = jax.jit(ref.stump_vote_batched_ref)
@@ -224,6 +239,8 @@ _jit_dist_update_ref = jax.jit(ref.dist_update_ref)
 _XLA_IMPLS: Dict[str, Callable] = {
     "stump_scan":
         lambda x, y, w, thr, **_: _jit_stump_scan_ref(x, y, w, thr),
+    "stump_scan_batched":
+        lambda x, y, w, thr, **_: _jit_stump_scan_batched_ref(x, y, w, thr),
     "ensemble_vote":
         lambda m, a, **_: _jit_ensemble_vote_ref(m, a),
     "ensemble_vote_batched":
@@ -249,6 +266,13 @@ def _bucket_stump_scan(x, y, w, thresholds, *, block_n=256, **_):
     N, F = x.shape
     T = thresholds.shape[1]
     return (ceil_to(N, block_n), ceil_to(F, 8), ceil_to(T, 8))
+
+
+def _bucket_stump_scan_batched(x, y, w, thresholds, *, block_n=256, **_):
+    B, N, F = x.shape
+    T = thresholds.shape[2]
+    bn = min(block_n, max(8, next_pow2(N)))
+    return (next_pow2(B), ceil_to(N, bn), ceil_to(F, 8), ceil_to(T, 8))
 
 
 def _bucket_ensemble_vote(margins, alphas, *, block_t=128, block_n=512, **_):
@@ -283,6 +307,7 @@ def _bucket_dist_update(alpha, D, y, h, *, block_n=1024, **_):
 
 _BUCKETERS: Dict[str, Callable[..., Bucket]] = {
     "stump_scan": _bucket_stump_scan,
+    "stump_scan_batched": _bucket_stump_scan_batched,
     "ensemble_vote": _bucket_ensemble_vote,
     "ensemble_vote_batched": _bucket_vote_batched,
     "stump_vote_batched": _bucket_stump_vote_batched,

@@ -43,6 +43,21 @@ def stump_scan(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
         policy=policy, backend=backend, interpret=interpret)
 
 
+def stump_scan_batched(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+                       thresholds: jnp.ndarray, *, block_n: int = 256,
+                       backend: Optional[str] = None,
+                       policy: Optional[KernelPolicy] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-client weighted stump errors for a stacked fleet batch.
+
+    x: (B,N,F); y, w: (B,N); thresholds: (B,F,T) -> (B,F,T).  Same padding
+    contract as :func:`stump_scan` per batch slot (w = 0 rows contribute
+    nothing, so ragged shards stack safely); B lifts onto the launch grid."""
+    return dispatch.dispatch(
+        "stump_scan_batched", (x, y, w, thresholds), dict(block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
+
+
 def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
                   block_t: int = 128, block_n: int = 512,
                   backend: Optional[str] = None,

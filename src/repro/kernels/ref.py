@@ -27,6 +27,17 @@ def stump_scan_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
     return jnp.einsum("n,nft->ft", w.astype(jnp.float32), miss)
 
 
+def stump_scan_batched_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+                           thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Per-client weighted stump errors for a stacked fleet batch.
+
+    x: (B,N,F); y, w: (B,N); thresholds: (B,F,T) -> (B,F,T) f32 — exactly
+    :func:`stump_scan_ref` per batch slot.  Rows padded with w = 0
+    contribute nothing, so ragged client shards stack safely.
+    """
+    return jax.vmap(stump_scan_ref)(x, y, w, thresholds)
+
+
 def ensemble_vote_ref(margins: jnp.ndarray, alphas: jnp.ndarray) -> jnp.ndarray:
     """Weighted ensemble margin: H(x) = sum_t alpha_t h_t(x).
 

@@ -63,6 +63,15 @@ def main() -> None:
                     help="train + band check only")
     ap.add_argument("--no-autoscale", action="store_true",
                     help="fixed fleet during the serve replay")
+    ap.add_argument("--engine", choices=("events", "loop"),
+                    default="events",
+                    help="execution core: the event-queue virtual clock "
+                         "(default) or the legacy client-at-a-time loop "
+                         "kept as the bit-for-bit parity oracle")
+    ap.add_argument("--fleet", action="store_true",
+                    help="force the vectorized fleet profile (auto-"
+                         "enabled at 4096+ clients; implies the event "
+                         "core)")
     # --trace names the *behavior* trace (pre-dates the obs layer), so the
     # observability exports take the -out suffix here; serve_ensemble has
     # no such clash and uses the plain --trace/--metrics spelling
@@ -81,13 +90,17 @@ def main() -> None:
     if args.trace not in sc.traces:
         ap.error(f"scenario {sc.name!r} has no trace {args.trace!r}; "
                  f"choose from: legacy, {', '.join(sc.nontrivial_traces)}")
+    if args.fleet:
+        from dataclasses import replace
+        sc = replace(sc, fleet=True)
     tracer = None
     if args.trace_out or args.metrics_out:
         tracer = obs.configure(trace=True)
     rep = run_scenario(sc, trace=args.trace, seed=args.seed,
                        n_rounds=args.rounds, serve=not args.no_serve,
                        serve_duration_s=args.serve_duration,
-                       hosts=args.hosts, autoscale=not args.no_autoscale)
+                       hosts=args.hosts, autoscale=not args.no_autoscale,
+                       engine=args.engine)
     print(summarize(rep))
     if tracer is not None:
         if args.trace_out:

@@ -56,6 +56,18 @@ def fit_stump(x: Array, y: Array, w: Array, thresholds: Array,
         from repro.kernels import ops as kops
         err_pos = kops.stump_scan(x, y, w, thresholds, backend=backend)
     # (F,T) weighted error of polarity +1; polarity -1 error is 1 - err.
+    return _pick_stump(err_pos, thresholds)
+
+
+def predict_stump(p: Dict[str, Array], x: Array) -> Array:
+    """-> (N,) margins in {-1,+1}."""
+    xv = x[:, p["feature"]]
+    return p["polarity"] * jnp.sign(xv - p["threshold"] + 1e-12)
+
+
+def _pick_stump(err_pos: Array, thresholds: Array) -> Dict[str, Array]:
+    """The argmin/polarity selection shared by the single and batched
+    fitters: err_pos is the (F,T) weighted error grid of polarity +1."""
     err_neg = 1.0 - err_pos
     best_pos = jnp.unravel_index(jnp.argmin(err_pos), err_pos.shape)
     best_neg = jnp.unravel_index(jnp.argmin(err_neg), err_neg.shape)
@@ -68,10 +80,52 @@ def fit_stump(x: Array, y: Array, w: Array, thresholds: Array,
             "polarity": pol}
 
 
-def predict_stump(p: Dict[str, Array], x: Array) -> Array:
-    """-> (N,) margins in {-1,+1}."""
-    xv = x[:, p["feature"]]
-    return p["polarity"] * jnp.sign(xv - p["threshold"] + 1e-12)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fit_stump_batched(x: Array, y: Array, w: Array, thresholds: Array,
+                      backend: str | None = None) -> Dict[str, Array]:
+    """Fit one stump per fleet slot in a single bucketed launch.
+
+    x: (B,N,F); y, w: (B,N); thresholds: (B,F,T).  Returns
+    {"feature", "threshold", "polarity"} arrays of shape (B,).  Slots
+    padded with all-zero weights are fit to garbage and must be sliced
+    off by the caller (their error grid is identically zero).
+
+    Note: ``w`` rows need not be normalized per slot — the weighted-error
+    *argmin* is scale-invariant, and the engine recomputes eps against the
+    true distribution — but the convention is to pass D_t rows directly.
+    """
+    if backend is None:
+        from repro.kernels import ref as kref
+        err_pos = kref.stump_scan_batched_ref(x, y, w, thresholds)
+    else:
+        from repro.kernels import ops as kops
+        err_pos = kops.stump_scan_batched(x, y, w, thresholds,
+                                          backend=backend)
+    return jax.vmap(_pick_stump)(err_pos, thresholds)
+
+
+@functools.partial(jax.jit, static_argnames=("n_thresholds",))
+def stump_thresholds_batched(x: Array, n_valid: Array,
+                             n_thresholds: int = 16) -> Array:
+    """Per-client quantile threshold grids for a padded fleet stack.
+
+    x: (B,N,F) with slot b valid in rows [0, n_valid[b]); -> (B,F,T).
+    Matches ``stump_thresholds`` (jnp.quantile, linear interpolation) on
+    each slot's valid rows exactly: padding rows are replaced with +inf so
+    they sink to the bottom of the per-slot sort and the quantile position
+    is scaled by the true row count.
+    """
+    B, N, F = x.shape
+    qs = jnp.linspace(0.0, 1.0, n_thresholds + 2)[1:-1]          # (T,)
+    valid = jnp.arange(N)[None, :] < n_valid[:, None]            # (B,N)
+    xs = jnp.sort(jnp.where(valid[:, :, None], x, jnp.inf), axis=1)
+    pos = qs[None, :] * (n_valid[:, None].astype(jnp.float32) - 1.0)
+    lo = jnp.floor(pos).astype(jnp.int32)                        # (B,T)
+    hi = jnp.ceil(pos).astype(jnp.int32)
+    frac = (pos - lo.astype(jnp.float32))[:, :, None]            # (B,T,1)
+    take = lambda idx: jnp.take_along_axis(xs, idx[:, :, None], axis=1)
+    grid = take(lo) * (1.0 - frac) + take(hi) * frac             # (B,T,F)
+    return jnp.transpose(grid, (0, 2, 1))                        # (B,F,T)
 
 
 STUMP_BYTES = 3 * 4   # feature idx + threshold + polarity

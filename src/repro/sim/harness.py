@@ -67,11 +67,14 @@ class ScenarioReport:
 def train_pair(sc: Scenario, trace: str, seed: int = 0,
                n_rounds: Optional[int] = None,
                cluster: Optional[ShardCluster] = None,
-               publish_every: int = 2
+               publish_every: int = 2, engine: str = "events"
                ) -> Tuple[Dict, Dict[str, RunMetrics]]:
     """Run baseline + enhanced through one behavior trace on one dataset.
     The enhanced engine publishes into ``cluster`` (when given) so the
-    serve phase replays real mid-training snapshots."""
+    serve phase replays real mid-training snapshots.  ``engine`` selects
+    the execution core (``events``, the default, or the legacy ``loop``
+    parity oracle); the scenario's ``fleet`` field picks the engine
+    profile (None = auto by fleet size)."""
     data = sc.make_data(seed)
     cfg = sc.fedboost_config(seed=seed, n_rounds=n_rounds)
     runs: Dict[str, RunMetrics] = {}
@@ -79,7 +82,8 @@ def train_pair(sc: Scenario, trace: str, seed: int = 0,
         # a fresh behavior set per engine: stateful models (Gilbert
         # chains, outage processes) must not leak state across runs
         eng = FederatedBoostEngine(cfg, data, mode,
-                                   behavior_for=sc.behavior_for(trace, seed))
+                                   behavior_for=sc.behavior_for(trace, seed),
+                                   engine=engine, fleet=sc.fleet)
         if mode == "enhanced" and cluster is not None:
             eng.attach_registry(cluster, sc.name, publish_every=publish_every)
         with obs.span("scenario.train", sim_t=0.0, scenario=sc.name,
@@ -203,18 +207,22 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
 def run_scenario(name_or_scenario, trace: str = "legacy", seed: int = 0,
                  n_rounds: Optional[int] = None, serve: bool = True,
                  serve_duration_s: float = 1.5, hosts: int = 2,
-                 autoscale: bool = True, publish_every: int = 2
-                 ) -> ScenarioReport:
+                 autoscale: bool = True, publish_every: int = 2,
+                 engine: str = "events") -> ScenarioReport:
     """One scenario end to end: train both modes through ``trace``, check
     the paper band, then (optionally) replay the publish/request trace
-    into an autoscaled serving fleet."""
+    into an autoscaled serving fleet.  Scenarios with
+    ``serve_replay=False`` (the fleet-scale smokes) always skip the serve
+    phase."""
     sc = (name_or_scenario if isinstance(name_or_scenario, Scenario)
           else get_scenario(name_or_scenario))
+    serve = serve and sc.serve_replay
     with obs.span("scenario.run", scenario=sc.name, trace=trace, seed=seed):
         cluster = (ShardCluster(hosts, GossipConfig(seed=seed))
                    if serve else None)
         data, runs = train_pair(sc, trace, seed=seed, n_rounds=n_rounds,
-                                cluster=cluster, publish_every=publish_every)
+                                cluster=cluster, publish_every=publish_every,
+                                engine=engine)
         row = result_row(runs)
         report = ScenarioReport(
             scenario=sc.name, trace=trace, seed=seed,

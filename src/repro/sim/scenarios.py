@@ -21,12 +21,13 @@ shared between a baseline and an enhanced run.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.configs.paper_fedboost import DomainConfig, FedBoostConfig
+from repro.configs.paper_fedboost import (
+    CompensationConfig, DomainConfig, FedBoostConfig, SchedulerConfig)
 from repro.sim.behavior import (
     BlockchainLedger, BlockDelayBehavior, ClientBehavior, DiurnalBehavior,
     GilbertLinkBehavior, Link, SiteBehavior, SiteOutageProcess,
@@ -91,22 +92,36 @@ class Scenario:
     time_warp: float = 20.0                 # behavior-seconds per serve-second
     variant_of: Optional[str] = None        # base scenario for variants
     notes: str = ""
+    serve_replay: bool = True               # replay the serve phase at all?
+    # engine profile: None auto-selects (FLEET_AUTO_CLIENTS); True forces
+    # the vectorized fleet profile (repro.core.fleet)
+    fleet: Optional[bool] = None
+    # extra make_domain_data kwargs (val_frac/test_frac/as_numpy — the
+    # fleet scenarios shrink the held-out sets and skip jnp conversion)
+    data_kwargs: Mapping = field(default_factory=dict)
+    # FedBoostConfig field overrides applied after construction
+    # (catch_up_cap, compensation, scheduler, ...)
+    config_overrides: Mapping = field(default_factory=dict)
 
     def make_data(self, seed: int = 0) -> Dict:
         from repro.data import make_domain_data
         return make_domain_data(self.domain, seed=seed,
                                 partitioner=self.partitioner,
-                                shards_per_client=self.shards_per_client)
+                                shards_per_client=self.shards_per_client,
+                                **dict(self.data_kwargs))
 
     def fedboost_config(self, seed: int = 0,
                         n_rounds: Optional[int] = None) -> FedBoostConfig:
         dom = self.domain
-        return FedBoostConfig(
+        cfg = FedBoostConfig(
             n_clients=dom.n_clients,
             n_rounds=self.n_rounds if n_rounds is None else n_rounds,
             straggler_factor=dom.straggler_factor,
             dropout_prob=dom.dropout_prob, link_mbps=dom.link_mbps,
             seed=seed, balanced_init=dom.label_imbalance < 0.4)
+        if self.config_overrides:
+            cfg = replace(cfg, **dict(self.config_overrides))
+        return cfg
 
     def behavior_for(self, trace: str, seed: int = 0
                      ) -> Optional[BehaviorFor]:
@@ -446,6 +461,31 @@ register(replace(
             # enrollment ramp: client k joins at t = 2.5k seconds
             "staggered_join": _staggered_join(join_gap_s=2.5)},
     notes="cold-start variant: clients enroll on a ramp"))
+
+# fleet-scale smoke: 100k phones on tiny shards, driven by the vectorized
+# fleet profile (repro.core.fleet).  The band is deliberately loose — the
+# scenario exists to exercise event-core + batched-kernel scale (the
+# scale_matrix benchmark records wall-clock and band results), not to
+# reproduce Table 1, which small shards and capped catch-up cannot.
+register(replace(
+    _mobile, name="mobile_100k", variant_of="mobile",
+    domain=replace(_mobile.domain, name="mobile_100k",
+                   n_samples=400_000, n_clients=100_000),
+    band=PaperBand((0, 60), (0, 60), (0, 60), (-5.0, 5.0),
+                   tol_time=60.0, tol_comm=60.0, tol_acc=10.0),
+    traces={"legacy": _legacy,
+            "diurnal": _mobile.traces["diurnal"]},
+    partitioner="iid",
+    n_rounds=4,
+    serve_rate=1600.0,
+    serve_replay=False, fleet=True,
+    data_kwargs={"val_frac": 0.004, "test_frac": 0.004, "as_numpy": True},
+    config_overrides={
+        "catch_up_cap": 16,                       # O(cap) catch-up per sync
+        "compensation": CompensationConfig(decay="hinge"),
+        "scheduler": SchedulerConfig(i_init=2),   # 2-round buffers
+    },
+    notes="fleet-scale smoke: 100k clients, vectorized fleet profile"))
 
 
 # --------------------------------------------------- legacy-name exports

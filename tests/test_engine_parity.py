@@ -1,0 +1,248 @@
+"""Golden parity of the event-queue engine core against the legacy loops,
+the async-accounting bugfix regressions, and the fleet-profile consistency
+checks (the PR-7 sweep)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_fedboost import (CompensationConfig, DomainConfig,
+                                          FedBoostConfig, SchedulerConfig)
+from repro.core import FederatedBoostEngine
+from repro.core.async_engine import _Client
+from repro.core.buffers import (BufferEntry, ClientBuffer,
+                                ENTRY_OVERHEAD_BYTES, entry_wire_bytes)
+from repro.data import make_domain_data
+from repro.sim.scenarios import get_scenario
+
+INT_FIELDS = ("uplink_bytes", "downlink_bytes", "n_messages", "n_syncs",
+              "learners_merged", "rounds_unavailable")
+
+
+def _dom(n_clients=8, dropout=0.2, **kw):
+    base = dict(name="mobile", n_samples=1200, n_features=12,
+                n_clients=n_clients, noniid_alpha=0.5, label_imbalance=0.5,
+                noise=0.15, straggler_factor=4.0, dropout_prob=dropout,
+                link_mbps=5.0)
+    base.update(kw)
+    return DomainConfig(**base)
+
+
+def _cfg(dom, n_rounds=6, seed=3, **kw):
+    return FedBoostConfig(n_clients=dom.n_clients, n_rounds=n_rounds,
+                          straggler_factor=dom.straggler_factor,
+                          dropout_prob=dom.dropout_prob,
+                          link_mbps=dom.link_mbps, seed=seed, **kw)
+
+
+def _run(cfg, data, mode, *, engine="events", fleet=None, behavior_for=None):
+    return FederatedBoostEngine(cfg, data, mode, engine=engine, fleet=fleet,
+                                behavior_for=behavior_for).run()
+
+
+def assert_bitwise_equal(a, b):
+    """Every metric — including the float curve — must match exactly."""
+    for f in INT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.sim_time_s == b.sim_time_s
+    assert a.final_val_error == b.final_val_error
+    assert a.final_test_error == b.final_test_error
+    assert a.final_test_recall == b.final_test_recall
+    assert a.val_error_curve == b.val_error_curve
+
+
+# --------------------------------------------- golden events-vs-loop parity
+@pytest.mark.parametrize("mode", ["baseline", "enhanced"])
+def test_events_engine_bit_parity_legacy_trace(mode):
+    dom = _dom()
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom)
+    assert_bitwise_equal(_run(cfg, data, mode, engine="loop"),
+                         _run(cfg, data, mode, engine="events"))
+
+
+@pytest.mark.parametrize("mode", ["baseline", "enhanced"])
+@pytest.mark.parametrize("scenario,trace", [("iot", "gilbert"),
+                                            ("mobile", "diurnal")])
+def test_events_engine_bit_parity_nontrivial_traces(mode, scenario, trace):
+    """Parity must hold through stateful behavior models too (and on more
+    than one scenario)."""
+    sc = get_scenario(scenario)
+    dom = dataclasses.replace(sc.domain, n_samples=900, n_clients=6)
+    data = make_domain_data(dom, seed=1, partitioner=sc.partitioner)
+    cfg = _cfg(dom, n_rounds=5, seed=5)
+    runs = {}
+    for engine in ("loop", "events"):
+        # fresh stateful behaviors per engine run
+        runs[engine] = _run(cfg, data, mode, engine=engine,
+                            behavior_for=sc.behavior_for(trace, 1))
+    assert_bitwise_equal(runs["loop"], runs["events"])
+
+
+def test_tied_sync_arrivals_merge_in_client_order():
+    """Deterministic pop order for tied sync events: identical links +
+    speeds make every first-round arrival tie exactly; both engines must
+    process them in client order (same metrics, same curve)."""
+    dom = _dom(dropout=0.0, straggler_factor=1.0)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom, n_rounds=4, seed=0)
+    a = _run(cfg, data, "enhanced", engine="loop")
+    b = _run(cfg, data, "enhanced", engine="events")
+    assert_bitwise_equal(a, b)
+
+
+# ----------------------------------------------- baseline late-accounting
+def _all_drop_runs(n_rounds=4, engine="events"):
+    """dropout_prob=1: every learner goes the late path every round."""
+    dom = _dom(n_clients=4, dropout=1.0)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom, n_rounds=n_rounds, seed=0)
+    return cfg, _run(cfg, data, "baseline", engine=engine)
+
+
+@pytest.mark.parametrize("engine", ["loop", "events"])
+def test_baseline_charges_late_uplink(engine):
+    """Regression (PR 7): late learners' uplink bytes/messages were never
+    charged.  With the fix every trained learner is charged exactly once —
+    even when every round drops every client."""
+    cfg, m = _all_drop_runs(engine=engine)
+    n = cfg.n_clients * cfg.n_rounds
+    per_msg = (ENTRY_OVERHEAD_BYTES + 12) + cfg.header_bytes   # stump = 12B
+    # n uplink messages + the per-round downlink broadcasts
+    assert m.uplink_bytes == n * per_msg
+    assert m.learners_merged == n
+    assert m.rounds_unavailable == n
+    assert m.n_messages == n + cfg.n_clients * cfg.n_rounds
+
+
+@pytest.mark.parametrize("engine", ["loop", "events"])
+def test_baseline_final_round_late_learners_flushed(engine):
+    """Regression (PR 7): the final round's pending_late was silently
+    discarded — trained, counted unavailable, never merged or charged.
+    The flush merges them (stale-by-one, full weight) after the last
+    barrier and extends sim_time to the last delivery."""
+    cfg, m = _all_drop_runs(engine=engine)
+    assert m.learners_merged == cfg.n_clients * cfg.n_rounds
+    # flush appends one extra curve record past the n_rounds barriers
+    assert len(m.val_error_curve) == cfg.n_rounds + 1
+    assert m.sim_time_s > cfg.n_rounds * 1.0 - 1e-9
+
+
+def test_no_dropout_means_no_flush_record():
+    dom = _dom(dropout=0.0)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    m = _run(_cfg(dom, n_rounds=4), data, "baseline")
+    assert m.rounds_unavailable == 0
+    assert len(m.val_error_curve) == 4
+
+
+# ------------------------------------------------- wire-size single source
+def test_entry_wire_bytes_single_source():
+    e = BufferEntry({"feature": 0, "threshold": 0.0, "polarity": 1.0},
+                    0.1, 0.5, 0)
+    pb = lambda p: 12
+    assert entry_wire_bytes(e, pb) == 12 + ENTRY_OVERHEAD_BYTES
+    buf = ClientBuffer(0)
+    for _ in range(3):
+        buf.add(e.params, e.eps, e.alpha, e.round_stamp)
+    assert buf.nbytes(pb) == 3 * entry_wire_bytes(e, pb)
+
+
+def test_engine_entry_bytes_routes_through_buffers():
+    dom = _dom(n_clients=2)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    eng = FederatedBoostEngine(_cfg(dom, n_rounds=1), data, "baseline")
+    e = BufferEntry({"feature": 0, "threshold": 0.0, "polarity": 1.0},
+                    0.1, 0.5, 0)
+    assert eng._entry_bytes(e) == entry_wire_bytes(e, eng.weak.param_bytes)
+
+
+def test_client_buffer_default_is_honest():
+    """Regression (PR 7): _Client.buffer claimed type ClientBuffer but
+    defaulted to None.  The default must build a real per-client buffer."""
+    c = _Client(cid=7, x=None, y=None, D=None, behavior=None)
+    assert isinstance(c.buffer, ClientBuffer)
+    assert c.buffer.client_id == 7
+    own = ClientBuffer(7)
+    assert _Client(cid=7, x=None, y=None, D=None, behavior=None,
+                   buffer=own).buffer is own
+
+
+# -------------------------------------------------------- knobs + fleet
+def test_catch_up_cap_wide_is_exact():
+    """A cap wider than any window replays exactly what None replays —
+    the reverse scan and the full scan select the same indices, so the
+    whole run is bit-for-bit identical."""
+    dom = _dom()
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    exact = _run(_cfg(dom), data, "enhanced")
+    wide = _run(_cfg(dom, catch_up_cap=10_000), data, "enhanced")
+    assert_bitwise_equal(exact, wide)
+
+
+def test_catch_up_cap_small_still_learns():
+    """A tight cap bounds replay work; it may shift learning (and thus
+    scheduling), but the run must stay well-formed in both modes."""
+    dom = _dom()
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    for mode in ("baseline", "enhanced"):
+        m = _run(_cfg(dom, catch_up_cap=2), data, mode)
+        assert m.learners_merged == dom.n_clients * 6
+        assert 0.0 <= m.final_val_error <= 1.0
+
+
+@pytest.mark.parametrize("decay", ["constant", "hinge", "poly"])
+def test_decay_families_run_end_to_end(decay):
+    dom = _dom(n_clients=4)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom, n_rounds=4,
+               compensation=CompensationConfig(decay=decay))
+    m = _run(cfg, data, "enhanced")
+    assert m.learners_merged == 4 * 4
+    assert 0.0 <= m.final_val_error <= 1.0
+
+
+@pytest.mark.parametrize("mode", ["baseline", "enhanced"])
+def test_fleet_profile_matches_reference_accounting(mode):
+    """The vectorized fleet profile must reproduce the reference engine's
+    integer accounting and simulated clock exactly; learning results agree
+    up to summation order."""
+    dom = _dom(n_clients=8)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom, catch_up_cap=4,
+               scheduler=SchedulerConfig(i_init=2))
+    ref = _run(cfg, data, mode, fleet=False)
+    flt = _run(cfg, data, mode, fleet=True)
+    for f in INT_FIELDS:
+        assert getattr(ref, f) == getattr(flt, f), f
+    assert ref.sim_time_s == flt.sim_time_s
+    assert len(ref.val_error_curve) == len(flt.val_error_curve)
+    assert abs(ref.final_val_error - flt.final_val_error) < 0.05
+    assert abs(ref.final_test_error - flt.final_test_error) < 0.05
+
+
+def test_fleet_profile_rejects_non_stump():
+    dom = _dom(n_clients=4)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    cfg = _cfg(dom, n_rounds=2, weak_learner="logistic")
+    with pytest.raises(ValueError, match="stump"):
+        FederatedBoostEngine(cfg, data, "baseline", fleet=True).run()
+
+
+def test_fleet_auto_selection_threshold():
+    dom = _dom(n_clients=4)
+    data = make_domain_data(dom, seed=0, partitioner="iid")
+    eng = FederatedBoostEngine(_cfg(dom), data, "baseline")
+    assert not eng._fleet                  # tiny fleet: reference profile
+    eng = FederatedBoostEngine(_cfg(dom), data, "baseline", fleet=True)
+    assert eng._fleet and eng.engine_kind == "events"
+
+
+def test_scale_scenario_registered():
+    sc = get_scenario("mobile_100k")
+    assert sc.fleet and not sc.serve_replay
+    assert sc.domain.n_clients == 100_000
+    cfg = sc.fedboost_config()
+    assert cfg.catch_up_cap == 16
+    assert cfg.compensation.decay == "hinge"
+    assert cfg.scheduler.i_init == 2

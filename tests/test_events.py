@@ -1,0 +1,160 @@
+"""The event-queue virtual clock (repro.core.events) and the staleness-
+decay family it feeds (repro.core.compensation): pinned pop order for tied
+events, monotone time, and the FedAsync decay functions."""
+import heapq
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_fedboost import CompensationConfig
+from repro.core import events
+from repro.core.compensation import (DECAYS, compensate, staleness_scale)
+
+
+# ------------------------------------------------------------ VirtualClock
+def test_pop_orders_by_time_first():
+    vc = events.VirtualClock()
+    vc.push(3.0, events.ARRIVAL, cid=0)
+    vc.push(1.0, events.BARRIER, cid=9)
+    vc.push(2.0, events.ROUND, cid=5)
+    assert [vc.pop().t for _ in range(3)] == [1.0, 2.0, 3.0]
+
+
+def test_tied_time_pops_in_kind_order():
+    """At equal t, arrivals must drain before the barrier that closes over
+    them, and trace markers (round/stall) come first."""
+    vc = events.VirtualClock()
+    vc.push(1.0, events.BARRIER)
+    vc.push(1.0, events.ROUND, cid=2)
+    vc.push(1.0, events.ARRIVAL, cid=1)
+    vc.push(1.0, events.STALL, cid=3)
+    vc.push(1.0, events.TRIGGER, cid=4)
+    kinds = [vc.pop().kind for _ in range(5)]
+    assert kinds == [events.ROUND, events.STALL, events.TRIGGER,
+                     events.ARRIVAL, events.BARRIER]
+
+
+def test_tied_sync_events_pop_in_client_order():
+    """Two sync messages landing at the same instant merge in client
+    order — the legacy engine's (arrival, cid) heap order, pinned."""
+    vc = events.VirtualClock()
+    for cid in (7, 2, 5, 0):
+        vc.push(4.25, events.ARRIVAL, cid=cid, payload=f"msg{cid}")
+    assert [vc.pop().cid for _ in range(4)] == [0, 2, 5, 7]
+
+
+def test_tied_time_kind_cid_falls_back_to_push_order():
+    vc = events.VirtualClock()
+    a = vc.push(1.0, events.ARRIVAL, cid=3, payload="first")
+    b = vc.push(1.0, events.ARRIVAL, cid=3, payload="second")
+    assert a.seq < b.seq
+    assert [vc.pop().payload for _ in range(2)] == ["first", "second"]
+
+
+def test_matches_legacy_heap_order():
+    """The legacy enhanced loop ordered sync messages by (arrival, cid);
+    the clock's (t, kind, cid, seq) key must reproduce that order exactly
+    for arrival-only workloads."""
+    rng = np.random.RandomState(0)
+    ts = rng.uniform(0, 5, size=40).round(1)   # force plenty of ties
+    cids = rng.randint(0, 6, size=40)
+    legacy = []
+    vc = events.VirtualClock()
+    for t, cid in zip(ts, cids):
+        heapq.heappush(legacy, (float(t), int(cid)))
+        vc.push(float(t), events.ARRIVAL, cid=int(cid))
+    for _ in range(40):
+        lt, lcid = heapq.heappop(legacy)
+        ev = vc.pop()
+        assert (ev.t, ev.cid) == (lt, lcid)
+
+
+def test_now_is_monotone_and_counts():
+    vc = events.VirtualClock()
+    vc.push(2.0, events.ROUND)
+    vc.push(1.0, events.ROUND)
+    assert len(vc) == 2 and vc.n_pushed == 2
+    vc.pop()
+    assert vc.now == 1.0
+    vc.push(0.5, events.ROUND)   # scheduled in the past: now must not regress
+    vc.pop()
+    assert vc.now == 1.0
+    vc.pop()
+    assert vc.now == 2.0 and vc.n_popped == 3 and not vc
+
+
+def test_payloads_never_compared():
+    """Unorderable payloads must be fine even on full key ties minus seq."""
+    vc = events.VirtualClock()
+    vc.push(1.0, events.ARRIVAL, cid=1, payload={"a": 1})
+    vc.push(1.0, events.ARRIVAL, cid=1, payload=object())
+    vc.pop(), vc.pop()
+
+
+def test_peek_does_not_pop():
+    vc = events.VirtualClock()
+    vc.push(1.0, events.TRIGGER, payload="x")
+    assert vc.peek().payload == "x"
+    assert len(vc) == 1
+    assert vc.pop().payload == "x"
+    assert vc.peek() is None
+
+
+def test_kind_names():
+    assert events.Event(0.0, events.BARRIER, -1, 0).kind_name == "barrier"
+
+
+# ------------------------------------------------------ staleness decays
+CFG = CompensationConfig()
+
+
+def test_exp_decay_matches_eq2():
+    for tau in (0, 1, 5, 31):
+        assert staleness_scale(tau, CFG) == pytest.approx(
+            math.exp(-CFG.lam * tau))
+
+
+def test_constant_decay_is_one():
+    cfg = CompensationConfig(decay="constant")
+    for tau in (0, 3, 100):
+        assert staleness_scale(tau, cfg) == 1.0
+
+
+def test_hinge_decay_boundary():
+    cfg = CompensationConfig(decay="hinge", hinge_a=10.0, hinge_b=6.0)
+    assert staleness_scale(0, cfg) == 1.0
+    assert staleness_scale(6, cfg) == 1.0                 # grace boundary
+    assert staleness_scale(8, cfg) == pytest.approx(1.0 / (10.0 * 2.0))
+
+
+def test_poly_decay():
+    cfg = CompensationConfig(decay="poly", poly_a=0.5)
+    assert staleness_scale(0, cfg) == 1.0
+    assert staleness_scale(3, cfg) == pytest.approx(4.0 ** -0.5)
+
+
+def test_tau_cap_applies_to_every_family():
+    for decay in DECAYS:
+        cfg = CompensationConfig(decay=decay, tau_cap=10)
+        assert staleness_scale(50, cfg) == staleness_scale(10, cfg)
+        assert staleness_scale(-3, cfg) == staleness_scale(0, cfg)
+
+
+def test_compensate_agrees_with_scalar_path():
+    """The jnp compensate and the python-scalar staleness_scale must agree
+    for every family (the fleet profile uses the scalar path)."""
+    for decay in DECAYS:
+        cfg = CompensationConfig(decay=decay)
+        for tau in (0, 1, 6, 7, 40):
+            want = 0.7 * staleness_scale(tau, cfg)
+            got = float(compensate(0.7, tau, cfg))
+            assert got == pytest.approx(want, rel=1e-5), (decay, tau)
+
+
+def test_unknown_decay_raises():
+    cfg = CompensationConfig(decay="bogus")
+    with pytest.raises(KeyError):
+        staleness_scale(1, cfg)
+    with pytest.raises(KeyError):
+        compensate(1.0, 1, cfg)

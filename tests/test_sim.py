@@ -261,7 +261,7 @@ def test_registry_has_five_domains_with_nontrivial_traces():
             behaviors = [bf(c) for c in range(sc.domain.n_clients)]
             assert all(isinstance(b, ClientBehavior) for b in behaviors)
     assert set(variant_scenarios()) == {"mobile_x4", "edge_vision_churn",
-                                        "iot_coldstart"}
+                                        "iot_coldstart", "mobile_100k"}
 
 
 def test_registry_unknown_names_raise():
