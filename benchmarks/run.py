@@ -12,6 +12,16 @@ Each benchmark additionally persists its raw result as
 runs are diffable across commits — the perf trajectory.  ``--timestamp``
 stamps the files (CI passes the commit SHA); ``--out-dir ''`` disables
 the JSON emission entirely.
+
+``--baseline DIR`` turns a run into a trajectory point *and* a
+comparison: every fresh result is diffed against ``DIR/BENCH_<name>.json``
+(normally the checked-in ``artifacts/bench`` set), a ratio table is
+printed, and the process exits non-zero if any benchmark's wall time
+regressed past ``--regress-threshold`` (default 3.0x — CI noise on shared
+runners is real; the gate is for order-of-magnitude breakage, not
+single-digit percent drift).  Benchmarks with no baseline file are
+reported as new; baselines recorded under a different ``quick`` config
+are compared but never gate.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import argparse
 import dataclasses
 import json
 import os
+import sys
 import time
 
 
@@ -63,6 +74,43 @@ def write_bench_json(out_dir: str, name: str, result, *, wall_us: float,
     return path
 
 
+def compare_to_baseline(baseline_dir: str, fresh: dict, threshold: float
+                        ) -> int:
+    """Diff fresh ``{name: wall_us-bearing doc}`` results against the
+    ``BENCH_<name>.json`` set in ``baseline_dir``; print the trajectory
+    table and return the number of gating regressions (fresh wall time
+    > ``threshold`` x baseline under a comparable config)."""
+    regressions = 0
+    print(f"\n--- perf trajectory vs {baseline_dir} "
+          f"(gate: >{threshold:g}x wall) ---")
+    print(f"{'benchmark':<22} {'baseline_us':>14} {'fresh_us':>14} "
+          f"{'ratio':>7}  verdict")
+    for name in sorted(fresh):
+        doc = fresh[name]
+        base_path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+        if not os.path.exists(base_path):
+            print(f"{name:<22} {'-':>14} {doc['wall_us']:>14.1f} "
+                  f"{'-':>7}  new (no baseline)")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        base_us = float(base.get("wall_us", 0.0))
+        fresh_us = float(doc["wall_us"])
+        ratio = fresh_us / base_us if base_us > 0 else float("inf")
+        comparable = (base.get("config", {}).get("quick")
+                      == doc.get("config", {}).get("quick"))
+        if not comparable:
+            verdict = "config mismatch (quick differs; not gating)"
+        elif ratio > threshold:
+            verdict = "REGRESSION"
+            regressions += 1
+        else:
+            verdict = "ok"
+        print(f"{name:<22} {base_us:>14.1f} {fresh_us:>14.1f} "
+              f"{ratio:>6.2f}x  {verdict}")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -72,6 +120,14 @@ def main() -> None:
     ap.add_argument("--timestamp", default=None, metavar="TAG",
                     help="stamp for the BENCH json files (e.g. a commit "
                          "SHA; default: current UTC time)")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="diff results against the BENCH_<name>.json set "
+                         "in DIR and exit non-zero on wall-time "
+                         "regressions past --regress-threshold")
+    ap.add_argument("--regress-threshold", type=float, default=3.0,
+                    metavar="X",
+                    help="gating wall-time ratio for --baseline "
+                         "(default: 3.0)")
     ap.add_argument("only", nargs="*", metavar="BENCH",
                     help="run only the named benchmarks (default: all)")
     args = ap.parse_args()
@@ -129,6 +185,7 @@ def main() -> None:
     csv_rows = []
     results = {}
     written = []
+    fresh_docs = {}
     for name, fn in benches.items():
         if args.only and name not in args.only:
             continue
@@ -137,6 +194,8 @@ def main() -> None:
         wall_us = (time.time() - t0) * 1e6
         if name != "kernel_bench":        # kernel_bench emits its own CSV
             csv_rows.append((name, wall_us, "bench-wall"))
+        fresh_docs[name] = {"wall_us": round(wall_us, 1),
+                            "config": {"quick": args.quick}}
         if args.out_dir:
             written.append(write_bench_json(
                 args.out_dir, name, results[name], wall_us=wall_us,
@@ -178,6 +237,13 @@ def main() -> None:
     if written:
         print(f"\nwrote {len(written)} BENCH json file(s) "
               f"[{stamp}]: {', '.join(written)}")
+    if args.baseline:
+        regressions = compare_to_baseline(args.baseline, fresh_docs,
+                                          args.regress_threshold)
+        if regressions:
+            print(f"{regressions} benchmark(s) regressed past "
+                  f"{args.regress_threshold:g}x — failing the run")
+            sys.exit(1)
 
 
 if __name__ == "__main__":

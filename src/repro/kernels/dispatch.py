@@ -26,14 +26,26 @@ next priority with a one-shot RuntimeWarning, so a policy calibrated on one
 substrate degrades gracefully on another.
 
 Shapes are *bucketed* by rounding each dimension up to the block boundary
-the padded Pallas call would use, so every raw shape that lowers to the
-same padded kernel shares one calibration measurement and one entry in the
-per-(kernel, bucket, backend) dispatch cache.  ``KernelPolicy.calibrate_call``
-times each available backend for one bucket and records the winner;
-``save``/``load`` persist the table to JSON (default
-``artifacts/backend_calibration.json``) so serving restarts skip
+the padded Pallas call would use — under the kernel's **reference layout**
+(``DEFAULT_LAYOUTS``), never the candidate layout under test — so every
+raw shape that lowers to the same padded reference kernel shares one
+calibration measurement and one entry in the per-(kernel, bucket, backend)
+dispatch cache, and every candidate layout of one call shares a single
+table entry.
+
+Calibration is a **layout autotune**, not just a backend choice:
+``KernelPolicy.calibrate_call`` times each available backend over a small
+grid of block layouts (``LAYOUT_GRIDS`` — ``(block_t, block_n)`` for the
+vote kernels, ``block_n`` for stump_scan/dist_update, ``(block_q,
+block_k)`` for flash attention, following the xformers Triton config-sweep
+pattern) and records the ``(winner_backend, winner_layout)`` pair per
+(kernel, bucket).  ``dispatch()`` then injects the winning layout kwargs
+on every resolved call whose backend matches the winner — explicit caller
+layout kwargs still win.  ``save``/``load`` persist the table to JSON
+(schema v2; v1 backend-only tables load transparently with empty layouts;
+default ``artifacts/backend_calibration.json``) so serving restarts skip
 recalibration — see ``benchmarks/backend_matrix.py`` for the one-shot
-calibration pass.
+sweep pass.
 """
 from __future__ import annotations
 
@@ -44,7 +56,8 @@ import statistics
 import time
 import warnings
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -54,14 +67,104 @@ from repro.kernels import ref
 from repro.kernels.dist_update import dist_update_kernel
 from repro.kernels.ensemble_vote import (
     ensemble_vote_batched_kernel, ensemble_vote_kernel,
-    stump_vote_batched_kernel)
+    stump_vote_batched_kernel, stump_vote_fp_batched_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.stump_scan import stump_scan_kernel
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 DEFAULT_CALIBRATION_PATH = "artifacts/backend_calibration.json"
+CALIBRATION_SCHEMA_VERSION = 2
 
 Bucket = Tuple[int, ...]
+Layout = Dict[str, int]                 # block-shape kwargs of one launch
+LayoutKey = Tuple[Tuple[str, int], ...]  # canonical (sorted items) form
+
+# The block-shape kwargs the autotuner owns.  Any of these passed as None
+# by an ops wrapper means "let the calibration table (or the reference
+# layout) decide"; an explicit int always wins.
+LAYOUT_KWARGS = ("block_t", "block_n", "block_q", "block_k")
+
+# Reference layouts: the pre-autotune hardcoded defaults.  Buckets are
+# always computed against these (layout-canonical bucketing), and they are
+# the fallback layout when the table has no tuned entry for the resolved
+# backend.
+DEFAULT_LAYOUTS: Dict[str, Layout] = {
+    "stump_scan": {"block_n": 256},
+    "stump_scan_batched": {"block_n": 256},
+    "ensemble_vote": {"block_t": 128, "block_n": 512},
+    "ensemble_vote_batched": {"block_t": 128, "block_n": 512},
+    "stump_vote_batched": {"block_t": 128, "block_n": 512},
+    "stump_vote_fp_batched": {"block_t": 128, "block_n": 512},
+    "flash_attention": {"block_q": 128, "block_k": 128},
+    "dist_update": {"block_n": 1024},
+}
+
+# The sweep grid per kernel (each entry is one complete candidate layout;
+# the reference layout is always a member).  Kept small on purpose — the
+# xformers Triton sweeps that inspired this stay in the single digits per
+# kernel too; a candidate that clamps to the same effective blocks as
+# another (small problem sizes) just measures the same launch twice.
+_VOTE_GRID = [
+    {"block_t": 64, "block_n": 256},
+    {"block_t": 128, "block_n": 512},       # reference
+    {"block_t": 128, "block_n": 1024},
+    {"block_t": 256, "block_n": 2048},
+]
+LAYOUT_GRIDS: Dict[str, List[Layout]] = {
+    "stump_scan": [{"block_n": 128}, {"block_n": 256}, {"block_n": 512},
+                   {"block_n": 1024}],
+    "stump_scan_batched": [{"block_n": 128}, {"block_n": 256},
+                           {"block_n": 512}, {"block_n": 1024}],
+    "ensemble_vote": _VOTE_GRID,
+    "ensemble_vote_batched": _VOTE_GRID,
+    "stump_vote_batched": _VOTE_GRID,
+    "stump_vote_fp_batched": _VOTE_GRID,
+    "flash_attention": [{"block_q": 64, "block_k": 64},
+                        {"block_q": 128, "block_k": 128},   # reference
+                        {"block_q": 128, "block_k": 256},
+                        {"block_q": 256, "block_k": 256}],
+    "dist_update": [{"block_n": 512}, {"block_n": 1024}, {"block_n": 2048},
+                    {"block_n": 4096}],
+}
+
+
+def layout_key(layout) -> LayoutKey:
+    """Canonical hashable form of a layout (dict or item tuple -> sorted
+    ``((kwarg, int), ...)``)."""
+    if not layout:
+        return ()
+    items = layout.items() if isinstance(layout, dict) else layout
+    return tuple(sorted((str(k), int(v)) for k, v in items))
+
+
+def layout_label(layout) -> str:
+    """Render a layout for logs/metrics ("block_n=512,block_t=128")."""
+    items = layout if isinstance(layout, tuple) else layout_key(layout)
+    return ",".join(f"{k}={v}" for k, v in items) or "-"
+
+
+class CalEntry(NamedTuple):
+    """One calibration-table value: the winning backend and its layout."""
+    backend: str
+    layout: LayoutKey = ()
+
+
+def _entry(value) -> "CalEntry":
+    """Normalize a calibration-table value to :class:`CalEntry`.
+
+    Accepts a bare backend name (the v1 / pre-layout form), a CalEntry, a
+    ``(backend, layout)`` pair, or a ``{"backend": ..., "layout": ...}``
+    dict — so v1 tables, hand-written test tables, and serialized v2
+    entries all coexist."""
+    if isinstance(value, CalEntry):
+        return CalEntry(canonical(value.backend), layout_key(value.layout))
+    if isinstance(value, str):
+        return CalEntry(canonical(value))
+    if isinstance(value, dict):
+        return CalEntry(canonical(value["backend"]),
+                        layout_key(value.get("layout")))
+    backend, layout = value
+    return CalEntry(canonical(backend), layout_key(layout))
 
 
 # ---------------------------------------------------------------------------
@@ -100,10 +203,19 @@ def vote_blocks(T: int, N: int, block_t: int, block_n: int) -> Tuple[int, int]:
     return bt, bn
 
 
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1)."""
+    for d in range(min(int(cap), int(n)), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 def _flash_blocks(T: int, block_q: int, block_k: int) -> Tuple[int, int]:
-    bq = min(block_q, T) if T % min(block_q, T) == 0 else T
-    bk = min(block_k, T) if T % min(block_k, T) == 0 else T
-    return bq, bk
+    # largest divisor of T at or under the requested block, so ragged
+    # sequence lengths still tile (T=192 with block_q=128 runs 96-tiled,
+    # not as one untiled T-slab)
+    return (_largest_divisor_leq(T, block_q), _largest_divisor_leq(T, block_k))
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +287,21 @@ def _pallas_stump_vote_batched(xsel, thr, pol, alphas, *, block_t=128,
     return out[:, :N]
 
 
+def _pallas_stump_vote_fp_batched(xsel, thr, pol, alphas, *, block_t=128,
+                                  block_n=512, interpret=True):
+    # same padding contract as stump_vote_batched; the alpha-gated xor
+    # fold makes the fingerprint outputs padding-invariant too
+    B, T, N = xsel.shape
+    bt, bn = vote_blocks(T, N, block_t, block_n)
+    xp = pad_to(pad_to(xsel, 1, bt), 2, bn)
+    tp = pad_to(thr, 1, bt, value=0.0)
+    pp = pad_to(pol, 1, bt, value=1.0)
+    ap = pad_to(alphas, 1, bt, value=0.0)
+    out, f0, f1 = stump_vote_fp_batched_kernel(
+        xp, tp, pp, ap, block_t=bt, block_n=bn, interpret=interpret)
+    return out[:, :N], f0[:, :N], f1[:, :N]
+
+
 def _pallas_flash_attention(q, k, v, *, causal=True, block_q=128,
                             block_k=128, interpret=True):
     B, H, T, d = q.shape
@@ -216,6 +343,7 @@ _PALLAS_IMPLS: Dict[str, Callable] = {
     "ensemble_vote": _pallas_ensemble_vote,
     "ensemble_vote_batched": _pallas_ensemble_vote_batched,
     "stump_vote_batched": _pallas_stump_vote_batched,
+    "stump_vote_fp_batched": _pallas_stump_vote_fp_batched,
     "flash_attention": _pallas_flash_attention,
     "dist_update": _pallas_dist_update,
 }
@@ -232,6 +360,7 @@ _jit_stump_scan_batched_ref = jax.jit(ref.stump_scan_batched_ref)
 _jit_ensemble_vote_ref = jax.jit(ref.ensemble_vote_ref)
 _jit_ensemble_vote_batched_ref = jax.jit(ref.ensemble_vote_batched_ref)
 _jit_stump_vote_batched_ref = jax.jit(ref.stump_vote_batched_ref)
+_jit_stump_vote_fp_batched_ref = jax.jit(ref.stump_vote_fp_batched_ref)
 _jit_flash_attention_ref = jax.jit(ref.flash_attention_ref,
                                    static_argnames=("causal",))
 _jit_dist_update_ref = jax.jit(ref.dist_update_ref)
@@ -247,6 +376,8 @@ _XLA_IMPLS: Dict[str, Callable] = {
         lambda m, a, **_: _jit_ensemble_vote_batched_ref(m, a),
     "stump_vote_batched":
         lambda x, t, p, a, **_: _jit_stump_vote_batched_ref(x, t, p, a),
+    "stump_vote_fp_batched":
+        lambda x, t, p, a, **_: _jit_stump_vote_fp_batched_ref(x, t, p, a),
     "flash_attention":
         lambda q, k, v, *, causal=True, **_:
             _jit_flash_attention_ref(q, k, v, causal=causal),
@@ -258,50 +389,51 @@ KERNELS: Tuple[str, ...] = tuple(_PALLAS_IMPLS)
 
 
 # ---------------------------------------------------------------------------
-# shape buckets: round every call up to the padded shape it lowers to, so
-# calls sharing one compiled kernel share one calibration/dispatch entry
+# shape buckets: round every call up to the padded shape it lowers to under
+# the kernel's *reference* layout (DEFAULT_LAYOUTS) — never the candidate
+# layout under test — so calls sharing one compiled reference kernel share
+# one calibration/dispatch entry and every candidate layout of one call
+# maps to the same table entry (layout-canonical bucketing)
 # ---------------------------------------------------------------------------
 
-def _bucket_stump_scan(x, y, w, thresholds, *, block_n=256, **_):
+def _bucket_stump_scan(x, y, w, thresholds, **_):
     N, F = x.shape
     T = thresholds.shape[1]
-    return (ceil_to(N, block_n), ceil_to(F, 8), ceil_to(T, 8))
+    return (ceil_to(N, 256), ceil_to(F, 8), ceil_to(T, 8))
 
 
-def _bucket_stump_scan_batched(x, y, w, thresholds, *, block_n=256, **_):
+def _bucket_stump_scan_batched(x, y, w, thresholds, **_):
     B, N, F = x.shape
     T = thresholds.shape[2]
-    bn = min(block_n, max(8, next_pow2(N)))
+    bn = min(256, max(8, next_pow2(N)))
     return (next_pow2(B), ceil_to(N, bn), ceil_to(F, 8), ceil_to(T, 8))
 
 
-def _bucket_ensemble_vote(margins, alphas, *, block_t=128, block_n=512, **_):
+def _bucket_ensemble_vote(margins, alphas, **_):
     T, N = margins.shape
-    bt, bn = vote_blocks(T, N, block_t, block_n)
+    bt, bn = vote_blocks(T, N, 128, 512)
     return (ceil_to(T, bt), ceil_to(N, bn))
 
 
-def _bucket_vote_batched(margins, alphas, *, block_t=128, block_n=512, **_):
+def _bucket_vote_batched(margins, alphas, **_):
     B, T, N = margins.shape
-    bt, bn = vote_blocks(T, N, block_t, block_n)
+    bt, bn = vote_blocks(T, N, 128, 512)
     return (next_pow2(B), ceil_to(T, bt), ceil_to(N, bn))
 
 
-def _bucket_stump_vote_batched(xsel, thr, pol, alphas, *, block_t=128,
-                               block_n=512, **_):
-    return _bucket_vote_batched(xsel, alphas, block_t=block_t,
-                                block_n=block_n)
+def _bucket_stump_vote_batched(xsel, thr, pol, alphas, **_):
+    return _bucket_vote_batched(xsel, alphas)
 
 
-def _bucket_flash_attention(q, k, v, *, block_q=128, block_k=128, **_):
+def _bucket_flash_attention(q, k, v, **_):
     B, H, T, d = q.shape
-    bq, bk = _flash_blocks(T, block_q, block_k)
+    bq, bk = _flash_blocks(T, 128, 128)
     return (next_pow2(B * H), ceil_to(T, bq), ceil_to(d, 128))
 
 
-def _bucket_dist_update(alpha, D, y, h, *, block_n=1024, **_):
+def _bucket_dist_update(alpha, D, y, h, **_):
     N = D.shape[0]
-    bn = min(block_n, max(256, next_pow2(N)))
+    bn = min(1024, max(256, next_pow2(N)))
     return (ceil_to(N, bn),)
 
 
@@ -311,6 +443,7 @@ _BUCKETERS: Dict[str, Callable[..., Bucket]] = {
     "ensemble_vote": _bucket_ensemble_vote,
     "ensemble_vote_batched": _bucket_vote_batched,
     "stump_vote_batched": _bucket_stump_vote_batched,
+    "stump_vote_fp_batched": _bucket_stump_vote_batched,
     "flash_attention": _bucket_flash_attention,
     "dist_update": _bucket_dist_update,
 }
@@ -390,31 +523,44 @@ def available_backends() -> List[str]:
 # ---------------------------------------------------------------------------
 
 class KernelPolicy:
-    """Per-call backend selection with a shape-bucketed calibration table.
+    """Per-call backend + layout selection with a shape-bucketed
+    calibration table.
 
     ``backend=`` forces one backend policy-wide (still subject to
-    availability).  ``table`` maps ``(kernel, bucket) -> backend name`` —
-    normally filled by :meth:`calibrate_call` or loaded from the JSON
-    written by ``benchmarks/backend_matrix.py``.  Resolution consults, in
-    order: the per-call explicit argument, the forced ``backend``, the
-    ``env_var`` environment variable (read on every call), the calibration
-    table, then the platform default.
+    availability).  ``table`` maps ``(kernel, bucket) -> CalEntry`` (bare
+    backend-name values are accepted and normalized to layout-less
+    entries) — normally filled by :meth:`calibrate_call` or loaded from
+    the JSON written by ``benchmarks/backend_matrix.py``.  Backend
+    resolution consults, in order: the per-call explicit argument, the
+    forced ``backend``, the ``env_var`` environment variable (read on
+    every call), the calibration table, then the platform default.  When
+    the resolved backend matches a table entry's winner, :func:`dispatch`
+    additionally injects the entry's tuned block layout (explicit caller
+    layout kwargs always win).
+
+    ``fused_fingerprint`` opts a serving tenant into the one-launch
+    ``stump_vote_fp_batched`` path (`serve/engine.py`); the dispatcher
+    itself ignores it.
 
     ``choices`` records the backend actually dispatched per (kernel,
-    bucket); the internal dispatch cache is keyed on the full resolution
-    input (including the live env value) so repeated same-bucket calls skip
-    re-resolution without ever pinning a stale choice.
+    bucket) and ``layout_choices`` the injected layout; the internal
+    dispatch cache is keyed on the full resolution input (including the
+    live env value) so repeated same-bucket calls skip re-resolution
+    without ever pinning a stale choice.
     """
 
     def __init__(self, backend: Optional[str] = None,
-                 table: Optional[Dict[Tuple[str, Bucket], str]] = None,
-                 env_var: Optional[str] = ENV_VAR):
+                 table: Optional[Dict[Tuple[str, Bucket], object]] = None,
+                 env_var: Optional[str] = ENV_VAR,
+                 fused_fingerprint: bool = False):
         self.backend = canonical(backend) if backend is not None else None
-        self.table: Dict[Tuple[str, Bucket], str] = {}
-        for (kern, bucket), name in (table or {}).items():
-            self.table[(kern, tuple(bucket))] = canonical(name)
+        self.table: Dict[Tuple[str, Bucket], CalEntry] = {}
+        for (kern, bucket), value in (table or {}).items():
+            self.table[(kern, tuple(bucket))] = _entry(value)
         self.env_var = env_var
+        self.fused_fingerprint = bool(fused_fingerprint)
         self.choices: Dict[Tuple[str, Bucket], str] = {}
+        self.layout_choices: Dict[Tuple[str, Bucket], Layout] = {}
         self.cache_hits = 0
         self._cache: Dict[tuple, object] = {}
         self._warned: set = set()
@@ -430,8 +576,9 @@ class KernelPolicy:
         """Backend name for one (kernel, bucket) call, skipping candidates
         whose substrate is unavailable on the current platform."""
         bucket = tuple(bucket)
+        entry = self.table.get((kernel, bucket))
         for cand in (explicit, self.backend, self._env_backend(),
-                     self.table.get((kernel, bucket))):
+                     entry.backend if entry is not None else None):
             if cand is None:
                 continue
             name = canonical(cand)
@@ -464,59 +611,105 @@ class KernelPolicy:
         self.choices[(kernel, bucket)] = hit.name
         return hit
 
+    # ------------------------------------------------------------- layout
+    def layout_for(self, kernel: str, bucket: Bucket, backend: str
+                   ) -> Layout:
+        """The tuned block layout for one (kernel, bucket) — only if the
+        table's winning backend matches the one actually resolved (a tuned
+        layout measured for one substrate says nothing about another)."""
+        entry = self.table.get((kernel, tuple(bucket)))
+        if entry is not None and entry.backend == backend and entry.layout:
+            return dict(entry.layout)
+        return {}
+
     # -------------------------------------------------------- calibration
-    def record(self, kernel: str, bucket: Bucket, backend: str) -> None:
-        self.table[(kernel, tuple(bucket))] = canonical(backend)
+    def record(self, kernel: str, bucket: Bucket, backend: str,
+               layout: Optional[Layout] = None) -> None:
+        self.table[(kernel, tuple(bucket))] = CalEntry(canonical(backend),
+                                                       layout_key(layout))
         self._cache.clear()
 
     def calibrate_call(self, kernel: str, *args, reps: int = 5,
-                       backends: Optional[Sequence[str]] = None, **kwargs
-                       ) -> Tuple[Bucket, Dict[str, List[float]]]:
-        """Time every available backend on this call (one compile/warm-up
-        launch, then ``reps`` timed launches), record the median winner for
-        the call's bucket, and return ``(bucket, {backend: [seconds]})``."""
+                       backends: Optional[Sequence[str]] = None,
+                       layouts: Optional[Sequence[Layout]] = None, **kwargs
+                       ) -> Tuple[Bucket, Dict[Tuple[str, LayoutKey],
+                                               List[float]]]:
+        """Time every available backend over the kernel's layout grid (one
+        compile/warm-up launch per candidate, then ``reps`` timed
+        launches), record the ``(backend, layout)`` median winner for the
+        call's bucket, and return ``(bucket, {(backend, layout_key):
+        [seconds]})``.
+
+        Pallas backends sweep ``layouts`` (default: the kernel's
+        ``LAYOUT_GRIDS`` entry); the ``xla`` oracle has no block layout
+        and is measured once with an empty layout."""
         bucket = bucket_of(kernel, args, kwargs)
-        samples: Dict[str, List[float]] = {}
+        base = {k: v for k, v in kwargs.items()
+                if k not in LAYOUT_KWARGS and v is not None}
+        samples: Dict[Tuple[str, LayoutKey], List[float]] = {}
         for name in (backends if backends is not None else sorted(BACKENDS)):
             be = BACKENDS[canonical(name)]
             if not be.available():
                 continue
-            jax.block_until_ready(be.run(kernel, *args, **kwargs))
-            ts = []
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                jax.block_until_ready(be.run(kernel, *args, **kwargs))
-                ts.append(time.perf_counter() - t0)
-            samples[be.name] = ts
+            if be.name == "xla":
+                grid: Sequence[Layout] = [{}]
+            elif layouts is not None:
+                grid = list(layouts)
+            else:
+                grid = LAYOUT_GRIDS.get(kernel, [{}])
+            for layout in grid:
+                call_kwargs = dict(base, **layout)
+                jax.block_until_ready(be.run(kernel, *args, **call_kwargs))
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(
+                        be.run(kernel, *args, **call_kwargs))
+                    ts.append(time.perf_counter() - t0)
+                samples[(be.name, layout_key(layout))] = ts
         if not samples:
             raise ValueError(
                 f"no backend to calibrate {kernel!r}: none of "
                 f"{list(backends) if backends is not None else sorted(BACKENDS)} "
                 f"is available on '{jax.default_backend()}' "
                 f"(available: {available_backends()})")
-        winner = min(samples, key=lambda n: statistics.median(samples[n]))
-        self.record(kernel, bucket, winner)
+        wname, wlayout = min(
+            samples, key=lambda k: statistics.median(samples[k]))
+        self.record(kernel, bucket, wname, dict(wlayout))
         return bucket, samples
 
     # -------------------------------------------------------- persistence
     def save(self, path: str = DEFAULT_CALIBRATION_PATH) -> str:
-        """Persist the calibration table (JSON) so restarts skip
+        """Persist the calibration table (JSON, schema v2: every entry
+        carries its winning backend *and* block layout) so restarts skip
         recalibration; returns the path written."""
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         data = {
+            "version": CALIBRATION_SCHEMA_VERSION,
             "env_var": self.env_var,
             "backend": self.backend,
-            "table": [{"kernel": k, "bucket": list(b), "backend": n}
-                      for (k, b), n in sorted(self.table.items())],
+            "table": [{"kernel": k, "bucket": list(b), "backend": e.backend,
+                       "layout": dict(e.layout)}
+                      for (k, b), e in sorted(self.table.items())],
         }
         p.write_text(json.dumps(data, indent=2) + "\n")
         return str(p)
 
     @classmethod
     def load(cls, path: str = DEFAULT_CALIBRATION_PATH) -> "KernelPolicy":
+        """Load a persisted table.  Schema v1 (backend-only entries, no
+        ``version`` field) loads transparently with empty layouts — the
+        reference ``DEFAULT_LAYOUTS`` then apply at dispatch time."""
         data = json.loads(Path(path).read_text())
-        table = {(e["kernel"], tuple(e["bucket"])): e["backend"]
+        version = int(data.get("version", 1))
+        if version > CALIBRATION_SCHEMA_VERSION:
+            raise ValueError(
+                f"calibration table {path!r} has schema v{version}; this "
+                f"build reads up to v{CALIBRATION_SCHEMA_VERSION}")
+        table = {(e["kernel"], tuple(e["bucket"])):
+                 CalEntry(canonical(e["backend"]),
+                          layout_key(e.get("layout")))
                  for e in data.get("table", [])}
         return cls(backend=data.get("backend"), table=table,
                    env_var=data.get("env_var", ENV_VAR))
@@ -541,11 +734,32 @@ def set_default_policy(policy: KernelPolicy) -> KernelPolicy:
 # dispatch entry (the single funnel behind every ops.py wrapper)
 # ---------------------------------------------------------------------------
 
+def _with_layout(kernel: str, kwargs: dict, pol: "KernelPolicy",
+                 bucket: Bucket, backend_name: str) -> dict:
+    """Resolve the block layout for one call: explicit caller kwargs win
+    over the calibration table's tuned layout, which wins over the
+    reference ``DEFAULT_LAYOUTS``.  ``None`` layout kwargs (the ops
+    wrappers' "let the table decide" default) are stripped."""
+    kwargs = dict(kwargs)
+    explicit: Layout = {}
+    for k in LAYOUT_KWARGS:
+        if k in kwargs:
+            v = kwargs.pop(k)
+            if v is not None:
+                explicit[k] = int(v)
+    layout = dict(DEFAULT_LAYOUTS.get(kernel, {}))
+    layout.update(pol.layout_for(kernel, bucket, backend_name))
+    layout.update(explicit)
+    kwargs.update(layout)
+    pol.layout_choices[(kernel, tuple(bucket))] = layout
+    return kwargs
+
+
 def dispatch(kernel: str, args: Sequence, kwargs: Optional[dict] = None, *,
              policy: Optional[KernelPolicy] = None,
              backend: Optional[str] = None,
              interpret: Optional[bool] = None):
-    """Resolve a backend for this call and run it.
+    """Resolve a backend + block layout for this call and run it.
 
     ``interpret`` is the deprecated bool shim: True maps to the
     ``interpret`` backend, False to ``mosaic`` (which falls back to the
@@ -561,6 +775,7 @@ def dispatch(kernel: str, args: Sequence, kwargs: Optional[dict] = None, *,
     pol = policy if policy is not None else _DEFAULT_POLICY
     bucket = bucket_of(kernel, args, kwargs)
     be = pol.resolve(kernel, bucket, explicit=backend)
+    kwargs = _with_layout(kernel, kwargs, pol, bucket, be.name)
     if not obs.profiling_enabled():
         return be.run(kernel, *args, **kwargs)
     # profiling path: timing a launch requires blocking on the device, so
@@ -572,8 +787,20 @@ def dispatch(kernel: str, args: Sequence, kwargs: Optional[dict] = None, *,
         dt = time.perf_counter() - t0
     reg = obs.get_registry()
     labels = dict(kernel=kernel, bucket=blabel, backend=be.name)
+    # the first profiled launch of a (kernel, bucket, backend) pays jit
+    # trace/compile inside the blocked region — keep it out of the
+    # steady-state wall_s histogram (calibration_check reads p50s there)
+    seen = getattr(reg, "_kernel_seen", None)
+    if seen is None:
+        seen = set()
+        setattr(reg, "_kernel_seen", seen)
+    first = (kernel, blabel, be.name) not in seen
+    seen.add((kernel, blabel, be.name))
     reg.counter("kernel.launches", **labels).inc()
-    reg.histogram("kernel.wall_s", **labels).observe(dt)
+    if first:
+        reg.histogram("kernel.compile_s", **labels).observe(dt)
+    else:
+        reg.histogram("kernel.wall_s", **labels).observe(dt)
     return out
 
 
@@ -583,27 +810,35 @@ def bucket_label(bucket: Bucket) -> str:
 
 
 def calibration_check(policy: Optional[KernelPolicy] = None,
-                      registry=None) -> List[Dict[str, object]]:
+                      registry=None, *, min_count: int = 5
+                      ) -> List[Dict[str, object]]:
     """Sanity-check the calibration table against *observed* launch timings.
 
     For every (kernel, bucket) the policy has a calibrated winner for,
     compare the winner's observed p50 wall time (from the
     ``kernel.wall_s{kernel,bucket,backend}`` histograms that profiled
-    dispatches record) against every other backend observed on the same
-    bucket.  Returns one flag dict per entry where a non-winner was
-    measurably faster — i.e. the persisted calibration no longer matches
-    live behavior and a recalibration pass is warranted.  Entries with no
-    cross-backend observations are skipped, not flagged."""
+    dispatches record; first-launch compile times land in
+    ``kernel.compile_s`` and never skew this) against every other backend
+    observed on the same bucket.  Backends with fewer than ``min_count``
+    steady-state observations are ignored entirely — a single stray
+    sample must not outvote a calibrated winner.  Returns one flag dict
+    per entry where a non-winner was measurably faster (including the
+    per-backend observation ``counts``) — i.e. the persisted calibration
+    no longer matches live behavior and a recalibration pass is
+    warranted.  Entries with no cross-backend observations are skipped,
+    not flagged."""
     pol = policy if policy is not None else _DEFAULT_POLICY
     reg = registry if registry is not None else obs.get_registry()
+    min_count = max(1, int(min_count))
     observed: Dict[Tuple[str, str], Dict[str, object]] = {}
     for name, labels, h in reg.histograms():
-        if name != "kernel.wall_s" or h.count == 0:
+        if name != "kernel.wall_s" or h.count < min_count:
             continue
         key = (labels.get("kernel", ""), labels.get("bucket", ""))
         observed.setdefault(key, {})[labels.get("backend", "")] = h
     flags: List[Dict[str, object]] = []
-    for (kern, bucket), winner in sorted(pol.table.items()):
+    for (kern, bucket), entry in sorted(pol.table.items()):
+        winner = entry.backend
         hists = observed.get((kern, bucket_label(bucket)))
         if not hists or winner not in hists or len(hists) < 2:
             continue
@@ -615,5 +850,6 @@ def calibration_check(policy: Optional[KernelPolicy] = None,
                 "calibrated_p50_s": hists[winner].p50,
                 "observed_best": best,
                 "observed_best_p50_s": hists[best].p50,
+                "counts": {b: hists[b].count for b in sorted(hists)},
             })
     return flags

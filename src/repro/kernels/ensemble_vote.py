@@ -14,6 +14,11 @@ B tenants are packed into one padded (B, T, N) block:
   learner prediction margin pol*sign(x[feat] - thr) and the weighted vote
   are fused in a single VMEM-resident pass, so the (T, N) margin tensor is
   never materialized in HBM.
+* :func:`stump_vote_fp_batched_kernel` — the one-launch serving path: the
+  stump margin, the weighted vote, *and* a per-column xor-fold feature
+  fingerprint (two uint32 lanes, mixing constants shared with
+  ``ref._fp_lanes``) in a single launch, so ``BatchEvaluator`` can key its
+  result cache without re-walking any feature vector on the host.
 """
 from __future__ import annotations
 
@@ -22,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.ref import FP_ODD0, FP_ODD1, FP_SALT0, FP_SALT1
 
 
 def _vote_kernel(m_ref, a_ref, out_ref):
@@ -116,6 +123,80 @@ def _stump_vote_kernel(x_ref, thr_ref, pol_ref, a_ref, out_ref):
     m = pol[:, None] * jnp.sign(x - thr[:, None] + 1e-12)
     out_ref[0, :] += jnp.einsum("t,tn->n", a, m,
                                 preferred_element_type=jnp.float32)
+
+
+def _xor_fold(v: jnp.ndarray) -> jnp.ndarray:
+    """XOR-reduce a (bt, bn) uint32 block over its row axis -> (bn,)."""
+    return jax.lax.reduce(v, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+
+
+def _stump_vote_fp_kernel(x_ref, thr_ref, pol_ref, a_ref,
+                          out_ref, f0_ref, f1_ref, *, block_t: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        f0_ref[...] = jnp.zeros_like(f0_ref)
+        f1_ref[...] = jnp.zeros_like(f1_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (bt, bn) gathered features
+    thr = thr_ref[0].astype(jnp.float32)    # (bt,)
+    pol = pol_ref[0].astype(jnp.float32)    # (bt,)
+    a = a_ref[0].astype(jnp.float32)        # (bt,)
+    m = pol[:, None] * jnp.sign(x - thr[:, None] + 1e-12)
+    out_ref[0, :] += jnp.einsum("t,tn->n", a, m,
+                                preferred_element_type=jnp.float32)
+
+    # xor-fold fingerprint: same mixing as ref._fp_lanes, with the row
+    # position offset by this block's place in the t grid.  alpha-gating
+    # makes zero-alpha padding rows the XOR identity, so the fingerprint
+    # is invariant under the batch's T padding; XOR associativity makes
+    # it invariant under the block layout.
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    tt = (jnp.uint32(t * block_t)
+          + jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0))
+    live = (a != 0.0)[:, None]
+    zero = jnp.zeros_like(bits)
+    f0_ref[0, :] ^= _xor_fold(jnp.where(
+        live, (bits ^ jnp.uint32(FP_SALT0)) * (2 * tt + FP_ODD0), zero))
+    f1_ref[0, :] ^= _xor_fold(jnp.where(
+        live, (bits ^ jnp.uint32(FP_SALT1)) * (2 * tt + FP_ODD1), zero))
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def stump_vote_fp_batched_kernel(xsel: jnp.ndarray, thr: jnp.ndarray,
+                                 pol: jnp.ndarray, alphas: jnp.ndarray, *,
+                                 block_t: int = 128, block_n: int = 512,
+                                 interpret: bool = True):
+    """Fused stump prediction + weighted vote + feature fingerprint.
+
+    Same contract as :func:`stump_vote_batched_kernel` plus two uint32
+    fingerprint outputs: ``(margins (B,N) f32, fp0 (B,N) u32,
+    fp1 (B,N) u32)``.  Zero-alpha padding rows contribute nothing to the
+    vote *or* the fingerprint, so both are stable across batch packing.
+    """
+    B, T, N = xsel.shape
+    assert T % block_t == 0 and N % block_n == 0, (B, T, N, block_t, block_n)
+    grid = (B, N // block_n, T // block_t)
+    kern = functools.partial(_stump_vote_fp_kernel, block_t=block_t)
+    vec = pl.BlockSpec((1, block_t), lambda b, n, t: (b, t))
+    col = pl.BlockSpec((1, block_n), lambda b, n, t: (b, n))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_n), lambda b, n, t: (b, t, n)),
+            vec, vec, vec,
+        ],
+        out_specs=[col, col, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, N), jnp.uint32),
+            jax.ShapeDtypeStruct((B, N), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(xsel, thr, pol, alphas)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))

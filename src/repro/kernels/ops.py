@@ -11,7 +11,13 @@ selection surface:
 * ``interpret=`` deprecated bool shim (True -> "interpret", False ->
                  "mosaic"); warns and will be removed next release
 
-With none of the above, the process-default policy re-resolves on every
+Block-shape kwargs (``block_t``/``block_n``/``block_q``/``block_k``)
+default to ``None``, which means "let the calibration table decide": the
+dispatcher injects the tuned layout recorded for the resolved (kernel,
+shape-bucket, backend) — or the hardcoded reference layout when nothing is
+tuned.  Passing an explicit int always wins over both.
+
+With no backend selection, the process-default policy re-resolves on every
 call: ``REPRO_KERNEL_BACKEND`` env var > calibration table > platform
 default (Mosaic on TPU, interpret elsewhere).
 """
@@ -31,7 +37,7 @@ _vote_blocks = dispatch.vote_blocks
 
 
 def stump_scan(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
-               thresholds: jnp.ndarray, *, block_n: int = 256,
+               thresholds: jnp.ndarray, *, block_n: Optional[int] = None,
                backend: Optional[str] = None,
                policy: Optional[KernelPolicy] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -44,7 +50,8 @@ def stump_scan(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
 
 
 def stump_scan_batched(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
-                       thresholds: jnp.ndarray, *, block_n: int = 256,
+                       thresholds: jnp.ndarray, *,
+                       block_n: Optional[int] = None,
                        backend: Optional[str] = None,
                        policy: Optional[KernelPolicy] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -59,7 +66,8 @@ def stump_scan_batched(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
 
 
 def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
-                  block_t: int = 128, block_n: int = 512,
+                  block_t: Optional[int] = None,
+                  block_n: Optional[int] = None,
                   backend: Optional[str] = None,
                   policy: Optional[KernelPolicy] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -72,7 +80,8 @@ def ensemble_vote(margins: jnp.ndarray, alphas: jnp.ndarray, *,
 
 
 def ensemble_vote_batched(margins: jnp.ndarray, alphas: jnp.ndarray, *,
-                          block_t: int = 128, block_n: int = 512,
+                          block_t: Optional[int] = None,
+                          block_n: Optional[int] = None,
                           backend: Optional[str] = None,
                           policy: Optional[KernelPolicy] = None,
                           interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -87,8 +96,9 @@ def ensemble_vote_batched(margins: jnp.ndarray, alphas: jnp.ndarray, *,
 
 
 def stump_vote_batched(xsel: jnp.ndarray, thr: jnp.ndarray, pol: jnp.ndarray,
-                       alphas: jnp.ndarray, *, block_t: int = 128,
-                       block_n: int = 512,
+                       alphas: jnp.ndarray, *,
+                       block_t: Optional[int] = None,
+                       block_n: Optional[int] = None,
                        backend: Optional[str] = None,
                        policy: Optional[KernelPolicy] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -102,9 +112,31 @@ def stump_vote_batched(xsel: jnp.ndarray, thr: jnp.ndarray, pol: jnp.ndarray,
         policy=policy, backend=backend, interpret=interpret)
 
 
+def stump_vote_fp_batched(xsel: jnp.ndarray, thr: jnp.ndarray,
+                          pol: jnp.ndarray, alphas: jnp.ndarray, *,
+                          block_t: Optional[int] = None,
+                          block_n: Optional[int] = None,
+                          backend: Optional[str] = None,
+                          policy: Optional[KernelPolicy] = None,
+                          interpret: Optional[bool] = None):
+    """One-launch serving path: fused stump-margin + weighted-vote + xor-fold
+    feature fingerprint.
+
+    Same contract as :func:`stump_vote_batched`, returning ``(margins
+    (B,N) f32, fp0 (B,N) u32, fp1 (B,N) u32)``.  The fingerprint lanes are
+    exact integers, identical across backends, block layouts, and T/N
+    padding (zero-alpha rows are the XOR identity), so
+    ``serve.engine.BatchEvaluator`` can key its result cache on them
+    without re-hashing any feature vector on the host."""
+    return dispatch.dispatch(
+        "stump_vote_fp_batched", (xsel, thr, pol, alphas),
+        dict(block_t=block_t, block_n=block_n),
+        policy=policy, backend=backend, interpret=interpret)
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128,
+                    causal: bool = True, block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     backend: Optional[str] = None,
                     policy: Optional[KernelPolicy] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -116,7 +148,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         policy=policy, backend=backend, interpret=interpret)
 
 
-def dist_update(alpha, D, y, h, *, block_n: int = 1024,
+def dist_update(alpha, D, y, h, *, block_n: Optional[int] = None,
                 backend: Optional[str] = None,
                 policy: Optional[KernelPolicy] = None,
                 interpret: Optional[bool] = None):

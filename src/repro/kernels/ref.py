@@ -74,6 +74,59 @@ def stump_vote_batched_ref(xsel: jnp.ndarray, thr: jnp.ndarray,
     return jnp.einsum("bt,btn->bn", alphas.astype(jnp.float32), m)
 
 
+# Feature-fingerprint mixing constants, shared verbatim with the fused
+# Pallas kernel (kernels/ensemble_vote.py) so oracle and kernel fold the
+# same bits: two independent 32-bit lanes give a 64-bit fingerprint.  The
+# multiplier 2*t + ODD is always odd (invertible mod 2^32), making the
+# fold position-sensitive; rows are gated on alpha != 0 so zero-alpha
+# padding rows contribute the XOR identity and the fingerprint is
+# invariant under the serving batch's T padding.
+FP_SALT0 = 0x9E3779B9
+FP_SALT1 = 0x85EBCA6B
+FP_ODD0 = 0x0001_0001
+FP_ODD1 = 0x00C2_B2AF
+
+
+def _fp_lanes(xsel: jnp.ndarray, alphas: jnp.ndarray):
+    """The two uint32 fingerprint lanes of each (batch, column) pair.
+
+    xsel: (B, T, N) float features; alphas: (B, T).  Lane k folds
+    ``XOR_t [(bits(x[t]) ^ SALT_k) * (2 t + ODD_k)]`` over the rows with
+    ``alpha_t != 0``.  Because alpha-zero rows contribute nothing to the
+    weighted vote either, two columns sharing a fingerprint under the same
+    (tenant, version) alphas share the ensemble margin too.
+    """
+    bits = jax.lax.bitcast_convert_type(xsel.astype(jnp.float32),
+                                        jnp.uint32)              # (B, T, N)
+    T = xsel.shape[1]
+    tt = jnp.arange(T, dtype=jnp.uint32)[None, :, None]
+    live = (alphas.astype(jnp.float32) != 0.0)[:, :, None]
+    zero = jnp.zeros_like(bits)
+    c0 = jnp.where(live,
+                   (bits ^ jnp.uint32(FP_SALT0)) * (2 * tt + FP_ODD0), zero)
+    c1 = jnp.where(live,
+                   (bits ^ jnp.uint32(FP_SALT1)) * (2 * tt + FP_ODD1), zero)
+    f0 = jax.lax.reduce(c0, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+    f1 = jax.lax.reduce(c1, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+    return f0, f1
+
+
+def stump_vote_fp_batched_ref(xsel: jnp.ndarray, thr: jnp.ndarray,
+                              pol: jnp.ndarray, alphas: jnp.ndarray):
+    """Fused stump vote + per-column feature fingerprint (serving one-launch
+    path).
+
+    Same margin semantics as :func:`stump_vote_batched_ref`, plus two
+    uint32 fingerprint lanes per column — ``(margins (B,N) f32,
+    fp0 (B,N) u32, fp1 (B,N) u32)``.  The fingerprint lanes are *exact*
+    integers: every backend must reproduce them bit-for-bit (XOR folding
+    is order-independent, so block layout cannot perturb them).
+    """
+    margins = stump_vote_batched_ref(xsel, thr, pol, alphas)
+    f0, f1 = _fp_lanes(xsel, alphas)
+    return margins, f0, f1
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True) -> jnp.ndarray:
     """Plain softmax attention.  q,k,v: (B,H,T,hd) -> (B,H,T,hd)."""

@@ -38,6 +38,16 @@ def feature_hash(x) -> bytes:
     return hashlib.blake2b(buf.tobytes(), digest_size=12).digest()
 
 
+def fingerprint_key(f0, f1) -> bytes:
+    """Cache key from the two uint32 xor-fold fingerprint lanes the fused
+    ``stump_vote_fp_batched`` kernel emits per request column.  The ``fp``
+    prefix keeps kernel-computed keys disjoint from :func:`feature_hash`
+    keys (12 raw digest bytes), so a tenant toggling ``fused_fingerprint``
+    mid-flight can never alias the two key spaces."""
+    return (b"fp" + int(f0).to_bytes(4, "little")
+            + int(f1).to_bytes(4, "little"))
+
+
 CacheKey = Tuple[str, int, bytes]       # (tenant, snapshot version, x hash)
 
 

@@ -6,12 +6,17 @@ requests become the N sample columns, its ensemble the T learner rows, both
 padded to the widest tenant (zero-alpha rows / dummy columns contribute
 nothing — the same padding contract as the 2-D ``ensemble_vote`` wrapper).
 
-Two paths:
+Three paths:
 
 * stump ensembles (the paper's weak learner, fed_mesh's wire format): one
   cheap host-side feature gather builds ``xsel[b,t,n] = x_b[n, feat_{b,t}]``
   and the fused ``stump_vote_batched`` Pallas kernel computes margins + vote
   in one VMEM-resident pass.
+* stump ensembles under a ``fused_fingerprint`` kernel policy with a
+  result cache attached: the one-launch ``stump_vote_fp_batched`` kernel
+  additionally emits a per-request xor-fold feature fingerprint, which
+  keys the result cache directly — no host-side ``feature_hash`` walk of
+  any feature vector on the submit path.
 * generic weak learners (logistic / mlp): per-learner predict builds the
   margin stack, then ``ensemble_vote_batched`` does the weighted vote.
 """
@@ -28,7 +33,7 @@ from repro.kernels import ops as kops
 from repro.kernels.dispatch import KernelPolicy
 from repro.models.weak import get_weak_learner
 from repro.serve.batching import Request
-from repro.serve.cache import ResultCache, feature_hash
+from repro.serve.cache import ResultCache, feature_hash, fingerprint_key
 from repro.serve.registry import EnsembleRegistry, EnsembleSnapshot
 
 
@@ -49,6 +54,7 @@ class EvalStats:
     cached_requests: int = 0    # answered from the result cache
     abstained_requests: int = 0  # cold tenants (no snapshot yet)
     deduped_requests: int = 0   # in-batch duplicates of a kernel request
+    fp_hits: int = 0            # fused-path cache hits (kernel fingerprint)
 
 
 class BatchEvaluator:
@@ -90,6 +96,11 @@ class BatchEvaluator:
             self._backend_override = "interpret" if interpret else "mosaic"
         self.cache = cache
         self.last_eval = EvalStats()
+        # cumulative launch/hash accounting (the fused-fingerprint path's
+        # whole point is driving both down; tests pin the deltas)
+        self.kernel_launches = 0
+        self.host_hash_calls = 0
+        self._fp_hits = 0
         self._predict_cache: Dict[str, object] = {}
 
     def evaluate(self, batch: Sequence[Request]) -> List[Response]:
@@ -100,10 +111,12 @@ class BatchEvaluator:
         margins: Dict[int, float] = {}          # rid -> margin
         versions: Dict[str, int] = {}           # tenant -> snapshot served
         stump_group: List[Tuple[EnsembleSnapshot, List[Request]]] = []
+        fused_group: List[Tuple[EnsembleSnapshot, List[Request]]] = []
         generic_group: List[Tuple[EnsembleSnapshot, List[Request]]] = []
         fills: List[Tuple[str, int, bytes, int]] = []  # cache misses to fill
         dupes: List[Tuple[int, int]] = []       # (dup rid, evaluated rid)
         n_cached = n_abstained = n_deduped = 0
+        self._fp_hits = 0
         for tenant, reqs in by_tenant.items():
             snap = self.registry.latest(tenant)
             if snap is None or snap.n_learners == 0:
@@ -113,11 +126,20 @@ class BatchEvaluator:
                     margins[r.rid] = 0.0
                 continue
             versions[tenant] = snap.version
+            fused = (self.cache is not None and snap.weak_name == "stump"
+                     and getattr(self._resolved_policy(tenant),
+                                 "fused_fingerprint", False))
+            if fused:
+                # the kernel computes the cache key in-launch: skip the
+                # host-side hash walk entirely and pack every request
+                fused_group.append((snap, reqs))
+                continue
             if self.cache is not None:          # consult before packing
                 pending: List[Request] = []
                 first_rid: Dict[bytes, int] = {}
                 for r in reqs:
                     xh = feature_hash(r.x)
+                    self.host_hash_calls += 1
                     hit = self.cache.lookup(tenant, snap.version, xh)
                     if hit is not None:
                         margins[r.rid] = hit
@@ -134,6 +156,8 @@ class BatchEvaluator:
                 (stump_group if snap.weak_name == "stump"
                  else generic_group).append((snap, reqs))
 
+        for pol, sub in self._by_policy(fused_group):
+            self._eval_stumps_fused(sub, margins, pol)
         for pol, sub in self._by_policy(stump_group):
             self._eval_stumps(sub, margins, pol)
         for pol, sub in self._by_policy(generic_group):
@@ -146,7 +170,7 @@ class BatchEvaluator:
         self.last_eval = EvalStats(
             kernel_requests=len(batch) - n_cached - n_abstained - n_deduped,
             cached_requests=n_cached, abstained_requests=n_abstained,
-            deduped_requests=n_deduped)
+            deduped_requests=n_deduped, fp_hits=self._fp_hits)
 
         return [Response(
             rid=r.rid, tenant=r.tenant, margin=margins[r.rid],
@@ -171,7 +195,9 @@ class BatchEvaluator:
         kernel launch per tenant."""
         if pol is None:
             return None
-        return (pol.backend, pol.env_var, tuple(sorted(pol.table.items())))
+        return (pol.backend, pol.env_var,
+                getattr(pol, "fused_fingerprint", False),
+                tuple(sorted(pol.table.items())))
 
     def _by_policy(self, group):
         """Partition one weak-learner group into per-kernel-policy launches.
@@ -189,8 +215,8 @@ class BatchEvaluator:
         return list(parts.values())
 
     # ----------------------------------------------------------- stump path
-    def _eval_stumps(self, group, margins: Dict[int, float],
-                     policy: Optional[KernelPolicy]) -> None:
+    def _pack_stumps(self, group):
+        """Pad one stump group into the (B, T, N) kernel block."""
         B = len(group)
         T = max(s.n_learners for s, _ in group)
         N = max(len(reqs) for _, reqs in group)
@@ -207,6 +233,12 @@ class BatchEvaluator:
             thr[b, :t_b] = sp[:, 1]
             pol[b, :t_b] = sp[:, 2]
             alf[b, :t_b] = np.asarray(snap.alphas)
+        return xsel, thr, pol, alf
+
+    def _eval_stumps(self, group, margins: Dict[int, float],
+                     policy: Optional[KernelPolicy]) -> None:
+        xsel, thr, pol, alf = self._pack_stumps(group)
+        self.kernel_launches += 1
         out = np.asarray(kops.stump_vote_batched(
             jnp.asarray(xsel), jnp.asarray(thr), jnp.asarray(pol),
             jnp.asarray(alf), policy=policy,
@@ -214,6 +246,35 @@ class BatchEvaluator:
         for b, (_, reqs) in enumerate(group):
             for n, r in enumerate(reqs):
                 margins[r.rid] = float(out[b, n])
+
+    def _eval_stumps_fused(self, group, margins: Dict[int, float],
+                           policy: Optional[KernelPolicy]) -> None:
+        """One-launch path: the kernel emits margins *and* the cache key.
+
+        Every request is packed (no pre-lookup — that would need a host
+        hash); the fingerprint the kernel computed then answers hits from
+        prior batches and fills misses.  A cached margin is bit-identical
+        to the freshly computed one (the padding contract makes padded
+        slots exact zeros), so serving the cache value on a hit keeps
+        replay batches byte-stable."""
+        xsel, thr, pol, alf = self._pack_stumps(group)
+        self.kernel_launches += 1
+        out, f0, f1 = kops.stump_vote_fp_batched(
+            jnp.asarray(xsel), jnp.asarray(thr), jnp.asarray(pol),
+            jnp.asarray(alf), policy=policy,
+            backend=self._backend_override)
+        out, f0, f1 = np.asarray(out), np.asarray(f0), np.asarray(f1)
+        for b, (snap, reqs) in enumerate(group):
+            tenant, version = snap.tenant, snap.version
+            for n, r in enumerate(reqs):
+                key = fingerprint_key(f0[b, n], f1[b, n])
+                hit = self.cache.lookup(tenant, version, key)
+                if hit is not None:             # prior batch or in-batch dup
+                    self._fp_hits += 1
+                    margins[r.rid] = hit
+                else:
+                    margins[r.rid] = float(out[b, n])
+                    self.cache.put(tenant, version, key, margins[r.rid])
 
     # --------------------------------------------------------- generic path
     def _predict_fn(self, weak_name: str):
@@ -234,6 +295,7 @@ class BatchEvaluator:
             stack = jnp.stack([predict(p, x) for p in snap.learners])
             m[b, :snap.n_learners, :len(reqs)] = np.asarray(stack)
             alf[b, :snap.n_learners] = np.asarray(snap.alphas)
+        self.kernel_launches += 1
         out = np.asarray(kops.ensemble_vote_batched(
             jnp.asarray(m), jnp.asarray(alf), policy=policy,
             backend=self._backend_override))

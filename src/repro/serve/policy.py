@@ -35,7 +35,10 @@ The JSON form (``--policy-table`` in the ``serve_ensemble`` driver)::
      "pairs":   {"iot@host-0": {"batch": {"max_batch": 32}}}}
 
 ``kernel`` specs take ``backend`` and/or ``calibration`` (a table written
-by ``benchmarks/backend_matrix.py``).
+by ``benchmarks/backend_matrix.py``), plus the optional boolean
+``fused_fingerprint`` opting the tenant into the one-launch
+``stump_vote_fp_batched`` serving path (kernel-computed cache keys, no
+host-side feature hashing).
 """
 from __future__ import annotations
 
@@ -77,20 +80,24 @@ def _checked(batch: Dict, scope: str = "host") -> Dict:
 def _kernel_from_spec(spec: Optional[Dict]) -> Optional[KernelPolicy]:
     if spec is None:
         return None
-    extra = sorted(set(spec) - {"backend", "calibration"})
+    extra = sorted(set(spec) - {"backend", "calibration", "fused_fingerprint"})
     if extra:
         raise ValueError(f"unknown kernel-policy key(s) {extra}")
-    if not any(spec.get(k) for k in ("backend", "calibration")):
+    fused = bool(spec.get("fused_fingerprint", False))
+    if not fused and not any(spec.get(k) for k in ("backend", "calibration")):
         # an empty spec would masquerade as "the most specific layer" and
         # silently mask broader pins — reject it like any no-op override
-        raise ValueError("kernel spec needs 'backend' and/or 'calibration' "
-                         "(omit the key entirely to inherit)")
+        raise ValueError("kernel spec needs 'backend', 'calibration' and/or "
+                         "'fused_fingerprint' (omit the key entirely to "
+                         "inherit)")
     if spec.get("calibration"):
         policy = KernelPolicy.load(spec["calibration"])
+        policy.fused_fingerprint = fused
         if spec.get("backend"):
-            policy = KernelPolicy(backend=spec["backend"], table=policy.table)
+            policy = KernelPolicy(backend=spec["backend"], table=policy.table,
+                                  fused_fingerprint=fused)
         return policy
-    return KernelPolicy(backend=spec.get("backend"))
+    return KernelPolicy(backend=spec.get("backend"), fused_fingerprint=fused)
 
 
 class PolicyTable:
@@ -243,8 +250,13 @@ class PolicyTable:
                         "only the backend pin is kept; re-point the "
                         "'calibration' key at the table's JSON instead",
                         RuntimeWarning, stacklevel=3)
+                kspec: Dict = {}
                 if kernel.backend is not None:
-                    out["kernel"] = {"backend": kernel.backend}
+                    kspec["backend"] = kernel.backend
+                if getattr(kernel, "fused_fingerprint", False):
+                    kspec["fused_fingerprint"] = True
+                if kspec:
+                    out["kernel"] = kspec
             return out
 
         doc: Dict = {"default": diff(self.default)}

@@ -63,7 +63,10 @@ def _interpret_shim(policy: Optional[KernelPolicy],
     if policy is None:
         return KernelPolicy(backend=backend)
     return KernelPolicy(backend=backend, table=policy.table,
-                        env_var=policy.env_var)
+                        env_var=policy.env_var,
+                        fused_fingerprint=getattr(policy,
+                                                  "fused_fingerprint",
+                                                  False))
 
 
 class EnsembleServer:

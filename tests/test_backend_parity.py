@@ -1,8 +1,10 @@
 """Backend parity: every public kernel must produce identical
 (atol-bounded) outputs on every *available* dispatch backend, asserted
 against the kernels/ref.py oracles — including the padded/ragged shapes
-exercised by test_vote_padding.py.  On CPU this covers 'interpret' and
-'xla'; on TPU 'mosaic' joins the matrix automatically.
+exercised by test_vote_padding.py and, for the Pallas backends, every
+block layout in the autotune sweep grid (LAYOUT_GRIDS): a layout the
+calibrator may pick must never change the answer.  On CPU this covers
+'interpret' and 'xla'; on TPU 'mosaic' joins the matrix automatically.
 
 Deliberately hypothesis-free: this coverage must run even in containers
 without the property-testing extras."""
@@ -12,9 +14,15 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.dispatch import available_backends
+from repro.kernels.dispatch import LAYOUT_GRIDS, available_backends
 
 BACKENDS = available_backends()
+# layouts only reshape the Pallas grids; the xla oracle ignores them
+PALLAS = [b for b in BACKENDS if b != "xla"]
+
+def _lid(layout):
+    return ",".join(f"{k.replace('block_', '')}{v}"
+                    for k, v in sorted(layout.items()))
 
 
 def _assert_close(got, want, atol=1e-5):
@@ -102,6 +110,138 @@ def test_dist_update_parity(backend, N):
     _assert_close(got_D, want_D, atol=1e-6)
     assert float(got_Z) == pytest.approx(float(want_Z), rel=1e-5)
     assert float(jnp.sum(got_D)) == pytest.approx(1.0, abs=1e-5)
+
+
+# ------------------------------------------ fused vote + fingerprint kernel
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("B,T,N", [(1, 1, 1), (2, 37, 100), (3, 77, 333)])
+def test_stump_vote_fp_batched_parity(backend, B, T, N):
+    k = jax.random.split(jax.random.key(B * 7 + T + N), 4)
+    xsel = jax.random.normal(k[0], (B, T, N))
+    thr = jax.random.normal(k[1], (B, T))
+    pol = jnp.sign(jax.random.normal(k[2], (B, T)) + 0.1)
+    a = jax.random.normal(k[3], (B, T))
+    got_m, got_f0, got_f1 = ops.stump_vote_fp_batched(
+        xsel, thr, pol, a, backend=backend)
+    want_m, want_f0, want_f1 = ref.stump_vote_fp_batched_ref(
+        xsel, thr, pol, a)
+    assert got_m.shape == (B, N)
+    _assert_close(got_m, want_m)
+    # fingerprints are integer lanes: bit-exact across every backend and
+    # layout or they are useless as cache keys
+    assert np.array_equal(np.asarray(got_f0), np.asarray(want_f0))
+    assert np.array_equal(np.asarray(got_f1), np.asarray(want_f1))
+    assert got_f0.dtype == jnp.uint32 and got_f1.dtype == jnp.uint32
+
+
+def test_stump_vote_fp_margin_matches_plain_vote():
+    """The fused kernel's margin lane is the same number the two-kernel
+    path produces — fusing the fingerprint must not perturb predictions."""
+    B, T, N = 2, 41, 207
+    k = jax.random.split(jax.random.key(11), 4)
+    xsel = jax.random.normal(k[0], (B, T, N))
+    thr = jax.random.normal(k[1], (B, T))
+    pol = jnp.sign(jax.random.normal(k[2], (B, T)) + 0.1)
+    a = jax.random.normal(k[3], (B, T))
+    for be in BACKENDS:
+        m_fused, _, _ = ops.stump_vote_fp_batched(xsel, thr, pol, a,
+                                                  backend=be)
+        m_plain = ops.stump_vote_batched(xsel, thr, pol, a, backend=be)
+        _assert_close(m_fused, m_plain)
+
+
+# ----------------------------------------------- layout sweep x ragged shape
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["stump_scan"], ids=_lid)
+def test_stump_scan_layout_sweep_parity(backend, layout):
+    k = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(k[0], (300, 7))
+    y = jnp.sign(jax.random.normal(k[1], (300,)))
+    w = jax.nn.softmax(jax.random.normal(k[2], (300,)))
+    thr = jnp.sort(jax.random.normal(k[3], (7, 9)), axis=1)
+    got = ops.stump_scan(x, y, w, thr, backend=backend, **layout)
+    _assert_close(got, ref.stump_scan_ref(x, y, w, thr))
+
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["stump_vote_batched"],
+                         ids=_lid)
+def test_stump_vote_layout_sweep_parity(backend, layout):
+    B, T, N = 2, 77, 333
+    k = jax.random.split(jax.random.key(5), 4)
+    xsel = jax.random.normal(k[0], (B, T, N))
+    thr = jax.random.normal(k[1], (B, T))
+    pol = jnp.sign(jax.random.normal(k[2], (B, T)) + 0.1)
+    a = jax.random.normal(k[3], (B, T))
+    got = ops.stump_vote_batched(xsel, thr, pol, a, backend=backend,
+                                 **layout)
+    _assert_close(got, ref.stump_vote_batched_ref(xsel, thr, pol, a))
+
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["stump_vote_fp_batched"],
+                         ids=_lid)
+def test_stump_vote_fp_layout_sweep_parity(backend, layout):
+    """Fingerprint lanes must be bit-identical under every swept layout:
+    the xor-fold is associative and zero-alpha padding rows are the XOR
+    identity, so block shape cannot leak into the digest."""
+    B, T, N = 2, 41, 207
+    k = jax.random.split(jax.random.key(9), 4)
+    xsel = jax.random.normal(k[0], (B, T, N))
+    thr = jax.random.normal(k[1], (B, T))
+    pol = jnp.sign(jax.random.normal(k[2], (B, T)) + 0.1)
+    a = jax.random.normal(k[3], (B, T))
+    got_m, got_f0, got_f1 = ops.stump_vote_fp_batched(
+        xsel, thr, pol, a, backend=backend, **layout)
+    want_m, want_f0, want_f1 = ref.stump_vote_fp_batched_ref(
+        xsel, thr, pol, a)
+    _assert_close(got_m, want_m)
+    assert np.array_equal(np.asarray(got_f0), np.asarray(want_f0))
+    assert np.array_equal(np.asarray(got_f1), np.asarray(want_f1))
+
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["ensemble_vote"], ids=_lid)
+def test_ensemble_vote_layout_sweep_parity(backend, layout):
+    k = jax.random.split(jax.random.key(13), 2)
+    m = jnp.sign(jax.random.normal(k[0], (130, 513)))
+    a = jax.random.normal(k[1], (130,))
+    got = ops.ensemble_vote(m, a, backend=backend, **layout)
+    _assert_close(got, ref.ensemble_vote_ref(m, a))
+
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["dist_update"], ids=_lid)
+def test_dist_update_layout_sweep_parity(backend, layout):
+    N = 1500
+    k = jax.random.split(jax.random.key(N), 3)
+    D = jax.nn.softmax(jax.random.normal(k[0], (N,)))
+    y = jnp.sign(jax.random.normal(k[1], (N,)))
+    h = jnp.sign(jax.random.normal(k[2], (N,)))
+    got_D, got_Z = ops.dist_update(0.7, D, y, h, backend=backend, **layout)
+    want_D, want_Z = ref.dist_update_ref(0.7, D, y, h)
+    _assert_close(got_D, want_D, atol=1e-6)
+    assert float(got_Z) == pytest.approx(float(want_Z), rel=1e-5)
+
+
+@pytest.mark.parametrize("backend", PALLAS)
+@pytest.mark.parametrize("T", [96, 192, 320])
+@pytest.mark.parametrize("layout", LAYOUT_GRIDS["flash_attention"],
+                         ids=_lid)
+def test_flash_layout_sweep_parity_non_divisible_T(backend, T, layout):
+    """T values where the swept block sizes do NOT divide the sequence:
+    _flash_blocks must clamp to the largest divisor <= requested, never
+    crash or mis-tile (satellite: largest-divisor fallback)."""
+    k = jax.random.split(jax.random.key(T), 3)
+    q = jax.random.normal(k[0], (1, 2, T, 32), jnp.float32)
+    kk = jax.random.normal(k[1], (1, 2, T, 32), jnp.float32)
+    v = jax.random.normal(k[2], (1, 2, T, 32), jnp.float32)
+    got = ops.flash_attention(q, kk, v, causal=True, backend=backend,
+                              **layout)
+    _assert_close(got, ref.flash_attention_ref(q, kk, v, causal=True),
+                  atol=2e-4)
 
 
 # ------------------------------------------- cross-backend agreement (all)

@@ -1,6 +1,9 @@
-"""Kernel-backend dispatch: resolution order, shape bucketing, the
-calibration table round-trip, the deprecated interpret shim, and per-call
+"""Kernel-backend dispatch: resolution order, layout-canonical shape
+bucketing, the v2 calibration-table round-trip (backend + block layout),
+layout-kwarg injection, the deprecated interpret shim, and per-call
 re-resolution in the serving evaluator."""
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +11,8 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.dispatch import (
-    ENV_VAR, KernelPolicy, bucket_of, canonical, on_tpu, platform_default)
+    BACKENDS, DEFAULT_LAYOUTS, ENV_VAR, CalEntry, KernelPolicy, bucket_of,
+    canonical, layout_key, on_tpu, platform_default)
 
 
 def _vote_case(T=9, N=33, seed=0):
@@ -111,6 +115,26 @@ def test_batched_bucket_tracks_padded_dims():
     assert bucket_of("ensemble_vote_batched", (m, a)) == (4, 64, 128)
 
 
+def test_bucketing_is_layout_canonical():
+    """Every candidate layout of one call maps to the same bucket — buckets
+    come from the reference layout, never the layout under test, so a
+    sweep's candidates share a single calibration entry."""
+    m, a = _vote_case(T=6, N=50)
+    base = bucket_of("ensemble_vote", (m, a))
+    for layout in ({"block_t": 64, "block_n": 256},
+                   {"block_t": 256, "block_n": 2048},
+                   {"block_t": None, "block_n": None}):
+        assert bucket_of("ensemble_vote", (m, a), layout) == base
+    x = jnp.zeros((100, 5))
+    args = (x, jnp.ones(100), jnp.ones(100), jnp.zeros((5, 6)))
+    assert (bucket_of("stump_scan", args, {"block_n": 1024})
+            == bucket_of("stump_scan", args))
+    q = jnp.zeros((1, 2, 192, 64))
+    assert (bucket_of("flash_attention", (q, q, q), {"block_q": 64,
+                                                     "block_k": 64})
+            == bucket_of("flash_attention", (q, q, q)))
+
+
 # ------------------------------------------------------------- calibration
 
 def test_calibration_roundtrip(tmp_path, monkeypatch):
@@ -119,16 +143,110 @@ def test_calibration_roundtrip(tmp_path, monkeypatch):
     m, a = _vote_case(T=6, N=50)
     bucket, samples = pol.calibrate_call("ensemble_vote", m, a, reps=2)
     assert bucket == bucket_of("ensemble_vote", (m, a))
+    # sample keys are (backend, layout_key): xla measured once with the
+    # empty layout, pallas backends swept over the kernel's grid
     assert set(samples) and all(len(ts) == 2 for ts in samples.values())
+    assert all(isinstance(k, tuple) and len(k) == 2 for k in samples)
+    assert ("xla", ()) in samples
+    assert sum(1 for b, _ in samples if b == "interpret") > 1
     winner = pol.table[("ensemble_vote", bucket)]
-    assert winner in samples
+    assert isinstance(winner, CalEntry)
+    assert (winner.backend, winner.layout) in samples
     path = pol.save(str(tmp_path / "cal.json"))
+    assert json.loads((tmp_path / "cal.json").read_text())["version"] == 2
     loaded = KernelPolicy.load(path)
     assert loaded.table == pol.table
-    assert loaded.resolve_name("ensemble_vote", bucket) == winner
+    assert loaded.resolve_name("ensemble_vote", bucket) == winner.backend
     # an uncalibrated bucket still falls back to the platform default
     assert loaded.resolve_name("ensemble_vote", (1024, 4096)) == \
         platform_default()
+
+
+def test_v1_table_loads_transparently(tmp_path):
+    """Backend-only v1 tables (no version field, no layout key) load as
+    layout-less entries — the reference layout then applies at dispatch."""
+    p = tmp_path / "cal_v1.json"
+    p.write_text(json.dumps({
+        "env_var": ENV_VAR, "backend": None,
+        "table": [{"kernel": "ensemble_vote", "bucket": [8, 128],
+                   "backend": "xla"}]}))
+    loaded = KernelPolicy.load(str(p))
+    assert loaded.table[("ensemble_vote", (8, 128))] == CalEntry("xla", ())
+    assert loaded.resolve_name("ensemble_vote", (8, 128)) == "xla"
+    # and a v2 re-save of the v1 load is a valid v2 table
+    loaded.save(str(tmp_path / "cal_v2.json"))
+    again = KernelPolicy.load(str(tmp_path / "cal_v2.json"))
+    assert again.table == loaded.table
+
+
+def test_future_schema_version_rejected(tmp_path):
+    p = tmp_path / "cal_v99.json"
+    p.write_text(json.dumps({"version": 99, "table": []}))
+    with pytest.raises(ValueError, match="schema v99"):
+        KernelPolicy.load(str(p))
+
+
+# -------------------------------------------------------- layout injection
+
+def _spy_backend(monkeypatch, name, captured):
+    be = BACKENDS[name]
+    orig = type(be).run
+
+    def run(kernel, *args, **kwargs):
+        captured.append(dict(kwargs))
+        return orig(be, kernel, *args, **kwargs)
+
+    monkeypatch.setattr(be, "run", run)
+
+
+def test_tuned_layout_injected_on_matching_backend(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    m, a = _vote_case(T=6, N=50)
+    bucket = bucket_of("ensemble_vote", (m, a))
+    pol = KernelPolicy(table={
+        ("ensemble_vote", bucket):
+            ("interpret", {"block_t": 64, "block_n": 256})})
+    captured = []
+    _spy_backend(monkeypatch, "interpret", captured)
+    ops.ensemble_vote(m, a, policy=pol)
+    assert captured[-1] == {"block_t": 64, "block_n": 256}
+    assert pol.layout_choices[("ensemble_vote", bucket)] == \
+        {"block_t": 64, "block_n": 256}
+    # explicit caller kwarg outranks the tuned layout
+    ops.ensemble_vote(m, a, policy=pol, block_t=128)
+    assert captured[-1] == {"block_t": 128, "block_n": 256}
+
+
+def test_tuned_layout_not_leaked_to_other_backend(monkeypatch):
+    """A layout measured for one substrate says nothing about another: a
+    call resolving to a different backend gets the reference layout."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    m, a = _vote_case(T=6, N=50)
+    bucket = bucket_of("ensemble_vote", (m, a))
+    pol = KernelPolicy(table={
+        ("ensemble_vote", bucket):
+            ("interpret", {"block_t": 64, "block_n": 256})})
+    ops.ensemble_vote(m, a, policy=pol, backend="xla")
+    assert pol.layout_choices[("ensemble_vote", bucket)] == \
+        DEFAULT_LAYOUTS["ensemble_vote"]
+
+
+def test_none_layout_kwargs_resolve_to_reference_layout(monkeypatch):
+    """ops wrappers pass block kwargs as None ("table decides"); with no
+    tuned entry the reference DEFAULT_LAYOUTS reach the backend."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    m, a = _vote_case(T=6, N=50)
+    captured = []
+    _spy_backend(monkeypatch, "interpret", captured)
+    ops.ensemble_vote(m, a, policy=KernelPolicy(), backend="interpret")
+    assert captured[-1] == DEFAULT_LAYOUTS["ensemble_vote"]
+
+
+def test_table_accepts_legacy_string_values():
+    pol = KernelPolicy(table={("ensemble_vote", (8, 128)): "xla"})
+    assert pol.table[("ensemble_vote", (8, 128))] == CalEntry("xla", ())
+    assert layout_key({"block_n": 256, "block_t": 64}) == \
+        (("block_n", 256), ("block_t", 64))
 
 
 # ------------------------------------------------------- deprecated shims

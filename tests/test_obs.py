@@ -376,22 +376,78 @@ def test_dispatch_profiling_records_launches_and_wall_time():
             rng.rand(1, 4).astype(np.float32))
     with obs.tracing() as tr:
         out = dispatch("stump_vote_batched", args, backend="xla")
+        out2 = dispatch("stump_vote_batched", args, backend="xla")
         reg = obs.get_registry()
-        hists = [(labels, h) for name, labels, h in reg.histograms()
+        walls = [(labels, h) for name, labels, h in reg.histograms()
                  if name == "kernel.wall_s"]
+        compiles = [(labels, h) for name, labels, h in reg.histograms()
+                    if name == "kernel.compile_s"]
         counters = [(labels, c) for name, labels, c in reg.counters()
                     if name == "kernel.launches"]
         spans = tr.finished()
-    assert out.shape == (1, 8)
-    assert len(hists) == 1 and len(counters) == 1
-    labels, h = hists[0]
+    assert out.shape == out2.shape == (1, 8)
+    # first-seen (kernel, bucket, backend) launch pays jit trace/compile
+    # and lands in kernel.compile_s; the repeat is steady state -> wall_s
+    assert len(walls) == 1 and len(compiles) == 1 and len(counters) == 1
+    labels, h = walls[0]
     assert labels["kernel"] == "stump_vote_batched"
     assert labels["backend"] == "xla"
     assert h.count == 1 and h.sum > 0
-    assert counters[0][1].value == 1
+    clabels, ch = compiles[0]
+    assert clabels == labels
+    assert ch.count == 1 and ch.sum > 0
+    assert counters[0][1].value == 2    # launches counts both
     ksp = next(d for d in spans if d["name"].startswith("kernel."))
     assert ksp["name"] == "kernel.stump_vote_batched"
     assert ksp["attrs"]["bucket"] == labels["bucket"]
+
+
+def test_first_seen_split_is_per_kernel_bucket_backend():
+    """The compile_s split keys on (kernel, bucket, backend): a counting
+    backend stub shows exactly one compile observation per distinct
+    bucket, with repeats all landing in wall_s."""
+    from repro.kernels.dispatch import BACKENDS
+
+    class CountingBackend:
+        name = "counting"
+        calls = 0
+
+        def available(self):
+            return True
+
+        def run(self, kernel, *args, **kwargs):
+            CountingBackend.calls += 1
+            return np.zeros((args[0].shape[0], args[0].shape[2]),
+                            np.float32)
+
+    rng = np.random.RandomState(1)
+
+    def mk(B, T, N):
+        return (rng.randn(B, T, N).astype(np.float32),
+                rng.randn(B, T).astype(np.float32),
+                np.sign(rng.randn(B, T)).astype(np.float32),
+                rng.rand(B, T).astype(np.float32))
+
+    BACKENDS["counting"] = CountingBackend()
+    try:
+        with obs.tracing():
+            small, big = mk(1, 4, 8), mk(1, 4, 600)
+            for _ in range(3):
+                dispatch("stump_vote_batched", small, backend="counting")
+            dispatch("stump_vote_batched", big, backend="counting")
+            reg = obs.get_registry()
+            compiles = [(labels, h) for name, labels, h
+                        in reg.histograms() if name == "kernel.compile_s"]
+            walls = [(labels, h) for name, labels, h in reg.histograms()
+                     if name == "kernel.wall_s"]
+    finally:
+        BACKENDS.pop("counting")
+    assert CountingBackend.calls == 4
+    # two buckets -> two first-seen compile observations, one each
+    assert len(compiles) == 2
+    assert all(h.count == 1 for _, h in compiles)
+    # only the small bucket repeated -> one wall_s series with 2 obs
+    assert len(walls) == 1 and walls[0][1].count == 2
 
 
 def test_dispatch_unprofiled_records_nothing():
@@ -425,6 +481,8 @@ def test_calibration_check_flags_stale_winner():
     assert flags[0]["calibrated"] == "mosaic"
     assert flags[0]["observed_best"] == "xla"
     assert flags[0]["observed_best_p50_s"] < flags[0]["calibrated_p50_s"]
+    # the flag carries per-backend observation counts for triage
+    assert flags[0]["counts"] == {"mosaic": 20, "xla": 20}
     # agreeing observations -> no flag
     pol_ok = KernelPolicy(table={("k", bucket): "xla"}, env_var=None)
     assert calibration_check(policy=pol_ok, registry=reg) == []
@@ -433,6 +491,31 @@ def test_calibration_check_flags_stale_winner():
     reg2.histogram("kernel.wall_s", kernel="k", bucket=bl,
                    backend="mosaic").observe(5e-3)
     assert calibration_check(policy=pol, registry=reg2) == []
+
+
+@pytest.mark.parametrize("n_obs,min_count,expect_flag", [
+    (4, 5, False),     # below the default floor -> too noisy, skipped
+    (5, 5, True),      # at the floor -> counted
+    (2, 2, True),      # caller-lowered floor
+    (19, 20, False),   # caller-raised floor
+])
+def test_calibration_check_min_count_floor(n_obs, min_count, expect_flag):
+    """Histograms with fewer than min_count observations per backend are
+    p50-unstable and must not generate drift flags."""
+    reg = MetricsRegistry()
+    bucket = (128, 8, 8)
+    bl = bucket_label(bucket)
+    for _ in range(n_obs):
+        reg.histogram("kernel.wall_s", kernel="k", bucket=bl,
+                      backend="mosaic").observe(5e-3)
+        reg.histogram("kernel.wall_s", kernel="k", bucket=bl,
+                      backend="xla").observe(1e-3)
+    pol = KernelPolicy(table={("k", bucket): "mosaic"}, env_var=None)
+    flags = calibration_check(policy=pol, registry=reg,
+                              min_count=min_count)
+    assert (len(flags) == 1) is expect_flag
+    if expect_flag:
+        assert flags[0]["counts"] == {"mosaic": n_obs, "xla": n_obs}
 
 
 # ----------------------------------------------------------------- reporter

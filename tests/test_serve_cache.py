@@ -209,6 +209,90 @@ def test_in_batch_duplicates_deduped_to_one_kernel_slot():
     assert out[0].margin == solo.margin
 
 
+# --------------------------------------- fused one-launch fingerprint path
+
+def _requests(xs, tenant="t", rid0=0, now=0.0):
+    from repro.serve.batching import Request
+    return [Request(rid=rid0 + i, tenant=tenant, x=jnp.asarray(x),
+                    t_submit=now) for i, x in enumerate(xs)]
+
+
+def test_fused_path_fewer_launches_and_hashes_identical_predictions():
+    """The ISSUE's serving acceptance: on a cached-replay batch the fused
+    fingerprint path serves identical predictions with strictly fewer
+    kernel launches + host hash calls than the classic hash-then-vote
+    path, and counts its hits as fp_hits."""
+    from repro.kernels.dispatch import KernelPolicy
+    from repro.serve.engine import BatchEvaluator
+
+    reg = EnsembleRegistry()
+    _publish(reg, "t", T=5, seed=3)
+    fused = BatchEvaluator(reg, policy=KernelPolicy(fused_fingerprint=True),
+                           cache=ResultCache(256))
+    classic = BatchEvaluator(reg, policy=KernelPolicy(),
+                             cache=ResultCache(256))
+    rng = np.random.RandomState(0)
+    xs = [rng.randn(6).astype(np.float32) for _ in range(7)]
+
+    fresh_f = fused.evaluate(_requests(xs))
+    fresh_c = classic.evaluate(_requests(xs))
+    assert fused.last_eval.fp_hits == 0         # cold: everything computed
+    replay_f = fused.evaluate(_requests(xs, rid0=100, now=1.0))
+    replay_c = classic.evaluate(_requests(xs, rid0=100, now=1.0))
+
+    # identical predictions, batch for batch, bit for bit
+    for got, want in ((fresh_f, fresh_c), (replay_f, replay_c)):
+        assert [r.margin for r in got] == [r.margin for r in want]
+        assert [r.label for r in got] == [r.label for r in want]
+    # replay is served entirely from in-kernel fingerprints
+    assert fused.last_eval.fp_hits == 7
+    assert classic.last_eval.cached_requests == 7
+    # the payoff the fused kernel exists for: strictly less host work
+    assert fused.host_hash_calls == 0
+    assert classic.host_hash_calls == 14        # 7 requests x 2 batches
+    assert (fused.kernel_launches + fused.host_hash_calls
+            < classic.kernel_launches + classic.host_hash_calls)
+
+
+def test_fused_path_respects_publish_versioning():
+    """Fingerprint cache keys carry the snapshot version: a republish
+    makes every old entry unreachable, so no stale margin can be served."""
+    from repro.kernels.dispatch import KernelPolicy
+    from repro.serve.engine import BatchEvaluator
+
+    reg = EnsembleRegistry()
+    _publish(reg, "t", T=4, seed=1)
+    ev = BatchEvaluator(reg, policy=KernelPolicy(fused_fingerprint=True),
+                        cache=ResultCache(256))
+    rng = np.random.RandomState(2)
+    xs = [rng.randn(6).astype(np.float32) for _ in range(3)]
+    ev.evaluate(_requests(xs))
+    ev.evaluate(_requests(xs, rid0=10, now=1.0))
+    assert ev.last_eval.fp_hits == 3
+    _publish(reg, "t", T=6, seed=9)             # new version
+    out = ev.evaluate(_requests(xs, rid0=20, now=2.0))
+    assert ev.last_eval.fp_hits == 0            # old entries unreachable
+    assert all(r.snapshot_version == 2 for r in out)
+    snap = reg.latest("t")
+    for r, x in zip(out, xs):
+        assert r.margin == pytest.approx(_direct_margin(snap, x), rel=1e-5)
+
+
+def test_fused_spec_round_trips_through_policy_table(tmp_path):
+    from repro.serve.policy import PolicyTable, _kernel_from_spec
+
+    pol = _kernel_from_spec({"fused_fingerprint": True})
+    assert pol.fused_fingerprint is True
+    table = PolicyTable()
+    table.set_tenant("iot", kernel=pol)
+    assert table.kernel_for("iot").fused_fingerprint is True
+    assert table.kernel_for("other") is None
+    p = tmp_path / "policies.json"
+    table.save(p)
+    loaded = PolicyTable.load(p)
+    assert loaded.kernel_for("iot").fused_fingerprint is True
+
+
 def test_lru_eviction_and_capacity():
     cache = ResultCache(capacity=2)
     xs = [np.full(3, float(i), np.float32) for i in range(3)]
