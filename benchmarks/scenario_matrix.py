@@ -46,7 +46,7 @@ def run_cell(name: str, trace: str, seeds: Sequence[int], n_rounds: int,
 
 def main(quick: bool = False, seeds: Optional[Sequence[int]] = None,
          n_rounds: Optional[int] = None, include_variants: bool = False,
-         serve: bool = True) -> List[Dict]:
+         serve: bool = True, chain: bool = True) -> List[Dict]:
     names = list(QUICK_DOMAINS) if quick else base_scenarios()
     if include_variants:
         names += variant_scenarios()
@@ -86,6 +86,30 @@ def main(quick: bool = False, seeds: Optional[Sequence[int]] = None,
                       f"{'; '.join(cell['band_failures'])}")
             if trace != "legacy" and cell["within_band"]:
                 passing[name] = passing.get(name, 0) + 1
+    if chain and serve:
+        # the decentralized chain-of-record leg: same environment and band
+        # as the blockchain base domain, but publishes commit to a shared
+        # chain (no central registry) and the harness kills the committee
+        # leader mid-replay — the band AND the zero-loss serve invariant
+        # (asserted inside replay_serve) must hold anyway.  This variant
+        # is asserted even though variant bands normally aren't: it
+        # shares the calibrated blockchain band.
+        cell = run_cell("blockchain_flchain", "block_delay", seeds, rounds)
+        rows.append(cell)
+        s = cell["serve"] or {}
+        print(f"{'blockchain_flchain':<17} {'block_delay':<15} "
+              f"{cell['time_down']:>7.1f} {cell['comm_down']:>7.1f} "
+              f"{cell['acc_delta_pp']:>+7.1f} "
+              f"{'ok' if cell['within_band'] else 'FAIL':<5} | "
+              f"{s.get('completed', 0):>6} {s.get('p99_ms', 0.0):>6.2f} "
+              f"{s.get('hosts_final', 0):>5} "
+              f"{s.get('cache_hit_rate', 0.0):>6.0%}  "
+              f"[killed {s.get('killed_host')}]", flush=True)
+        assert cell["within_band"], (
+            "blockchain_flchain out of band: "
+            + "; ".join(cell["band_failures"]))
+        assert s.get("killed_host"), (
+            "chain leg did not exercise the mid-replay leader kill")
     print("-" * 100)
 
     failures = []
@@ -135,8 +159,10 @@ if __name__ == "__main__":
                          "asserted — bands are calibrated for the bases)")
     ap.add_argument("--no-serve", action="store_true",
                     help="skip the serving replay (train-only matrix)")
+    ap.add_argument("--no-chain", action="store_true",
+                    help="skip the blockchain_flchain decentralized leg")
     args = ap.parse_args()
     main(quick=args.quick,
          seeds=None if args.seeds is None else tuple(args.seeds),
          n_rounds=args.rounds, include_variants=args.variants,
-         serve=not args.no_serve)
+         serve=not args.no_serve, chain=not args.no_chain)

@@ -175,6 +175,7 @@ class FederatedBoostEngine:
         self.scheduler = HostScheduler(cfg.scheduler)
         self.ensemble = Ensemble()
         self._owners: List[int] = []
+        self._round_stamps: List[int] = []   # client-local round per learner
         self.metrics = RunMetrics(mode=mode)
         self._val_margin = None       # running sum alpha~*h over val set
         self._test_margin = None
@@ -248,7 +249,9 @@ class FederatedBoostEngine:
                 self._tenant, list(self.ensemble.learners),
                 list(self.ensemble.alphas), clock=float(clock),
                 train_progress=self.metrics.learners_merged,
-                weak_name=self.weak.name)
+                weak_name=self.weak.name,
+                owners=list(self._owners),
+                rounds=list(self._round_stamps))
             sp.set(version=getattr(snap, "version", None))
             sp.end_sim(clock)
         obs.count("train.publishes")
@@ -322,6 +325,7 @@ class FederatedBoostEngine:
                               alpha_raw=raw, alpha=a)
             self.ensemble.add(e.params, a)
             self._owners.append(owner)
+            self._round_stamps.append(e.round_stamp)
             self._fold_into_margins(e.params, a)
             self.metrics.learners_merged += 1
 

@@ -266,6 +266,7 @@ class FleetCore:
         for e, owner, ai in zip(entries, owners, a.tolist()):
             eng.ensemble.add(e.params, ai)
             eng._owners.append(owner)
+            eng._round_stamps.append(e.round_stamp)
             self._lf.append(e.params["feature"])
             self._lt.append(e.params["threshold"])
             self._lp.append(e.params["polarity"])

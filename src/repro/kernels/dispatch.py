@@ -75,6 +75,10 @@ ENV_VAR = "REPRO_KERNEL_BACKEND"
 DEFAULT_CALIBRATION_PATH = "artifacts/backend_calibration.json"
 CALIBRATION_SCHEMA_VERSION = 2
 
+# (measured_on, running_on) pairs already warned about — the cross-
+# platform calibration warning fires once per process per pair
+_PLATFORM_WARNED: set = set()
+
 Bucket = Tuple[int, ...]
 Layout = Dict[str, int]                 # block-shape kwargs of one launch
 LayoutKey = Tuple[Tuple[str, int], ...]  # canonical (sorted items) form
@@ -564,6 +568,9 @@ class KernelPolicy:
         self.cache_hits = 0
         self._cache: Dict[tuple, object] = {}
         self._warned: set = set()
+        # platform the loaded calibration table was measured on (None for
+        # in-process tables; set by load())
+        self.measured_on: Optional[str] = None
 
     # ------------------------------------------------------------ resolve
     def _env_backend(self) -> Optional[str]:
@@ -679,9 +686,11 @@ class KernelPolicy:
         return bucket, samples
 
     # -------------------------------------------------------- persistence
-    def save(self, path: str = DEFAULT_CALIBRATION_PATH) -> str:
+    def save(self, path: str = DEFAULT_CALIBRATION_PATH,
+             measured_on: Optional[str] = None) -> str:
         """Persist the calibration table (JSON, schema v2: every entry
-        carries its winning backend *and* block layout) so restarts skip
+        carries its winning backend *and* block layout, and the table
+        records the platform it was measured on) so restarts skip
         recalibration; returns the path written."""
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -689,6 +698,8 @@ class KernelPolicy:
             "version": CALIBRATION_SCHEMA_VERSION,
             "env_var": self.env_var,
             "backend": self.backend,
+            "measured_on": (measured_on if measured_on is not None
+                            else jax.default_backend()),
             "table": [{"kernel": k, "bucket": list(b), "backend": e.backend,
                        "layout": dict(e.layout)}
                       for (k, b), e in sorted(self.table.items())],
@@ -700,19 +711,37 @@ class KernelPolicy:
     def load(cls, path: str = DEFAULT_CALIBRATION_PATH) -> "KernelPolicy":
         """Load a persisted table.  Schema v1 (backend-only entries, no
         ``version`` field) loads transparently with empty layouts — the
-        reference ``DEFAULT_LAYOUTS`` then apply at dispatch time."""
+        reference ``DEFAULT_LAYOUTS`` then apply at dispatch time.  A
+        table measured on a different platform warns once per process:
+        its tuned layouts still load (they are only hints) but say
+        nothing about this substrate — re-run benchmarks.backend_matrix
+        here to re-measure."""
         data = json.loads(Path(path).read_text())
         version = int(data.get("version", 1))
         if version > CALIBRATION_SCHEMA_VERSION:
             raise ValueError(
                 f"calibration table {path!r} has schema v{version}; this "
                 f"build reads up to v{CALIBRATION_SCHEMA_VERSION}")
-        table = {(e["kernel"], tuple(e["bucket"])):
-                 CalEntry(canonical(e["backend"]),
-                          layout_key(e.get("layout")))
-                 for e in data.get("table", [])}
-        return cls(backend=data.get("backend"), table=table,
-                   env_var=data.get("env_var", ENV_VAR))
+        measured_on = data.get("measured_on")
+        platform = jax.default_backend()
+        if (measured_on and measured_on != platform
+                and data.get("table")
+                and (measured_on, platform) not in _PLATFORM_WARNED):
+            _PLATFORM_WARNED.add((measured_on, platform))
+            warnings.warn(
+                f"calibration table {path!r} was measured on "
+                f"'{measured_on}' but this process runs on '{platform}'; "
+                f"its tuned (backend, layout) winners may not transfer — "
+                f"re-run `python -m benchmarks.backend_matrix` on this "
+                f"platform to re-measure", RuntimeWarning, stacklevel=2)
+        pol = cls(backend=data.get("backend"),
+                  table={(e["kernel"], tuple(e["bucket"])):
+                         CalEntry(canonical(e["backend"]),
+                                  layout_key(e.get("layout")))
+                         for e in data.get("table", [])},
+                  env_var=data.get("env_var", ENV_VAR))
+        pol.measured_on = measured_on
+        return pol
 
 
 _DEFAULT_POLICY = KernelPolicy()

@@ -115,9 +115,17 @@ class EnsembleRegistry:
     # ------------------------------------------------------------- publish
     def publish(self, tenant: str, learners: Sequence, alphas: Sequence[float],
                 *, clock: float = 0.0, train_progress: int = 0,
-                weak_name: str = "stump") -> EnsembleSnapshot:
+                weak_name: str = "stump", owners: Optional[Sequence[int]] = None,
+                rounds: Optional[Sequence[int]] = None) -> EnsembleSnapshot:
         """Publish from a list of weak-learner params + vote weights (the
-        :class:`Ensemble` representation the async engine grows)."""
+        :class:`Ensemble` representation the async engine grows).
+
+        ``owners``/``rounds`` are per-learner provenance metadata
+        (contributing client id + client-local round).  The central
+        registry ignores them — a snapshot here is already the aggregated
+        truth — but the chain-of-record registry
+        (:class:`repro.chain.registry.ChainRegistry`) exposes the same
+        signature and commits them on chain for ``provenance()``."""
         learners = list(learners)
         alphas = jnp.asarray(list(alphas), jnp.float32)
         if len(learners) != alphas.shape[0]:
@@ -136,7 +144,10 @@ class EnsembleRegistry:
 
     def publish_packed(self, tenant: str, stump_params: jnp.ndarray,
                        alphas: jnp.ndarray, *, clock: float = 0.0,
-                       train_progress: int = 0) -> EnsembleSnapshot:
+                       train_progress: int = 0,
+                       owners: Optional[Sequence[int]] = None,
+                       rounds: Optional[Sequence[int]] = None
+                       ) -> EnsembleSnapshot:
         """Publish a packed (T, 4) stump ensemble — the fed_mesh wire format."""
         stump_params = jnp.asarray(stump_params, jnp.float32)
         alphas = jnp.asarray(alphas, jnp.float32)

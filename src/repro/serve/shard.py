@@ -106,10 +106,15 @@ class ShardCluster:
                else [f"host-{i}" for i in range(n_hosts)])
         assert len(ids) == len(set(ids)) and ids
         self.hosts: Dict[str, ShardHost] = {
-            hid: ShardHost(hid, EnsembleRegistry(history=self.cfg.history))
-            for hid in ids}
+            hid: ShardHost(hid, self._make_registry(hid)) for hid in ids}
         self._rng = random.Random(self.cfg.seed)
         self.stats = GossipStats()
+
+    def _make_registry(self, host_id: str) -> EnsembleRegistry:
+        """Registry factory for one host replica — the hook subclasses
+        override to back hosts with a different store (the chain-of-record
+        :class:`~repro.chain.registry.ChainRegistry` swaps in here)."""
+        return EnsembleRegistry(history=self.cfg.history)
 
     # ------------------------------------------------------------ topology
     def host_ids(self, up_only: bool = True) -> List[str]:
@@ -147,9 +152,7 @@ class ShardCluster:
         routable host is never an empty one."""
         if host_id in self.hosts:
             raise ValueError(f"host {host_id!r} already in cluster")
-        host = ShardHost(host_id,
-                         EnsembleRegistry(history=self.cfg.history),
-                         up=False)
+        host = ShardHost(host_id, self._make_registry(host_id), up=False)
         peers = self.host_ids() or list(self.hosts)
         self.hosts[host_id] = host
         for peer_id in peers:

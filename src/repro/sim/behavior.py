@@ -284,13 +284,38 @@ class BlockchainLedger:
 
     def __init__(self, rng: np.random.RandomState, *,
                  block_interval_s: float = 0.4,
-                 commits_per_block: int = 1):
+                 commits_per_block: int = 1,
+                 prune_every: int = 64):
         self.rng = rng
         self.block_interval_s = float(block_interval_s)
         self.gap = self.block_interval_s / max(1, int(commits_per_block))
         self._slots: List[float] = []    # reserved slot times, ascending
+        # slot pruning: committers register a *cursor* and stamp every
+        # commit with it.  Per-cursor times are non-decreasing (the
+        # ClientBehavior timestamp contract), so min(cursors) is the
+        # earliest time any future commit can carry — reserved slots
+        # more than ``gap`` older can never collide again and are
+        # dropped every ``prune_every`` commits.  Cursor-less commits
+        # keep the conservative unbounded behavior (no cursor floor ->
+        # no pruning), so mixed callers stay exact.
+        self.prune_every = int(prune_every)
+        self._cursors: List[float] = []
+        self._untracked = False          # any commit ever made cursor-less
+        self._since_prune = 0
+        self.pruned_slots = 0
 
-    def commit(self, t: float) -> float:
+    def register(self) -> int:
+        """Register one committer; returns the cursor to pass to
+        :meth:`commit`.  Pruning only engages when *every* commit on this
+        ledger is cursor-stamped."""
+        self._cursors.append(float("-inf"))
+        return len(self._cursors) - 1
+
+    @property
+    def live_slots(self) -> int:
+        return len(self._slots)
+
+    def commit(self, t: float, cursor: Optional[int] = None) -> float:
         """Seconds from ``t`` until this message's block is mined."""
         # residual wait to the next block (Poisson arrivals), then the
         # first slot >= ``gap`` away from every reserved one.  Slots are
@@ -298,6 +323,10 @@ class BlockchainLedger:
         # not commit in time order (the enhanced engine advances clients
         # one at a time — an early-clock commit issued late must not
         # queue behind later-clock slots it precedes on chain).
+        if cursor is None:
+            self._untracked = True
+        else:
+            self._cursors[cursor] = max(self._cursors[cursor], float(t))
         earliest = t + float(self.rng.exponential(self.block_interval_s))
         slot = earliest
         i = bisect.bisect_left(self._slots, slot - self.gap)
@@ -305,7 +334,24 @@ class BlockchainLedger:
             slot = max(slot, self._slots[i] + self.gap)
             i += 1
         bisect.insort(self._slots, slot)
+        self._since_prune += 1
+        if self._since_prune >= self.prune_every:
+            self._since_prune = 0
+            self._prune()
         return slot - t
+
+    def _prune(self) -> None:
+        if self._untracked or not self._cursors:
+            return
+        floor = min(self._cursors)
+        if floor == float("-inf"):
+            return
+        # a future commit at t >= floor only scans slots >= t - gap; any
+        # slot strictly below floor - gap is unreachable forever
+        cut = bisect.bisect_left(self._slots, floor - self.gap)
+        if cut:
+            self.pruned_slots += cut
+            del self._slots[:cut]
 
 
 class BlockDelayBehavior(ClientBehavior):
@@ -332,6 +378,10 @@ class BlockDelayBehavior(ClientBehavior):
         self.link_mbps, self.latency_s = float(link_mbps), float(latency_s)
         self.fork_drop = float(fork_drop)
         self.ledger = ledger
+        # per-behavior timestamps are non-decreasing, so each client
+        # registers a ledger cursor — the shared ledger prunes slots no
+        # live client can collide with (bounded memory at fleet scale)
+        self._cursor = ledger.register() if ledger is not None else None
 
     def availability(self, t: float) -> bool:
         # a fork orphans the round's message: the legacy dropout analogue
@@ -342,7 +392,7 @@ class BlockDelayBehavior(ClientBehavior):
 
     def link(self, t: float) -> Link:
         if self.ledger is not None:
-            wait = self.ledger.commit(t)
+            wait = self.ledger.commit(t, cursor=self._cursor)
         else:
             wait = float(self.rng.exponential(self.block_interval_s))
         wait += (self.confirmations - 1) * self.block_interval_s

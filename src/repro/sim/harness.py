@@ -172,8 +172,22 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
         arrivals.append((t + beh.query_delay(bt) / sc.time_warp, cid))
     arrivals.sort()
 
+    # chain mode: kill the committee leader halfway through the replay —
+    # an abrupt death, not a drain.  The autoscaler sheds the dead replica
+    # (accepted requests reroute), a replacement warms from chain history
+    # alone, and the zero-loss assertion below must still hold.
+    chain_mode = hasattr(cluster, "chain")
+    kill_at = (len(arrivals) // 2
+               if chain_mode and scaler is not None else None)
+    killed = None
     accepted, rids = 0, []
-    for t, cid in arrivals:
+    for i, (t, cid) in enumerate(arrivals):
+        if kill_at is not None and i == kill_at:
+            up = cluster.host_ids()
+            if len(up) > 1:
+                leader = cluster.leader()
+                killed = leader if leader in up else up[0]
+                cluster.kill(killed)
         ok, out = server.submit(sc.name, xs[rng.randint(xs.shape[0])], t)
         accepted += ok
         rids.extend(r.rid for r in out)
@@ -201,6 +215,7 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
         "scale_outs": scaler.stats.scale_outs if scaler else 0,
         "scale_ins": scaler.stats.scale_ins if scaler else 0,
         "rerouted": scaler.stats.rerouted if scaler else 0,
+        "killed_host": killed,
     }
 
 
@@ -218,8 +233,16 @@ def run_scenario(name_or_scenario, trace: str = "legacy", seed: int = 0,
           else get_scenario(name_or_scenario))
     serve = serve and sc.serve_replay
     with obs.span("scenario.run", scenario=sc.name, trace=trace, seed=seed):
-        cluster = (ShardCluster(hosts, GossipConfig(seed=seed))
-                   if serve else None)
+        if not serve:
+            cluster = None
+        elif sc.chain:
+            # decentralized chain-of-record mode: publishes commit to the
+            # shared chain; hosts (and any replacement the autoscaler
+            # warms later) fold confirmed blocks — no central registry
+            from repro.chain import ChainCluster
+            cluster = ChainCluster(hosts, GossipConfig(seed=seed))
+        else:
+            cluster = ShardCluster(hosts, GossipConfig(seed=seed))
         data, runs = train_pair(sc, trace, seed=seed, n_rounds=n_rounds,
                                 cluster=cluster, publish_every=publish_every,
                                 engine=engine)

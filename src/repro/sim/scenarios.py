@@ -102,6 +102,10 @@ class Scenario:
     # FedBoostConfig field overrides applied after construction
     # (catch_up_cap, compensation, scheduler, ...)
     config_overrides: Mapping = field(default_factory=dict)
+    # decentralized chain-of-record mode: the harness backs the serving
+    # fleet with a repro.chain.ChainCluster (publishes commit to a shared
+    # chain; no central registry instance) instead of a ShardCluster
+    chain: bool = False
 
     def make_data(self, seed: int = 0) -> Dict:
         from repro.data import make_domain_data
@@ -279,6 +283,18 @@ DUTY_CYCLE_TRACE_JSON: Dict = {
 }
 
 
+def _recorded_trace(name: str, stagger_s: float = 0.0,
+                    base: Optional[TraceFactory] = None) -> TraceFactory:
+    """Replay a checked-in ``artifacts/traces/<name>.json`` recording per
+    client (loaded lazily, so registering the scenario never requires the
+    artifacts directory to exist)."""
+    def make(dom: DomainConfig, seed: int) -> BehaviorFor:
+        from repro.sim.traces import load_trace
+        return _trace_replay(load_trace(name), stagger_s=stagger_s,
+                             base=base)(dom, seed)
+    return make
+
+
 def _trace_replay(trace_json: Dict, stagger_s: float = 0.0,
                   base: Optional[TraceFactory] = None) -> TraceFactory:
     """Replay a recorded JSON trace per client (optionally staggering each
@@ -384,6 +400,10 @@ register(Scenario(
                             period_s=24.0),
         # recorded battery/duty-cycle telemetry replayed per client
         "battery_trace": _trace_replay(BATTERY_TRACE_JSON, stagger_s=1.7),
+        # checked-in diurnal recording (artifacts/traces/mobile_diurnal
+        # .json): one reference handset's observed day, staggered per
+        # client like a fleet across time zones
+        "diurnal_trace": _recorded_trace("mobile_diurnal", stagger_s=1.3),
     },
     serve_rate=800.0,
     notes="keyboard personalization fleet, diurnal availability"))
@@ -453,6 +473,22 @@ register(replace(
                               drop_in_bad=0.95, bad_bw_frac=0.02,
                               bad_latency_s=1.0)},
     notes="adversarial churn variant of edge_vision"))
+
+# decentralized chain-of-record variant: same environment and paper band
+# as the blockchain domain, but the harness backs serving with a
+# repro.chain.ChainCluster — publishes commit client deltas to a shared
+# hash-linked chain, a rotating committee aggregates confirmed blocks,
+# and there is no central registry instance to kill.  The harness also
+# kills the committee leader mid-replay; the band and the zero-loss serve
+# invariant must hold regardless.
+_blockchain = get_scenario("blockchain")
+register(replace(
+    _blockchain, name="blockchain_flchain", variant_of="blockchain",
+    chain=True,
+    traces={"legacy": _legacy,
+            "block_delay": _blockchain.traces["block_delay"]},
+    notes="server-less FLchain mode: chain-of-record replaces the "
+          "central registry (arXiv:2112.07938)"))
 
 _iot = get_scenario("iot")
 register(replace(

@@ -1,0 +1,325 @@
+"""repro.chain: the chain of record (hash-linked blocks over the
+BlockchainLedger slot model), the ChainRegistry EnsembleRegistry quack,
+the ChainCluster serving fleet, ledger slot pruning, and the pinned
+bit-for-bit parity of the centralized path against pre-chain goldens."""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.chain import Block, Chain, ChainCluster, ChainCommit, ChainRegistry
+from repro.chain.registry import _owner_runs
+from repro.serve import GossipConfig, ShardCluster
+from repro.serve.registry import EnsembleRegistry
+from repro.sim.behavior import BlockchainLedger
+from repro.sim.harness import run_scenario, train_pair
+from repro.sim.scenarios import get_scenario
+
+GOLDEN = Path(__file__).parent / "golden" / "blockchain_centralized.json"
+
+
+def _commit(seq, tenant="t", cid=0, alphas=(1.0,), rounds=None):
+    rows = tuple((float(seq), 0.5, 1.0, 0.0) for _ in alphas)
+    return ChainCommit(tenant=tenant, cid=cid, seq=seq,
+                       rounds=rounds or (0,) * len(alphas),
+                       alphas=tuple(alphas), stump_rows=rows)
+
+
+def _packed(T, seed=0):
+    rng = np.random.RandomState(seed)
+    rows = np.zeros((T, 4), np.float32)
+    rows[:, 0] = rng.randint(0, 6, size=T)
+    rows[:, 1] = rng.randn(T)
+    rows[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+    return rows, (rng.rand(T) + 0.1).astype(np.float32)
+
+
+# ------------------------------------------------------------- chain core
+def test_chain_mints_in_confirmation_order():
+    chain = Chain(seed=1)
+    waits = [chain.submit(_commit(chain.next_seq()), t=float(i))
+             for i in range(5)]
+    assert all(w > 0 for w in waits)
+    assert chain.height == 0                       # nothing due yet
+    minted = chain.advance(1e9)
+    assert len(minted) == 5 and chain.height == 5
+    assert chain.verify()
+    # blocks appear in confirmation-time order and times are recorded
+    times = [b.mined_at for b in chain.blocks[1:]]
+    assert times == sorted(times)
+    seqs = [c.seq for b in chain.blocks[1:] for c in b.commits]
+    assert sorted(seqs) == list(range(1, 6))       # nothing lost
+
+
+def test_finalize_drains_pending_and_confirms_tip():
+    chain = Chain(seed=2, reorg_prob=0.4)
+    for i in range(6):
+        chain.submit(_commit(chain.next_seq()), t=float(i))
+    chain.advance(2.0)
+    partial = chain.confirmed_hashes()
+    assert chain.tail_depth == 1                   # tip unconfirmed
+    chain.finalize()
+    assert chain.tail_depth == 0                   # whole chain confirmed
+    full = chain.confirmed_hashes()
+    assert full[:len(partial)] == partial          # prefix only extended
+    total = sum(len(b.commits) for b in chain.blocks)
+    assert total == 6                              # reorgs lose nothing
+    assert chain.verify()
+
+
+def test_verify_detects_tampered_block():
+    chain = Chain(seed=3)
+    for i in range(3):
+        chain.submit(_commit(chain.next_seq()), t=float(i))
+    chain.advance(1e9)
+    assert chain.verify()
+    b = chain.blocks[2]
+    chain.blocks[2] = Block(b.height, b.prev_hash, b.mined_at + 1.0,
+                            b.commits)             # mutate mined time
+    assert not chain.verify()                      # descendant link breaks
+
+
+def test_replay_hashes_match_live_chain():
+    chain = Chain(seed=4)
+    for i in range(4):
+        chain.submit(_commit(chain.next_seq(), cid=i), t=float(i))
+    chain.advance(1e9)
+    assert chain.replay_hashes() == [b.hash for b in chain.blocks[1:]]
+
+
+def test_committee_rotates_when_leader_leaves():
+    chain = Chain(seed=5, committee_size=2)
+    for n in ("a", "b", "c", "d"):
+        chain.join(n)
+    com = chain.committee()
+    assert len(com) == 2
+    leader = chain.leader()
+    chain.leave(leader)
+    assert chain.leader() != leader                # rotated past the dead
+    assert leader not in chain.committee()
+    # the miner stamp is metadata only: block hashes are leader-free
+    chain.submit(_commit(chain.next_seq()), t=0.0)
+    chain.advance(1e9)
+    assert chain.replay_hashes() == [b.hash for b in chain.blocks[1:]]
+
+
+# ------------------------------------------------------------ ledger prune
+def test_ledger_pruning_never_changes_waits():
+    """Satellite regression: a pruning ledger returns bit-identical waits
+    to an unpruned clone over per-cursor-monotone commit sequences, while
+    keeping the live slot set bounded."""
+    a = BlockchainLedger(np.random.RandomState(0), prune_every=8)
+    b = BlockchainLedger(np.random.RandomState(0), prune_every=10**9)
+    cur_a = [a.register() for _ in range(3)]
+    cur_b = [b.register() for _ in range(3)]
+    rng = np.random.RandomState(42)
+    clocks = [0.0, 0.0, 0.0]
+    for _ in range(400):
+        i = rng.randint(3)
+        clocks[i] += float(rng.rand())             # per-cursor monotone
+        t = clocks[i]
+        assert a.commit(t, cursor=cur_a[i]) == b.commit(t, cursor=cur_b[i])
+    assert a.pruned_slots > 0
+    assert a.live_slots < b.live_slots
+    assert a.live_slots + a.pruned_slots == b.live_slots
+
+
+def test_ledger_cursorless_commit_disables_pruning():
+    led = BlockchainLedger(np.random.RandomState(1), prune_every=4)
+    cur = led.register()
+    led.commit(0.0)                                # untracked commit
+    for i in range(1, 40):
+        led.commit(float(i), cursor=cur)
+    assert led.pruned_slots == 0                   # conservative: no floor
+    assert led.live_slots == 40
+
+
+# ---------------------------------------------------------- chain registry
+def test_owner_runs_split():
+    assert _owner_runs(None, 0, 3) == [(0, 3)]
+    assert _owner_runs([7, 7, 2, 2, 7], 0, 5) == [(0, 2), (2, 4), (4, 5)]
+    assert _owner_runs([7, 7, 2], 2, 3) == [(2, 3)]  # delta only
+    assert _owner_runs([1, 2], 2, 2) == []
+
+
+def test_publish_packed_folds_versions_and_provenance():
+    reg = ChainRegistry(node_id="n0", history=8)
+    rows, alphas = _packed(3)
+    assert reg.publish_packed("t", rows, alphas, clock=0.0,
+                              owners=[5, 5, 9], rounds=[1, 2, 1]) is None
+    snap = None
+    t = 0.0
+    while snap is None:                            # wait out confirmation
+        t += 1.0
+        reg.sync(t)
+        snap = reg.latest("t")
+    # two owner runs -> two commits; confirmed in order, content intact
+    np.testing.assert_array_equal(np.asarray(snap.stump_params), rows)
+    np.testing.assert_allclose(np.asarray(snap.alphas), alphas, rtol=1e-6)
+    prov = reg.provenance("t")
+    assert [(c, r) for c, r, _ in prov] == [(5, 1), (5, 2), (9, 1)]
+    hashes = {h for _, _, h in prov}
+    assert hashes <= set(reg.chain.confirmed_hashes())
+    # versioned lineage: version 1 covers a prefix of the latest
+    v1 = reg.provenance("t", 1)
+    assert prov[:len(v1)] == v1
+    with pytest.raises(KeyError):
+        reg.provenance("t", 99)
+    assert reg.provenance("ghost") == ()
+
+
+def test_publish_commits_delta_only_and_refuses_shrink():
+    reg = ChainRegistry(node_id="n0")
+    r1, a1 = _packed(2, seed=1)
+    reg.publish_packed("t", r1, a1, clock=0.0)
+    r2, a2 = _packed(5, seed=1)
+    reg.publish_packed("t", r2, a2, clock=1.0)
+    reg.sync(1e9)
+    reg.chain.finalize()
+    # entries on chain == 5 (2 + the 3-entry delta), not 7
+    n = sum(c.n_entries for b in reg.chain.blocks for c in b.commits)
+    assert n == 5
+    with pytest.raises(ValueError, match="shrank"):
+        reg.publish_packed("t", r1, a1, clock=2.0)
+    with pytest.raises(ValueError, match="mismatched"):
+        reg.publish("t", [{}] * 2, [1.0, 2.0, 3.0], clock=2.0)
+
+
+def test_every_node_folds_identical_snapshots():
+    """The serverless core claim: nodes (including one born after the
+    publisher died) rebuild bit-identical snapshots from the chain."""
+    chain = Chain(seed=6)
+    pub = ChainRegistry(chain, node_id="pub")
+    other = ChainRegistry(chain, node_id="other")
+    for step in range(3):
+        rows, alphas = _packed(2 + 2 * step, seed=step)
+        pub.publish_packed("t", rows, alphas, clock=float(step))
+    chain.finalize()
+    a, b = pub.latest("t"), other.latest("t")
+    assert a.version == b.version and a.fingerprint == b.fingerprint
+    pub.close()                                    # publisher dies
+    late = ChainRegistry(chain, node_id="late")    # born afterwards
+    c = late.latest("t")
+    assert (c.version, c.fingerprint) == (a.version, a.fingerprint)
+    assert late.provenance("t") == other.provenance("t")
+    assert late.digest() == other.digest()
+
+
+def test_generic_learner_family_round_trips():
+    chain = Chain(seed=7)
+    reg = ChainRegistry(chain, node_id="n0")
+    learners = [{"w": np.arange(3, dtype=np.float32)},
+                {"w": np.ones(3, np.float32)}]
+    reg.publish("t", learners, [0.5, 0.25], clock=0.0,
+                weak_name="logistic")
+    chain.finalize()
+    snap = reg.latest("t")
+    assert snap.weak_name == "logistic" and snap.stump_params is None
+    np.testing.assert_array_equal(snap.learners[0]["w"],
+                                  learners[0]["w"])
+
+
+# ----------------------------------------------------------- chain cluster
+def test_chain_cluster_kill_any_host_and_warm_from_chain():
+    cl = ChainCluster(3, GossipConfig(seed=0))
+    rows, alphas = _packed(4)
+    cl.publish_packed("t", rows, alphas, clock=0.0, owners=[1, 1, 2, 2],
+                      rounds=[0, 1, 0, 1])
+    cl.run_until_quiescent()
+    fps = {h.registry.latest("t").fingerprint for h in cl.hosts.values()}
+    assert len(fps) == 1                           # all views identical
+    leader = cl.leader()
+    assert leader in cl.hosts
+    cl.kill(leader)                                # committee leader dies
+    assert cl.leader() != leader
+    rows2, alphas2 = _packed(6)
+    cl.publish_packed("t", rows2, alphas2, clock=1.0)
+    cl.run_until_quiescent(now=1.0)
+    snap = cl.latest("t")
+    assert snap is not None and snap.stump_params.shape[0] == 6
+    assert cl.provenance("t")                      # lineage still answerable
+    # scale-out warms purely from chain history
+    fresh = cl.add_host("host-9", now=2.0)
+    assert fresh.registry.latest("t").fingerprint == snap.fingerprint
+    # total loss: every host leaves; a newborn still rebuilds everything
+    for hid in list(cl.hosts):
+        cl.remove_host(hid)
+    reborn = cl.add_host("host-99", now=3.0)
+    assert reborn.registry.latest("t").fingerprint == snap.fingerprint
+
+
+def test_train_pair_through_chain_cluster():
+    sc = get_scenario("blockchain")
+    sc = dataclasses.replace(
+        sc, domain=dataclasses.replace(sc.domain, n_samples=500,
+                                       n_clients=4))
+    cluster = ChainCluster(2, GossipConfig(seed=0))
+    _, runs = train_pair(sc, "block_delay", seed=0, n_rounds=4,
+                         cluster=cluster)
+    assert runs["enhanced"].snapshots_published > 0
+    cluster.run_until_quiescent()
+    snap = cluster.latest(sc.name)
+    assert snap is not None and snap.version > 0
+    prov = cluster.provenance(sc.name)
+    assert len(prov) == snap.n_learners           # one triple per learner
+    assert {c for c, _, _ in prov} <= set(range(-1, 4))
+
+
+def test_flchain_scenario_registered():
+    sc = get_scenario("blockchain_flchain")
+    assert sc.chain and sc.variant_of == "blockchain"
+    assert set(sc.traces) >= {"legacy", "block_delay"}
+    assert not get_scenario("blockchain").chain    # centralized default
+
+
+def test_flchain_harness_kills_leader_and_serves_lossless():
+    """The harness chain leg: mid-replay the committee leader is killed;
+    the zero-loss invariant (asserted inside replay_serve) must survive
+    and the fleet keeps serving confirmed chain state."""
+    sc = get_scenario("blockchain_flchain")
+    sc = dataclasses.replace(
+        sc, domain=dataclasses.replace(sc.domain, n_samples=500,
+                                       n_clients=4))
+    rep = run_scenario(sc, trace="block_delay", seed=0, n_rounds=4,
+                       serve=True, serve_duration_s=0.5)
+    s = rep.serve
+    assert s is not None and s["completed"] > 0
+    assert s["killed_host"]                        # the kill leg ran
+    assert s["snapshot_version"] > 0
+
+
+# -------------------------------------------------------- centralized pin
+def test_centralized_path_bitwise_parity_with_golden():
+    """The chain refactor must leave the default centralized path
+    bit-for-bit unchanged: these goldens were captured immediately before
+    src/repro/chain existed (same seeds, same ShardCluster publish path).
+    Counters are exact; float accumulators and snapshot fingerprints are
+    pinned exactly too — any drift means the refactor leaked into the
+    centralized code path."""
+    golden = json.loads(GOLDEN.read_text())
+    sc = get_scenario("blockchain")
+    for trace in ("legacy", "block_delay"):
+        cluster = ShardCluster(2, GossipConfig(seed=0))
+        _, runs = train_pair(sc, trace, seed=0, n_rounds=10,
+                             cluster=cluster)
+        for mode, m in runs.items():
+            g = golden[f"{trace}/{mode}"]
+            assert m.uplink_bytes == g["uplink_bytes"]
+            assert m.downlink_bytes == g["downlink_bytes"]
+            assert m.n_messages == g["n_messages"]
+            assert m.n_syncs == g["n_syncs"]
+            assert m.learners_merged == g["learners_merged"]
+            assert m.snapshots_published == g["snapshots_published"]
+            assert m.rounds_unavailable == g["rounds_unavailable"]
+            assert m.sim_time_s == g["sim_time_s"]
+            assert m.final_val_error == g["final_val_error"]
+            assert m.final_test_error == g["final_test_error"]
+            tail = [list(p) for p in m.val_error_curve[-3:]]
+            assert tail == g["val_error_curve_tail"]
+        snap = cluster.latest(sc.name)
+        gs = golden[f"{trace}/snapshot"]
+        assert snap.version == gs["version"]
+        assert snap.fingerprint == gs["fingerprint"]
+        assert snap.n_learners == gs["n_learners"]

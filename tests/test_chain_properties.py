@@ -1,0 +1,113 @@
+"""Property-based suite for the chain of record: hash-link integrity
+under arbitrary commit sequences and tampering, deterministic replay from
+genesis, and confirmed-prefix monotonicity under reorgs and committee
+rotation."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; CI installs requirements-dev.txt
+
+from hypothesis import given, settings, strategies as st
+
+from repro.chain import Block, Chain, ChainCommit
+
+NODES = ("n0", "n1", "n2", "n3", "n4")
+
+
+def _commit(seq, tenant, cid, k):
+    return ChainCommit(
+        tenant=tenant, cid=cid, seq=seq, rounds=tuple(range(k)),
+        alphas=tuple(0.5 + 0.25 * i for i in range(k)),
+        stump_rows=tuple((float(seq), float(i), 1.0, 0.0)
+                         for i in range(k)))
+
+
+submissions = st.lists(
+    st.tuples(st.sampled_from(("alpha", "beta")),   # tenant
+              st.integers(0, 9),                    # committing client
+              st.integers(1, 3),                    # entries in the delta
+              st.floats(0.0, 4.0)),                 # inter-submit gap (s)
+    min_size=1, max_size=16)
+
+
+def _feed(chain, events):
+    t = 0.0
+    for tenant, cid, k, gap in events:
+        t += gap                                    # publisher-monotone
+        chain.submit(_commit(chain.next_seq(), tenant, cid, k), t)
+    return t
+
+
+# ------------------------------------------------------ hash-link integrity
+@given(events=submissions, seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_hash_links_verify_and_tamper_breaks_them(events, seed):
+    chain = Chain(seed=seed)
+    _feed(chain, events)
+    chain.finalize()
+    assert chain.verify()
+    assert len(chain.blocks) == len(events) + 1     # genesis + 1 per commit
+    # tamper with any non-tip block: the descendant's prev_hash no longer
+    # matches, so the whole chain fails verification
+    for i in range(1, len(chain.blocks) - 1):
+        good = chain.blocks[i]
+        chain.blocks[i] = Block(good.height, good.prev_hash,
+                                good.mined_at + 0.5, good.commits)
+        assert not chain.verify()
+        chain.blocks[i] = good
+    # the tip has no descendant: break its own parent link instead
+    tip = chain.blocks[-1]
+    chain.blocks[-1] = Block(tip.height, "f" * 24, tip.mined_at,
+                             tip.commits)
+    assert not chain.verify()
+    chain.blocks[-1] = tip
+    assert chain.verify()
+
+
+# ---------------------------------------------------- deterministic replay
+@given(events=submissions, seed=st.integers(0, 99),
+       reorg=st.floats(0.0, 0.5))
+@settings(max_examples=40, deadline=None)
+def test_replay_from_genesis_reproduces_hashes(events, seed, reorg):
+    a = Chain(seed=seed, reorg_prob=reorg)
+    b = Chain(seed=seed, reorg_prob=reorg)
+    # committee membership differs between the two chains: the miner
+    # stamp is metadata, so the hash chains must still agree
+    a.join("only-on-a")
+    for n in NODES:
+        b.join(n)
+    _feed(a, events)
+    _feed(b, events)
+    a.finalize()
+    b.finalize()
+    live = [blk.hash for blk in a.blocks[1:]]
+    assert a.replay_hashes() == live
+    assert [blk.hash for blk in b.blocks[1:]] == live
+
+
+# ----------------------------------------- confirmed-prefix monotonicity
+@given(events=submissions, seed=st.integers(0, 99),
+       churn=st.lists(st.sampled_from(NODES), max_size=6),
+       reorg=st.floats(0.0, 0.6))
+@settings(max_examples=40, deadline=None)
+def test_confirmed_prefix_only_extends(events, seed, churn, reorg):
+    chain = Chain(seed=seed, reorg_prob=reorg, committee_size=2)
+    for n in NODES:
+        chain.join(n)
+    t_end = _feed(chain, events)
+    confirmed = []
+    t = 0.0
+    for i, node in enumerate(churn or [NODES[0]]):
+        # committee rotation mid-run: leave on odd steps, rejoin on even
+        (chain.leave if i % 2 else chain.join)(node)
+        t += t_end / 4 + 0.5
+        chain.advance(t)
+        now = chain.confirmed_hashes()
+        assert now[:len(confirmed)] == confirmed    # prefix preserved
+        confirmed = now
+    chain.finalize()
+    final = chain.confirmed_hashes()
+    assert final[:len(confirmed)] == confirmed
+    assert chain.verify()
+    # no commit is ever lost to a reorg
+    seqs = sorted(c.seq for b in chain.blocks for c in b.commits)
+    assert seqs == list(range(1, len(events) + 1))

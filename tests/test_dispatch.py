@@ -3,6 +3,7 @@ bucketing, the v2 calibration-table round-trip (backend + block layout),
 layout-kwarg injection, the deprecated interpret shim, and per-call
 re-resolution in the serving evaluator."""
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -184,6 +185,62 @@ def test_future_schema_version_rejected(tmp_path):
     p.write_text(json.dumps({"version": 99, "table": []}))
     with pytest.raises(ValueError, match="schema v99"):
         KernelPolicy.load(str(p))
+
+
+def test_save_records_measuring_platform(tmp_path):
+    pol = KernelPolicy()
+    pol.record("ensemble_vote", (8, 128), "xla")
+    path = pol.save(str(tmp_path / "cal.json"))
+    data = json.loads((tmp_path / "cal.json").read_text())
+    assert data["measured_on"] == jax.default_backend()
+    loaded = KernelPolicy.load(path)
+    assert loaded.measured_on == jax.default_backend()
+    # explicit override for tables assembled off-process
+    pol.save(str(tmp_path / "cal_tpu.json"), measured_on="tpu")
+    assert json.loads(
+        (tmp_path / "cal_tpu.json").read_text())["measured_on"] == "tpu"
+
+
+def test_cross_platform_table_warns_exactly_once(tmp_path):
+    from repro.kernels import dispatch
+    here = jax.default_backend()
+    other = "tpu" if here != "tpu" else "gpu"
+    p = tmp_path / "cal_other.json"
+    p.write_text(json.dumps({
+        "version": 2, "backend": None, "measured_on": other,
+        "table": [{"kernel": "ensemble_vote", "bucket": [8, 128],
+                   "backend": "xla", "layout": {}}]}))
+    dispatch._PLATFORM_WARNED.discard((other, here))
+    with pytest.warns(RuntimeWarning, match=f"measured on '{other}'"):
+        loaded = KernelPolicy.load(str(p))
+    assert loaded.measured_on == other
+    assert loaded.resolve_name("ensemble_vote", (8, 128)) == "xla"
+    # one-shot per (measured_on, platform) pair: a reload stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        KernelPolicy.load(str(p))
+    dispatch._PLATFORM_WARNED.discard((other, here))
+
+
+def test_same_platform_and_empty_tables_load_silently(tmp_path):
+    here = jax.default_backend()
+    same = tmp_path / "cal_same.json"
+    same.write_text(json.dumps({
+        "version": 2, "backend": None, "measured_on": here,
+        "table": [{"kernel": "ensemble_vote", "bucket": [8, 128],
+                   "backend": "xla", "layout": {}}]}))
+    empty = tmp_path / "cal_empty.json"
+    empty.write_text(json.dumps({
+        "version": 2, "backend": None, "measured_on": "tpu", "table": []}))
+    v1 = tmp_path / "cal_v1.json"          # pre-measured_on tables: silent
+    v1.write_text(json.dumps({
+        "table": [{"kernel": "ensemble_vote", "bucket": [8, 128],
+                   "backend": "xla"}]}))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert KernelPolicy.load(str(same)).measured_on == here
+        KernelPolicy.load(str(empty))      # nothing tuned -> nothing to warn
+        assert KernelPolicy.load(str(v1)).measured_on is None
 
 
 # -------------------------------------------------------- layout injection

@@ -261,6 +261,7 @@ def test_registry_has_five_domains_with_nontrivial_traces():
             behaviors = [bf(c) for c in range(sc.domain.n_clients)]
             assert all(isinstance(b, ClientBehavior) for b in behaviors)
     assert set(variant_scenarios()) == {"mobile_x4", "edge_vision_churn",
+                                        "blockchain_flchain",
                                         "iot_coldstart", "mobile_100k"}
 
 
@@ -329,3 +330,42 @@ def test_harness_trace_changes_training_profile():
             != legacy["enhanced"].total_bytes)
     row = result_row(gilbert)
     assert np.isfinite(row["comm_down"])
+
+
+# ------------------------------------------------------- recorded traces
+def test_mobile_diurnal_artifact_matches_derivation():
+    """The checked-in recording is exactly what the seeded derivation
+    produces — `python -m repro.sim.traces` regenerates it bit for bit."""
+    from repro.sim.traces import (available_traces, derive_diurnal_trace,
+                                  load_trace)
+    assert "mobile_diurnal" in available_traces()
+    trace = load_trace("mobile_diurnal")
+    assert trace == derive_diurnal_trace()
+    assert trace["loop_s"] == 24.0 and len(trace["segments"]) == 48
+    # the recording is a valid TraceSchedule and behaves like a day:
+    # some off segments, night slowdown above 1x
+    sched = TraceSchedule.from_json(trace)
+    avail = [sched.availability(s["t"]) for s in trace["segments"]]
+    assert any(avail) and not all(avail)
+    speeds = [s["speed"] for s in trace["segments"]]
+    assert max(speeds) > 1.0 and min(speeds) >= 1.0
+
+
+def test_missing_trace_lists_available():
+    from repro.sim.traces import load_trace
+    with pytest.raises(FileNotFoundError, match="mobile_diurnal"):
+        load_trace("no_such_recording")
+
+
+def test_mobile_scenario_replays_recorded_trace():
+    sc = get_scenario("mobile")
+    assert "diurnal_trace" in sc.traces
+    behavior_for = sc.behavior_for("diurnal_trace", seed=0)
+    b0, b1 = behavior_for(0), behavior_for(1)
+    assert isinstance(b0, TraceSchedule)
+    assert b0.loop_s == 24.0
+    # per-client stagger: same recording, shifted phase
+    assert b1.phase_s != b0.phase_s
+    samples = [(b0.availability(t), b0.compute_time(1.0, t))
+               for t in np.linspace(0.0, 24.0, 20)]
+    assert any(a for a, _ in samples) and not all(a for a, _ in samples)
