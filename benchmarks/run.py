@@ -139,7 +139,7 @@ def main() -> None:
                             kernel_bench, multipod_compare, relevance_filter,
                             roofline, scale_matrix, scenario_matrix,
                             scheduler_ablation, serving_load, shard_gossip,
-                            staleness)
+                            staleness, sustained_slo)
 
     # the single benchmark registry: name -> thunk, in run order
     benches = {
@@ -168,6 +168,8 @@ def main() -> None:
         "shard_gossip": lambda: shard_gossip.main(quick=args.quick),
         # fleet autoscaling: eq.-(1) pressure controller vs fixed fleet
         "autoscale_load": lambda: autoscale_load.main(quick=args.quick),
+        # SLO error budgets + burn-rate alerting through a latency burst
+        "sustained_slo": lambda: sustained_slo.main(quick=args.quick),
         # kernel x backend x shape-bucket wall-clock + calibration table
         "backend_matrix": lambda: backend_matrix.main(quick=args.quick),
         # 100k-client fleet-scale smoke through the vectorized fleet profile
@@ -221,6 +223,13 @@ def main() -> None:
             f"p99={r['p99_ms']:.2f}ms;hit={r['hit_rate']:.2f};"
             f"identical={int(r['identical_predictions'])};"
             f"lag={r['mean_lag_rounds']:.1f}r"))
+    for r in results.get("sustained_slo", []):
+        if r.get("tenant") == "__fleet__":
+            csv_rows.append((
+                "sustained_slo_fleet", 0.0,
+                f"p99={r['p99_ms']:.2f}ms;fired={r['alerts_fired']};"
+                f"in_burst={r['alerts_in_burst']};"
+                f"resolved={r['alerts_resolved']};rej={r['rejected']}"))
     for r in results.get("autoscale_load", []):
         csv_rows.append((
             f"autoscale_{r['fleet']}_{r['rate']:.0f}rps", 0.0,

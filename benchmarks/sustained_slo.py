@@ -1,0 +1,255 @@
+"""Sustained-load SLO benchmark: error budgets and burn-rate alerting on a
+sharded fleet through an injected latency burst.
+
+A rendezvous-sharded fleet (synthetic packed-stump ensembles, as in
+``benchmarks/autoscale_load`` — the SLO question is independent of how the
+ensembles were trained) serves a steady Poisson stream under the simulated
+clock with the analytic batch service-time model ``c0 + c1*n``.  Partway
+through the run the service model degrades by ``BURST_FACTOR`` for
+``BURST_S`` simulated seconds — an incident.  An :class:`SLOMonitor` with
+per-tenant objectives consumes every outcome through the serving stack's
+``on_slo`` hook (completions) and the sharded front door (rejections), and
+the :class:`FleetAutoscaler` additionally reads the monitor's burn rate as
+a pressure signal, so budget burn itself can recruit capacity.
+
+Asserted acceptance:
+
+* at least one burn-rate alert **fires inside the burst window** and every
+  alert **resolves after it** — none still active at the end of the run;
+* the error-budget **ledger is exact**: per-tenant good/bad totals equal
+  the journal (one entry per recorded outcome), and the journal covers
+  every request the fleet completed or rejected — nothing sampled,
+  nothing double-counted.
+
+With ``--trace-out`` the run executes under tracing and exports the JSONL
+trace (``alert.fire`` / ``alert.resolve`` points land in the same stream
+as the serving spans); ``--alerts-out`` writes the alert timeline JSON.
+The CI obs job runs the quick configuration and stitches the trace.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.obs as obs
+from repro.obs.slo import SLObjective, SLOMonitor
+from repro.serve import (AutoscaleConfig, BatchConfig, FleetAutoscaler,
+                         GossipConfig, ShardCluster, ShardedEnsembleServer)
+
+# batch service-time model: fixed dispatch overhead + per-request cost
+SERVICE_C0 = 1.2e-3
+SERVICE_C1 = 2.0e-4
+
+N_TENANTS = 4
+MIN_HOSTS = 2
+MAX_HOSTS = 6
+
+# the incident: service time multiplies by BURST_FACTOR over [T0, T0+BURST_S)
+BURST_FACTOR = 25.0
+
+# an objective loose enough that the healthy fleet sits well inside it and
+# tight enough that the burst violates it outright (c0 * BURST_FACTOR = 30ms)
+LATENCY_SLO_S = 0.020
+TARGET = 0.95
+WINDOW_S = 0.5
+
+BATCH = BatchConfig(queue_budget=64, max_batch=16, target_p99_s=0.01)
+AUTOSCALE = AutoscaleConfig(min_hosts=MIN_HOSTS, max_hosts=MAX_HOSTS,
+                            target_queue=16.0, target_p99_s=0.05,
+                            adapt_every_s=0.02, step_down=0.1)
+
+
+def build_cluster(n_hosts: int, tenants: Sequence[str], seed: int,
+                  T: int = 24, F: int = 16) -> ShardCluster:
+    """A converged cluster holding one synthetic stump ensemble per tenant."""
+    cluster = ShardCluster(n_hosts, GossipConfig(seed=seed))
+    rng = np.random.RandomState(seed)
+    for tenant in tenants:
+        params = np.zeros((T, 4), np.float32)
+        params[:, 0] = rng.randint(0, F, size=T)
+        params[:, 1] = rng.randn(T)
+        params[:, 2] = np.where(rng.rand(T) > 0.5, 1.0, -1.0)
+        alphas = (rng.rand(T) + 0.1).astype(np.float32)
+        cluster.publish_packed(tenant, jnp.asarray(params),
+                               jnp.asarray(alphas))
+    cluster.run_until_quiescent()
+    return cluster
+
+
+def gen_arrivals(tenants: Sequence[str], rate: float, duration_s: float,
+                 seed: int, F: int = 16
+                 ) -> List[Tuple[float, str, np.ndarray]]:
+    """Steady Poisson trace — the *service model* carries the incident, so
+    the offered load stays constant and the SLO breach is unambiguous."""
+    rng = np.random.RandomState(seed)
+    out: List[Tuple[float, str, np.ndarray]] = []
+    t = 0.0
+    while t < duration_s:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration_s:
+            break
+        out.append((t, tenants[rng.randint(len(tenants))],
+                    rng.randn(F).astype(np.float32)))
+    return out
+
+
+def run_incident(arrivals, tenants: Sequence[str], duration_s: float,
+                 burst_t0: float, burst_s: float, seed: int) -> Dict:
+    """One closed-loop run through the incident; returns everything the
+    assertions and the report need."""
+    # the service model reads the *dispatch-time* clock through this box,
+    # so batches dispatched inside the burst window are slow regardless of
+    # when their requests arrived — exactly how a real incident behaves
+    clock = {"now": 0.0}
+
+    def service_model(n: int) -> float:
+        base = SERVICE_C0 + SERVICE_C1 * n
+        if burst_t0 <= clock["now"] < burst_t0 + burst_s:
+            return base * BURST_FACTOR
+        return base
+
+    journal: List[Dict] = []
+    monitor = SLOMonitor(
+        [SLObjective(tenant=t, latency_threshold_s=LATENCY_SLO_S,
+                     target=TARGET, window_s=WINDOW_S) for t in tenants],
+        journal=journal)
+
+    cluster = build_cluster(MIN_HOSTS, tenants, seed=seed)
+    server = ShardedEnsembleServer(cluster, BATCH,
+                                   service_model=service_model)
+    server.attach_slo(monitor)
+    scaler = FleetAutoscaler(server, AUTOSCALE, slo=monitor)
+
+    fired: List[Dict] = []
+    for t, tenant, x in arrivals:
+        clock["now"] = t
+        server.submit(tenant, x, t)
+        scaler.step(t)
+        fired.extend(e.to_dict() for e in monitor.check(t))
+    clock["now"] = duration_s
+    server.drain()
+    # let every short window drain past the last recorded outcome so any
+    # alert the burst raised has the room to resolve
+    t_end = duration_s + WINDOW_S
+    fired.extend(e.to_dict() for e in monitor.check(t_end))
+
+    rep = server.report()
+    return {"monitor": monitor, "journal": journal, "events": fired,
+            "report": rep, "scaler": scaler, "t_end": t_end}
+
+
+def reconcile(run: Dict) -> None:
+    """The exact-ledger assertion: budgets == journal == request log."""
+    monitor: SLOMonitor = run["monitor"]
+    journal = run["journal"]
+    rep = run["report"]
+    per_tenant: Dict[str, List[int]] = {}
+    for e in journal:
+        g, b = per_tenant.setdefault(e["tenant"], [0, 0])
+        per_tenant[e["tenant"]] = [g + e["good"], b + (not e["good"])]
+    for tenant, budget in monitor.budgets.items():
+        jg, jb = per_tenant.get(tenant, [0, 0])
+        assert (budget.good_total, budget.bad_total) == (jg, jb), (
+            f"ledger drift for {tenant}: budget "
+            f"{(budget.good_total, budget.bad_total)} != journal {(jg, jb)}")
+    outcomes = rep["completed"] + rep["rejected"]
+    assert len(journal) == outcomes, (
+        f"journal has {len(journal)} entries but the fleet settled "
+        f"{outcomes} requests (completed={rep['completed']} "
+        f"rejected={rep['rejected']})")
+
+
+def main(quick: bool = False, seed: int = 0, trace_out: str = "",
+         alerts_out: str = "") -> List[Dict]:
+    duration = 2.0 if quick else 4.0
+    rate = 400.0 if quick else 600.0
+    burst_t0 = duration * 0.4
+    burst_s = duration * 0.2
+    tenants = [f"tenant-{i}" for i in range(N_TENANTS)]
+
+    print("=" * 86)
+    print(f"sustained SLO — {TARGET:.0%} of requests under "
+          f"{LATENCY_SLO_S * 1e3:.0f} ms over {WINDOW_S}s windows; "
+          f"{BURST_FACTOR:.0f}x latency burst over "
+          f"[{burst_t0:.2f}s, {burst_t0 + burst_s:.2f}s)")
+    print("=" * 86)
+
+    if trace_out:
+        with obs.tracing(ring=1 << 18) as tracer:
+            run = run_incident(gen_arrivals(tenants, rate, duration, seed),
+                               tenants, duration, burst_t0, burst_s, seed)
+            tracer.export_jsonl(trace_out)
+        print(f"wrote trace -> {trace_out}")
+    else:
+        run = run_incident(gen_arrivals(tenants, rate, duration, seed),
+                           tenants, duration, burst_t0, burst_s, seed)
+
+    monitor: SLOMonitor = run["monitor"]
+    rep = run["report"]
+    slo_report = monitor.report(run["t_end"])
+
+    fires = [e for e in run["events"] if e["kind"] == "fire"]
+    resolves = [e for e in run["events"] if e["kind"] == "resolve"]
+    in_burst = [e for e in fires
+                if burst_t0 <= e["t"] < burst_t0 + burst_s + WINDOW_S]
+
+    print(f"{'tenant':<12} {'good':>6} {'bad':>5} {'budget left':>12} "
+          f"{'burn(window)':>13}")
+    print("-" * 86)
+    rows: List[Dict] = []
+    for tenant, t_rep in slo_report["tenants"].items():
+        print(f"{tenant:<12} {t_rep['good']:>6} {t_rep['bad']:>5} "
+              f"{t_rep['budget_remaining']:>11.0%} "
+              f"{t_rep['burn_window']:>12.2f}x")
+        rows.append(dict(t_rep, tenant=tenant))
+    print("-" * 86)
+    print(f"fleet: {rep['completed']} completed, {rep['rejected']} rejected, "
+          f"p99 {rep['p99_ms']:.2f} ms, "
+          f"{run['scaler'].stats.scale_outs} scale-outs")
+    for e in run["events"]:
+        print(f"  alert {e['kind']:<8} t={e['t']:.3f}s {e['tenant']:<10} "
+              f"{e['rule']:<7} burn short/long = "
+              f"{e['burn_short']:.1f}/{e['burn_long']:.1f}")
+
+    reconcile(run)
+    assert in_burst, (
+        f"no burn-rate alert fired inside the burst window "
+        f"[{burst_t0:.2f}, {burst_t0 + burst_s:.2f}); fires: {fires}")
+    assert len(resolves) == len(fires), (
+        f"{len(fires)} fire(s) but {len(resolves)} resolve(s)")
+    assert not slo_report["active_alerts"], (
+        f"alerts still active at end of run: {slo_report['active_alerts']}")
+    print(f"OK: {len(in_burst)} alert(s) fired in the burst window, all "
+          f"{len(fires)} resolved; ledger exact over "
+          f"{len(run['journal'])} outcomes")
+
+    if alerts_out:
+        with open(alerts_out, "w") as f:
+            json.dump({"events": run["events"],
+                       "tenants": slo_report["tenants"]}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"wrote alert timeline -> {alerts_out}")
+
+    rows.append({"tenant": "__fleet__", "completed": rep["completed"],
+                 "rejected": rep["rejected"], "p99_ms": rep["p99_ms"],
+                 "alerts_fired": len(fires),
+                 "alerts_in_burst": len(in_burst),
+                 "alerts_resolved": len(resolves)})
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--trace-out", default="",
+                    help="run under tracing and export the JSONL trace here")
+    ap.add_argument("--alerts-out", default="",
+                    help="write the alert timeline JSON here")
+    args = ap.parse_args()
+    main(quick=args.quick, trace_out=args.trace_out,
+         alerts_out=args.alerts_out)

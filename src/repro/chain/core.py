@@ -65,6 +65,11 @@ class ChainCommit:
     weak_name: str = "stump"
     train_progress: int = 0           # publisher's merged count at submit
     submitted_at: float = 0.0         # publisher clock at submission
+    # trace context of the publishing node's chain.commit span.  Pure
+    # observability metadata: excluded from equality and — critically —
+    # from :attr:`fingerprint`, so traced and untraced replays mint
+    # bit-identical hash chains.
+    ctx: Optional[object] = field(default=None, compare=False, repr=False)
 
     @property
     def n_entries(self) -> int:
@@ -254,6 +259,14 @@ class Chain:
                       commits, miner=self.leader(parent.height + 1) or "")
         self.blocks.append(block)
         obs.count("chain.blocks")
+        if obs.enabled():
+            # the mint event links every included commit's publish trace:
+            # commit -> mint -> registry fold stitches into one tree
+            obs.point("chain.mint", sim_t0=mined_at, sim_t1=mined_at,
+                      host=block.miner,
+                      link=[c.ctx for c in commits if c.ctx is not None],
+                      height=block.height, block=block.hash,
+                      commits=len(commits))
         return block
 
     # ------------------------------------------------------------ reading

@@ -16,6 +16,7 @@ learner — from chain history alone.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -135,9 +136,15 @@ class ChainRegistry:
 
     def _submit(self, tenant: str, commit: ChainCommit, clock: float
                 ) -> None:
-        with obs.span("chain.commit", sim_t=clock, tenant=tenant,
-                      cid=commit.cid, n_entries=commit.n_entries,
+        with obs.span("chain.commit", sim_t=clock, host=self.node_id,
+                      tenant=tenant, cid=commit.cid,
+                      n_entries=commit.n_entries,
                       node=self.node_id) as sp:
+            if obs.enabled():
+                # the commit carries this span's context onto the chain, so
+                # the mint event and every node's fold link back to it —
+                # ctx is outside the fingerprint, hashes are unchanged
+                commit = dataclasses.replace(commit, ctx=sp.ctx)
             wait = self.chain.submit(commit, float(clock))
             sp.set(confirm_wait_s=wait, seq=commit.seq)
             sp.end_sim(clock + wait)
@@ -158,8 +165,10 @@ class ChainRegistry:
             return 0
         ingested = 0
         t0 = blocks[0].mined_at
-        with obs.span("chain.aggregate", sim_t=t0, node=self.node_id,
-                      blocks=len(blocks),
+        links = [c.ctx for b in blocks for c in b.commits
+                 if c.ctx is not None] if obs.enabled() else None
+        with obs.span("chain.aggregate", sim_t=t0, host=self.node_id,
+                      link=links, node=self.node_id, blocks=len(blocks),
                       leader=self.chain.leader() or "") as sp:
             for b in blocks:
                 ingested += self._fold_block(b)

@@ -185,6 +185,7 @@ class FederatedBoostEngine:
         self._tenant: Optional[str] = None
         self._publish_every = 1
         self._syncs_since_publish = 0
+        self.audit = None               # obs.ContributionAudit when attached
 
         n = len(data["clients"])
         if behavior_for is None:
@@ -235,6 +236,29 @@ class FederatedBoostEngine:
         self._tenant = tenant
         self._publish_every = publish_every
         self._syncs_since_publish = 0
+
+    def attach_audit(self, audit=None):
+        """Attach a :class:`repro.obs.ContributionAudit`: every merge in
+        either mode/engine records the contributing client's update
+        magnitude, validation-error delta, staleness, and outcome.  Pure
+        measurement — merge results are bit-identical with or without it.
+        The vectorized fleet profile merges whole windows in one launch
+        (no per-client error deltas), so audits are refused there."""
+        if self._fleet:
+            raise ValueError(
+                "contribution audits need per-entry merges; the fleet "
+                "profile merges vectorized windows — run with "
+                "fleet_profile=False to audit")
+        if audit is None:
+            from repro.obs.audit import ContributionAudit
+            audit = ContributionAudit()
+        self.audit = audit
+        return audit
+
+    @property
+    def fleet_profile(self) -> bool:
+        """Whether this engine runs the vectorized fleet path."""
+        return self._fleet
 
     def publish(self, clock: float):
         """The publish() hook: snapshot the current global ensemble into
@@ -314,10 +338,13 @@ class FederatedBoostEngine:
 
     def _merge(self, entries: List[BufferEntry], sync_round: int,
                compensated: bool, owner: int = -1) -> None:
+        audit = self.audit
+        err_before = (self._val_error()
+                      if (audit is not None and entries) else None)
         for e in entries:
             a = self._server_alpha(e.params)
+            tau = max(0, sync_round - e.round_stamp)
             if compensated:
-                tau = max(0, sync_round - e.round_stamp)
                 raw = a
                 a = float(compensate(a, tau, self.cfg.compensation))
                 if obs.enabled():
@@ -328,6 +355,14 @@ class FederatedBoostEngine:
             self._round_stamps.append(e.round_stamp)
             self._fold_into_margins(e.params, a)
             self.metrics.learners_merged += 1
+            if audit is not None:
+                # _val_error is a pure read of the folded margins, so the
+                # audited run merges bit-identically to the unaudited one
+                err_after = self._val_error()
+                audit.record(owner, magnitude=abs(a),
+                             error_delta=err_before - err_after,
+                             staleness=tau, outcome="merged")
+                err_before = err_after
 
     def _fold_into_margins(self, params, alpha: float) -> None:
         xv, _ = self.data["val"]

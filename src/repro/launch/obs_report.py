@@ -20,10 +20,19 @@ Reads the JSON Lines trace written by ``Tracer.export_jsonl`` (schema in
   self time per unique stack — feed to any FlameGraph renderer).
 
 ``--check`` validates the trace instead of decorating it: every line must
-parse, every parent must exist and wall-contain its children, and every
+parse, every parent must exist and wall-contain its children (missing
+parents/links are tolerated only when the export header records ring
+drops, with a warning), trace ids must be consistent (a span whose stack
+parent sits in another trace must link into its own), and every
 ``serve.request`` must decompose (queue_s + batch_s + kernel_s ==
 latency_s == sim_t1 - sim_t0) within tolerance.  Exits non-zero on any
 violation — the CI obs job runs it on a freshly traced scenario.
+
+``--stitch KEY`` assembles the cross-host causal tree for one trace —
+KEY is a trace id, ``rid:N``, or ``auto`` (the slowest serve.request) —
+and prints its members plus every span linking into it, with hosts and
+sim-clock bounds, then reconciles the stitched end-to-end latency
+against the queue+batch+kernel decomposition.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ from collections import defaultdict
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
-from repro.obs import load_jsonl, percentile
+from repro.obs import load_trace, percentile
 
 TOL = 1e-6      # seconds of slack for float accumulation in checks
 
@@ -107,9 +116,18 @@ def folded_stacks(spans: List[Dict]) -> Dict[str, int]:
 
 
 # --------------------------------------------------------------- validation
-def check_trace(spans: List[Dict]) -> List[str]:
-    """Structural violations in a trace (empty list = valid)."""
+def check_trace(spans: List[Dict],
+                meta: Optional[Dict] = None) -> List[str]:
+    """Structural violations in a trace (empty list = valid).
+
+    ``meta`` is the export header (``load_trace``).  A bounded ring may
+    legitimately have dropped the parent of a retained child — missing
+    parents are only violations when the header proves nothing was dropped
+    (or for legacy headerless traces, which predate drop accounting and
+    were always checked strictly)."""
     errors: List[str] = []
+    dropped = int(meta.get("dropped", 0)) if meta else 0
+    tolerate_missing = meta is not None and dropped > 0
     by_id: Dict[int, Dict] = {}
     for s in spans:
         if s["span"] in by_id:
@@ -124,15 +142,40 @@ def check_trace(spans: List[Dict]) -> List[str]:
                           f"it starts")
         p = by_id.get(s["parent"]) if s["parent"] is not None else None
         if s["parent"] is not None and p is None:
-            # a bounded ring may have dropped the parent of a retained
-            # child; only flag when nothing was dropped upstream
-            errors.append(f"span {s['span']} ({s['name']}) references "
-                          f"missing parent {s['parent']}")
+            if not tolerate_missing:
+                errors.append(f"span {s['span']} ({s['name']}) references "
+                              f"missing parent {s['parent']}")
         elif p is not None and p["t1"] is not None:
             if s["t0"] < p["t0"] - TOL or s["t1"] > p["t1"] + TOL:
                 errors.append(
                     f"span {s['span']} ({s['name']}) escapes parent "
                     f"{p['span']} ({p['name']}) wall window")
+        # trace-id consistency (schema 2 spans only): the stack parent may
+        # belong to a different trace (a serve.batch wall-contains requests
+        # of many traces) — but then the span must carry an explicit link
+        # into its *own* trace, or its causal history is unreachable
+        tid = s.get("trace")
+        if tid:
+            links = s.get("links", [])
+            if (p is not None and p.get("trace")
+                    and p["trace"] != tid
+                    and not any(lt == tid for lt, _ in links)):
+                errors.append(
+                    f"span {s['span']} ({s['name']}) in trace {tid} has "
+                    f"stack parent in trace {p['trace']} but no link "
+                    f"into its own trace")
+            for lt, lsid in links:
+                target = by_id.get(lsid)
+                if target is None:
+                    if not tolerate_missing:
+                        errors.append(
+                            f"span {s['span']} ({s['name']}) links to "
+                            f"missing span {lsid}")
+                elif target.get("trace") and target["trace"] != lt:
+                    errors.append(
+                        f"span {s['span']} ({s['name']}) link claims span "
+                        f"{lsid} is in trace {lt} but it is in "
+                        f"{target['trace']}")
         if s["name"] == "serve.request":
             a = s["attrs"]
             parts = a.get("queue_s", 0) + a.get("batch_s", 0) + \
@@ -147,6 +190,90 @@ def check_trace(spans: List[Dict]) -> List[str]:
                 errors.append(
                     f"serve.request {s['span']}: sim interval != latency")
     return errors
+
+
+# ----------------------------------------------------------------- stitching
+def resolve_trace_key(spans: List[Dict], key: str) -> Optional[str]:
+    """Resolve a ``--stitch`` key to a trace id.  Accepts a literal trace
+    id, ``rid:N`` (the trace of request N), or ``auto`` (the trace of the
+    slowest ``serve.request`` — the most interesting one to stitch)."""
+    if key == "auto":
+        reqs = [s for s in spans
+                if s["name"] == "serve.request" and s.get("trace")]
+        if not reqs:
+            return next((s["trace"] for s in spans if s.get("trace")), None)
+        return max(reqs, key=lambda s: s["attrs"].get("latency_s", 0.0)
+                   )["trace"]
+    if key.startswith("rid:"):
+        rid = int(key[4:])
+        for s in spans:
+            if s.get("trace") and s["attrs"].get("rid") == rid:
+                return s["trace"]
+        return None
+    return key
+
+
+def stitch_trace(spans: List[Dict], trace_id: str) -> Dict:
+    """Assemble the stitched causal tree for one trace: every span *in*
+    the trace plus every span that links *into* it (a chain.mint /
+    chain.aggregate on another node, a serve.batch host's completion).
+
+    Returns ``{trace, members, hosts, sim_t0, sim_t1, e2e_s, parts_s}``:
+    ``e2e_s`` is the trace's simulated-clock extent, ``parts_s`` the sum
+    of the serve.request decomposition (queue + batch + kernel) — for a
+    request trace the two agree within TOL (the acceptance check)."""
+    members: List[Dict] = []
+    for s in spans:
+        if s.get("trace") == trace_id:
+            members.append(dict(s, _edge="member"))
+        elif any(lt == trace_id for lt, _ in s.get("links", [])):
+            members.append(dict(s, _edge="linked"))
+    members.sort(key=lambda s: (s["sim_t0"] if s["sim_t0"] is not None
+                                else s["t0"], s["span"]))
+    sims0 = [s["sim_t0"] for s in members
+             if s["_edge"] == "member" and s["sim_t0"] is not None]
+    sims1 = [s["sim_t1"] for s in members
+             if s["_edge"] == "member" and s["sim_t1"] is not None]
+    parts = sum(s["attrs"].get("queue_s", 0.0)
+                + s["attrs"].get("batch_s", 0.0)
+                + s["attrs"].get("kernel_s", 0.0)
+                for s in members if s["name"] == "serve.request")
+    t0 = min(sims0) if sims0 else None
+    t1 = max(sims1) if sims1 else None
+    return {
+        "trace": trace_id,
+        "members": members,
+        "hosts": sorted({s.get("host", "") for s in members
+                         if s.get("host")}),
+        "sim_t0": t0, "sim_t1": t1,
+        "e2e_s": (t1 - t0) if (t0 is not None and t1 is not None) else None,
+        "parts_s": parts if parts > 0 else None,
+    }
+
+
+def print_stitch(st: Dict) -> None:
+    print(f"\n-- stitched trace {st['trace']} "
+          f"({len(st['members'])} spans, hosts: "
+          f"{', '.join(st['hosts']) or '-'}) --")
+    print(f"{'sim_t0':>10}{'sim_t1':>10}  {'host':<10}{'edge':<8}"
+          f"{'name':<18}detail")
+    for s in st["members"]:
+        sim0 = f"{s['sim_t0']:.6f}" if s["sim_t0"] is not None else "-"
+        sim1 = f"{s['sim_t1']:.6f}" if s["sim_t1"] is not None else "-"
+        a = s["attrs"]
+        detail = " ".join(f"{k}={a[k]}" for k in
+                          ("rid", "tenant", "cid", "seq", "height",
+                           "queue_s", "batch_s", "kernel_s", "latency_s")
+                          if k in a)
+        print(f"{sim0:>10}{sim1:>10}  {s.get('host', '') or '-':<10}"
+              f"{s['_edge']:<8}{s['name']:<18}{detail}")
+    if st["e2e_s"] is not None:
+        line = f"stitched e2e: {st['e2e_s'] * 1e3:.3f} ms (sim extent)"
+        if st["parts_s"] is not None:
+            delta = abs(st["e2e_s"] - st["parts_s"])
+            line += (f" · queue+batch+kernel = {st['parts_s'] * 1e3:.3f} ms"
+                     f" · |delta| = {delta * 1e3:.6f} ms")
+        print(line)
 
 
 # ------------------------------------------------------------ kernel profile
@@ -207,9 +334,12 @@ def _fmt_s(s: float) -> str:
 
 def print_report(spans: List[Dict], top: int,
                  metrics_snapshot: Optional[Dict],
-                 calibration_path: Optional[str]) -> None:
+                 calibration_path: Optional[str],
+                 dropped: int = 0) -> None:
     total_self = sum(self_times(spans).values())
-    print(f"{len(spans)} spans · {total_self * 1e3:.1f} ms traced self time")
+    drop_note = f" · {dropped} dropped by ring" if dropped else ""
+    print(f"{len(spans)} spans · {total_self * 1e3:.1f} ms traced self "
+          f"time{drop_note}")
     print(f"\n-- top {top} span names (by total wall time) --")
     print(f"{'name':<24}{'count':>7}{'total':>13}{'self':>13}"
           f"{'p50':>13}{'p99':>13}")
@@ -250,34 +380,52 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--folded", default=None, metavar="OUT",
                     help="write flamegraph folded stacks here")
     ap.add_argument("--check", action="store_true",
-                    help="validate structure (parse, nesting, request "
-                         "decomposition); non-zero exit on violation")
+                    help="validate structure (parse, nesting, trace ids, "
+                         "links, request decomposition); non-zero exit "
+                         "on violation")
+    ap.add_argument("--stitch", default=None, metavar="KEY",
+                    help="print the stitched cross-host tree for one "
+                         "trace: a trace id, 'rid:N', or 'auto' (slowest "
+                         "serve.request)")
     args = ap.parse_args(argv)
 
     try:
-        spans = load_jsonl(args.trace)
+        meta, spans = load_trace(args.trace)
     except (OSError, json.JSONDecodeError) as e:
         print(f"unreadable trace {args.trace!r}: {e}", file=sys.stderr)
         return 2
     if not spans:
         print(f"empty trace {args.trace!r}", file=sys.stderr)
         return 2
+    dropped = int(meta.get("dropped", 0)) if meta else 0
 
     snapshot = None
     if args.metrics:
         snapshot = json.loads(Path(args.metrics).read_text())
 
     if args.check:
-        errors = check_trace(spans)
+        errors = check_trace(spans, meta)
         if errors:
             for e in errors[:50]:
                 print(f"CHECK FAILED: {e}", file=sys.stderr)
             print(f"{len(errors)} violation(s) in {len(spans)} spans",
                   file=sys.stderr)
             return 1
+        if dropped:
+            print(f"WARNING: ring dropped {dropped} span(s) — trace is "
+                  f"incomplete; missing-parent/link checks relaxed")
         print(f"trace OK: {len(spans)} spans parse, nest, and decompose")
 
-    print_report(spans, args.top, snapshot, args.calibration)
+    print_report(spans, args.top, snapshot, args.calibration,
+                 dropped=dropped)
+
+    if args.stitch:
+        tid = resolve_trace_key(spans, args.stitch)
+        if tid is None:
+            print(f"no trace matches stitch key {args.stitch!r}",
+                  file=sys.stderr)
+            return 2
+        print_stitch(stitch_trace(spans, tid))
 
     if args.folded:
         stacks = folded_stacks(spans)

@@ -27,14 +27,15 @@ from typing import Iterator, Optional
 
 from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
                                 percentile, weighted_percentile)
-from repro.obs.trace import NULL_SPAN, Span, Tracer, load_jsonl
+from repro.obs.trace import (NULL_SPAN, Span, TraceContext, Tracer,
+                             load_jsonl, load_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_SPAN",
-    "Span", "Tracer", "configure", "count", "disable", "enabled",
-    "get_registry", "get_tracer", "load_jsonl", "observe", "percentile",
-    "point", "profiling_enabled", "set_registry", "span", "tracing",
-    "weighted_percentile",
+    "Span", "TraceContext", "Tracer", "configure", "count", "disable",
+    "enabled", "get_registry", "get_tracer", "load_jsonl", "load_trace",
+    "observe", "percentile", "point", "profiling_enabled", "set_registry",
+    "span", "tracing", "weighted_percentile",
 ]
 
 _TRACER: Optional[Tracer] = None
@@ -102,20 +103,28 @@ def tracing(ring: int = 65536, profile_kernels: Optional[bool] = None,
         _TRACER, _PROFILE, _REGISTRY = prev
 
 
-def span(name: str, sim_t: Optional[float] = None, **attrs):
+def span(name: str, sim_t: Optional[float] = None,
+         ctx: Optional[TraceContext] = None, host: Optional[str] = None,
+         link=None, **attrs):
     """Open a nested span on the active tracer — or return the shared
-    no-op span when tracing is off (the hot-path fast path)."""
+    no-op span when tracing is off (the hot-path fast path).  ``ctx``
+    continues a propagated :class:`TraceContext`, ``host`` stamps the
+    emitting host/node, ``link`` records extra cross-trace causal edges."""
     if _TRACER is None:
         return NULL_SPAN
-    return _TRACER.span(name, sim_t=sim_t, **attrs)
+    return _TRACER.span(name, sim_t=sim_t, ctx=ctx, host=host, link=link,
+                        **attrs)
 
 
 def point(name: str, sim_t0: Optional[float] = None,
-          sim_t1: Optional[float] = None, **attrs):
+          sim_t1: Optional[float] = None,
+          ctx: Optional[TraceContext] = None, host: Optional[str] = None,
+          link=None, **attrs):
     """Record an instant (already-finished) span; no-op when disabled."""
     if _TRACER is None:
         return NULL_SPAN
-    return _TRACER.point(name, sim_t0=sim_t0, sim_t1=sim_t1, **attrs)
+    return _TRACER.point(name, sim_t0=sim_t0, sim_t1=sim_t1, ctx=ctx,
+                        host=host, link=link, **attrs)
 
 
 # ---------------------------------------------------------------- registry
@@ -138,3 +147,15 @@ def count(name: str, n: float = 1.0, **labels) -> None:
 def observe(name: str, v: float, **labels) -> None:
     """Observe one histogram sample on the global registry."""
     _REGISTRY.histogram(name, **labels).observe(v)
+
+
+# SLO + audit layers consume the helpers above, so they import last (they
+# only touch the module object at call time, never during import).
+from repro.obs.audit import AuditFlag, ContributionAudit        # noqa: E402
+from repro.obs.slo import (AlertEvent, AlertLog, BurnRateRule,  # noqa: E402
+                           ErrorBudget, SLObjective, SLOMonitor)
+
+__all__ += [
+    "AlertEvent", "AlertLog", "AuditFlag", "BurnRateRule",
+    "ContributionAudit", "ErrorBudget", "SLObjective", "SLOMonitor",
+]

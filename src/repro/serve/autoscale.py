@@ -119,7 +119,8 @@ class FleetAutoscaler:
                  cfg: Optional[AutoscaleConfig] = None,
                  host_prefix: str = "scale", *,
                  budget_per_host: Optional[float] = None,
-                 budget_per_hour: Optional[float] = None):
+                 budget_per_hour: Optional[float] = None,
+                 slo=None):
         # budget_per_host / budget_per_hour override the cfg cost knobs:
         # a host is projected to cost budget_per_host $/h and scale-out is
         # refused once (n+1) hosts would exceed budget_per_hour $/h
@@ -140,6 +141,8 @@ class FleetAutoscaler:
         self._lat: List[float] = []   # completions since last observation
         self._next_obs: Optional[float] = None
         self._integral = 0.0          # summed excess pressure (see module doc)
+        # optional obs.slo.SLOMonitor: its burn rate joins the pressure max
+        self.slo = slo
         for s in server.servers.values():
             s.on_completion = self._lat.append
 
@@ -151,17 +154,22 @@ class FleetAutoscaler:
     def _up_hosts(self) -> List[str]:
         return [hid for hid in self.server.servers if self._up(hid)]
 
-    def pressure(self) -> float:
+    def pressure(self, now: Optional[float] = None) -> float:
         """Normalized fleet pressure: queue depth and latency, whichever is
         worse.  Queue depth is the total backlog averaged over *up* hosts
         (capacity-relative — a host that is marked down contributes its
         stuck queue to the numerator but no capacity to the denominator);
         p99 is over completions since the last observation so stale calm
-        never masks a fresh spike."""
+        never masks a fresh spike.  With an attached SLO monitor (and a
+        clock), the fleet's burn rate joins the max: crossing 1.0 exactly
+        when some tenant burns its error budget at alerting speed, so the
+        fleet grows *before* the p99 target itself is breached."""
         depth = sum(s.queue.depth for s in self.server.servers.values())
         p = depth / max(1, len(self._up_hosts())) / self.cfg.target_queue
         if self._lat:
             p = max(p, percentile(self._lat, 99.0) / self.cfg.target_p99_s)
+        if self.slo is not None and now is not None:
+            p = max(p, self.slo.burn_pressure(now))
         return p
 
     # --------------------------------------------------------------- cost
@@ -193,7 +201,7 @@ class FleetAutoscaler:
         if now < self._next_obs:
             return []
         self._next_obs = now + self.cfg.adapt_every_s
-        p = self.pressure()
+        p = self.pressure(now)
         self._lat.clear()
         self.stats.observations += 1
         self.stats.pressure_peak = max(self.stats.pressure_peak, p)

@@ -58,11 +58,16 @@ class BatchConfig:
 
 @dataclass
 class Request:
-    """One prediction request: a single feature vector for its tenant."""
+    """One prediction request: a single feature vector for its tenant.
+    ``ctx`` is the submitter's trace context (None when tracing is off);
+    it rides the queue — surviving :meth:`MicroBatchQueue.requeue` across
+    a scale-in reroute — so the completion span on whichever host finally
+    serves the request links back into the submit trace."""
     rid: int
     tenant: str
     x: jnp.ndarray               # (F,) feature vector
     t_submit: float
+    ctx: Optional[object] = None   # obs.TraceContext of the submit span
 
 
 class AdaptiveWindow:
@@ -148,7 +153,8 @@ class MicroBatchQueue:
     def _cfg_for(self, tenant: str) -> BatchConfig:
         return self._tenant_cfg(tenant) if self._tenant_cfg else self.cfg
 
-    def submit(self, tenant: str, x, now: float) -> Optional[Request]:
+    def submit(self, tenant: str, x, now: float,
+               ctx=None) -> Optional[Request]:
         """Enqueue; returns None (backpressure) when the tenant is at its
         resolved budget, or the total queue is at the larger of the host
         budget and the tenant's own (so a hot tenant's raised budget is
@@ -169,7 +175,7 @@ class MicroBatchQueue:
             rid = self._next_rid
             self._next_rid += 1
         req = Request(rid=rid, tenant=tenant,
-                      x=jnp.asarray(x), t_submit=float(now))
+                      x=jnp.asarray(x), t_submit=float(now), ctx=ctx)
         self._q.append(req)
         self._depth[tenant] += 1
         return req

@@ -21,7 +21,7 @@ biased.
 from __future__ import annotations
 
 from collections import Counter
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.obs.registry import (MetricsRegistry, percentile,
                                 weighted_percentile)
@@ -192,6 +192,21 @@ class ServeMetrics:
             out.extend(t.latencies)
         return out
 
+    def latency_pairs(self) -> List[Tuple[float, float]]:
+        """``(latency, weight)`` pairs across tenants, each retained sample
+        weighted by the ``completed / len(reservoir)`` observations it
+        stands for.  This is the *exact-weight* fleet sample: concatenate
+        these across per-host metrics **before** any histogram merge and a
+        fold of already-folded registries can never re-thin a reservoir and
+        double-weight its survivors (``Histogram.extend`` keeps only every
+        8th incoming sample once full, so a merge-of-merges would otherwise
+        inflate the weight of whichever host folded first)."""
+        pairs: List[Tuple[float, float]] = []
+        for t in self.tenants.values():
+            w = t.latency_hist.weight_per_sample
+            pairs.extend((v, w) for v in t.latencies)
+        return pairs
+
     def fleet_percentile(self, q: float) -> float:
         """Fleet-wide latency percentile with per-tenant sample weighting:
         each retained sample counts as ``completed / len(reservoir)`` stream
@@ -199,11 +214,7 @@ class ServeMetrics:
         rates contribute in proportion to their true traffic.  With no
         thinning anywhere, this equals ``percentile(all_latencies(), q)``
         exactly."""
-        pairs = []
-        for t in self.tenants.values():
-            w = t.latency_hist.weight_per_sample
-            pairs.extend((v, w) for v in t.latencies)
-        return weighted_percentile(pairs, q)
+        return weighted_percentile(self.latency_pairs(), q)
 
     def report(self) -> Dict:
         return {

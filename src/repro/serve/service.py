@@ -41,7 +41,7 @@ from repro.kernels.dispatch import KernelPolicy
 from repro.serve.batching import AdaptiveWindow, BatchConfig, MicroBatchQueue
 from repro.serve.cache import ResultCache
 from repro.serve.engine import BatchEvaluator, Response
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, weighted_percentile
 from repro.serve.policy import PolicyTable
 from repro.serve.registry import EnsembleRegistry
 
@@ -113,22 +113,38 @@ class EnsembleServer:
         self.metrics = metrics or ServeMetrics()
         self.service_model = service_model
         self.on_completion: Optional[Callable[[float], None]] = None
+        # SLO feed: called (tenant, finish_t, latency_s) per completion
+        self.on_slo: Optional[Callable[[str, float, float], None]] = None
         self._busy_until = -math.inf     # single server: one batch in flight
 
     # ------------------------------------------------------------- intake
-    def submit(self, tenant: str, x, now: float
+    def submit(self, tenant: str, x, now: float, ctx=None
                ) -> Tuple[bool, List[Response]]:
         """Enqueue one request.  Returns ``(accepted, responses)``:
         ``accepted`` is False when admission control rejected the request
         (backpressure — the caller must retry or shed it), and
         ``responses`` holds any batches that came due at or before ``now``
-        (possibly including this request, if it filled a batch)."""
+        (possibly including this request, if it filled a batch).
+
+        ``ctx`` is a propagated trace context from a fleet front door;
+        when tracing is on and none is given, this server is the front
+        door and roots the request's trace itself with a ``serve.submit``
+        point."""
+        sub = None
+        if ctx is None and obs.enabled():
+            sub = obs.point("serve.submit", sim_t0=now, sim_t1=now,
+                            tenant=tenant, host=self.host_id or "")
+            ctx = sub.ctx
         out = self.advance(now)          # free queue slots already due
-        req = self.queue.submit(tenant, x, now)
+        req = self.queue.submit(tenant, x, now, ctx=ctx)
         if req is None:
             self.metrics.record_rejected(tenant)
+            if sub is not None:
+                sub.set(accepted=False)
         else:
             self.metrics.record_submit(now, self.queue.depth)
+            if sub is not None:
+                sub.set(rid=req.rid, accepted=True)
             out += self.advance(now)     # dispatch a batch this one filled
         return req is not None, out
 
@@ -199,11 +215,14 @@ class EnsembleServer:
         finish = at + service_s
         self._busy_until = finish
         self.metrics.record_batch(len(batch), self.window.units, finish)
+        ctxs = {rq.rid: rq.ctx for rq in batch} if traced else {}
         for r in responses:
             latency = finish - r.t_submit
             self.window.record(latency)
             if self.on_completion is not None:   # autoscaler pressure feed
                 self.on_completion(latency)
+            if self.on_slo is not None:          # SLO error-budget feed
+                self.on_slo(r.tenant, finish, latency)
             self.metrics.record_completion(
                 r.tenant, latency,
                 staleness_s=self.registry.staleness(r.tenant, finish),
@@ -212,9 +231,14 @@ class EnsembleServer:
                 # exact decomposition: batch_s (waiting for the window to
                 # close) + queue_s (waiting for the server to free up) +
                 # kernel_s (the batch's service time) == latency, whether
-                # the request arrived before or after the window closed
+                # the request arrived before or after the window closed.
+                # ctx= continues the request's own trace (rooted at its
+                # serve.submit point, possibly on another host before a
+                # reroute) while the stack parent stays the serve.batch
+                # span that wall-contains the completion.
                 obs.point(
                     "serve.request", sim_t0=r.t_submit, sim_t1=finish,
+                    ctx=ctxs.get(r.rid), host=self.host_id or "",
                     rid=r.rid, tenant=r.tenant,
                     batch_s=max(0.0, window_due - r.t_submit),
                     queue_s=at - max(r.t_submit, window_due),
@@ -277,6 +301,7 @@ class ShardedEnsembleServer:
         # stats) — not whole servers, so churn doesn't accrete evaluators
         # and cache contents for the fleet's lifetime
         self._retired: List[Tuple[str, ServeMetrics, Optional[object]]] = []
+        self._slo = None                 # optional obs.slo.SLOMonitor
         self.servers: dict = {hid: self._make_server(hid)
                               for hid in cluster.hosts}
 
@@ -285,11 +310,22 @@ class ShardedEnsembleServer:
         # default, so the host server resolves per-host config from it;
         # without a table, the fleet cfg applies verbatim
         cfg = None if self.policy_table is not None else self.cfg
-        return EnsembleServer(self.cluster.hosts[host_id].registry, cfg,
-                              service_model=self.service_model,
-                              policy=self.policy, rid_counter=self._rids,
-                              policy_table=self.policy_table,
-                              host_id=host_id)
+        server = EnsembleServer(self.cluster.hosts[host_id].registry, cfg,
+                                service_model=self.service_model,
+                                policy=self.policy, rid_counter=self._rids,
+                                policy_table=self.policy_table,
+                                host_id=host_id)
+        if self._slo is not None:
+            server.on_slo = self._slo.record_completion
+        return server
+
+    def attach_slo(self, monitor) -> None:
+        """Feed every fleet outcome into an :class:`repro.obs.slo.
+        SLOMonitor`: completions on whichever host serves them (hosts
+        added later included), rejections/sheds at submit time."""
+        self._slo = monitor
+        for s in self.servers.values():
+            s.on_slo = monitor.record_completion
 
     def server_for(self, tenant: str) -> Optional[EnsembleServer]:
         host = self.cluster.route(tenant)
@@ -307,8 +343,16 @@ class ShardedEnsembleServer:
         server = self.server_for(tenant)
         if server is None:                     # total outage: shed the load
             self.metrics.record_rejected(tenant)
+            if obs.enabled():
+                obs.point("serve.submit", sim_t0=now, sim_t1=now,
+                          tenant=tenant, host="", accepted=False)
+            if self._slo is not None:
+                self._slo.record(tenant, now, rejected=True)
             return False, []
-        return server.submit(tenant, x, now)
+        accepted, out = server.submit(tenant, x, now)
+        if not accepted and self._slo is not None:
+            self._slo.record(tenant, now, rejected=True)
+        return accepted, out
 
     # ---------------------------------------------------------- membership
     def add_host(self, host_id: str, now: float = 0.0) -> EnsembleServer:
@@ -423,6 +467,17 @@ class ShardedEnsembleServer:
             self._merge_into(merged, m)
         self._merge_into(merged, self.metrics)   # outage shed, no host
         rep = merged.report()
+        # fleet percentiles from the *pre-merge* per-host pairs: merging
+        # re-thins full reservoirs (keeping every 8th incoming sample), so
+        # quantiles over the merged reservoir would double-weight whatever
+        # survived the second thinning; the exact-weight union never
+        # re-thins (pinned by tests/test_obs.py merge-of-merges coverage)
+        pairs = self.metrics.latency_pairs()
+        for _, _, m in self._all_metrics():
+            pairs.extend(m.latency_pairs())
+        if pairs:
+            rep["p50_ms"] = 1e3 * weighted_percentile(pairs, 50.0)
+            rep["p99_ms"] = 1e3 * weighted_percentile(pairs, 99.0)
         rep["per_host"] = per_host
         rep["cache"] = self.cache_stats()
         return rep

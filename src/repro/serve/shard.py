@@ -246,13 +246,22 @@ class ShardCluster:
         up = self.host_ids()
         self.stats.rounds += 1
         pulled0, rec0 = self.stats.pulled, self.stats.reconciled
+        traced = obs.enabled()
         with obs.span("gossip.round", sim_t=now, hosts=len(up)) as sp:
             for hid in up:
                 peers = [p for p in up if p != hid]
                 self._rng.shuffle(peers)
                 for pid in peers[:self.cfg.fanout]:
+                    p0, r0 = self.stats.pulled, self.stats.reconciled
                     self._anti_entropy(self.hosts[hid], self.hosts[pid], now)
                     self.stats.exchanges += 1
+                    if traced:
+                        # per-exchange cross-host edge inside the round's
+                        # trace: host= is the puller, peer the source
+                        obs.point("gossip.exchange", sim_t0=now, sim_t1=now,
+                                  host=hid, peer=pid,
+                                  pulled=self.stats.pulled - p0,
+                                  reconciled=self.stats.reconciled - r0)
             sp.set(pulled=self.stats.pulled - pulled0,
                    reconciled=self.stats.reconciled - rec0)
             sp.end_sim(now)

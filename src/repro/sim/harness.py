@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import obs
+from repro.obs.slo import SLObjective, SLOMonitor
 from repro.core import FederatedBoostEngine
 from repro.core.async_engine import RunMetrics
 from repro.core.metrics import common_target, pct_reduction, time_to_error
@@ -86,10 +87,18 @@ def train_pair(sc: Scenario, trace: str, seed: int = 0,
                                    engine=engine, fleet=sc.fleet)
         if mode == "enhanced" and cluster is not None:
             eng.attach_registry(cluster, sc.name, publish_every=publish_every)
+        # traced runs carry contribution audits (pure measurement, merges
+        # unchanged); the fleet profile has no per-entry merge to audit
+        audit = (eng.attach_audit()
+                 if obs.enabled() and not eng.fleet_profile else None)
         with obs.span("scenario.train", sim_t=0.0, scenario=sc.name,
                       trace=trace, seed=seed, mode=mode) as sp:
             runs[mode] = eng.run()
             sp.end_sim(runs[mode].sim_time_s)
+        if audit is not None:
+            for fl in audit.flags():
+                obs.point("audit.flag", scenario=sc.name, mode=mode,
+                          cid=fl.cid, metric=fl.metric, z=fl.z)
     return data, runs
 
 
@@ -132,6 +141,14 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
     cluster.rebase_clock(0.0)
     server = ShardedEnsembleServer(cluster, SERVE_BATCH,
                                    service_model=_service_model)
+    # SLO ledger over the replay: measurement only (the autoscaler keeps
+    # its queue/p99 signal — burn-rate pressure is opted into by the
+    # sustained_slo benchmark), so scenario bands are unchanged
+    monitor = SLOMonitor([SLObjective(tenant=sc.name,
+                                      latency_threshold_s=0.05,
+                                      target=0.95,
+                                      window_s=max(0.25, duration_s / 3.0))])
+    server.attach_slo(monitor)
     scaler = (FleetAutoscaler(server, _autoscale_config(len(cluster.hosts)))
               if autoscale else None)
 
@@ -193,6 +210,7 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
         rids.extend(r.rid for r in out)
         if scaler is not None:
             rids.extend(r.rid for r in scaler.step(t))
+        monitor.check(t)
     rids.extend(r.rid for r in server.drain())
     if len(rids) != accepted or len(set(rids)) != len(rids):
         raise AssertionError(
@@ -201,6 +219,10 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
 
     rep = server.report()
     tenant = rep["tenants"].get(sc.name, {})
+    # settle the alert state past the drain tail before summarizing
+    t_end = duration_s + monitor.objectives[sc.name].window_s
+    monitor.check(t_end)
+    slo_rep = monitor.report(t_end)["tenants"].get(sc.name, {})
     sp.set(completed=rep["completed"], hosts_final=len(server.servers))
     sp.end(sim_t=duration_s)
     return {
@@ -216,6 +238,14 @@ def replay_serve(sc: Scenario, cluster: ShardCluster, data: Dict,
         "scale_ins": scaler.stats.scale_ins if scaler else 0,
         "rerouted": scaler.stats.rerouted if scaler else 0,
         "killed_host": killed,
+        "slo": {
+            "good": slo_rep.get("good", 0),
+            "bad": slo_rep.get("bad", 0),
+            "budget_remaining": slo_rep.get("budget_remaining", 1.0),
+            "alerts_fired": sum(1 for e in monitor.alerts.events
+                                if e.kind == "fire"),
+            "alerts_active": len(monitor.alerts.active()),
+        },
     }
 
 

@@ -1,0 +1,141 @@
+"""Per-client contribution audits (repro.obs.audit) + engine integration."""
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.configs.paper_fedboost import DomainConfig, FedBoostConfig
+from repro.core import FederatedBoostEngine
+from repro.data import make_domain_data
+from repro.obs.audit import AuditFlag, ContributionAudit, robust_z
+from repro.obs.registry import MetricsRegistry
+
+
+# ----------------------------------------------------------------- robust z
+def test_robust_z_flags_the_lone_outlier():
+    values = {i: 1.0 + 0.01 * (i % 3) for i in range(9)}
+    values[9] = 50.0
+    zs = robust_z(values)
+    assert abs(zs[9]) > 3.5
+    assert all(abs(z) <= 3.5 for cid, z in zs.items() if cid != 9)
+
+
+def test_robust_z_degenerate_cases():
+    # fewer than 3 clients: no basis for an outlier call
+    assert robust_z({0: 1.0, 1: 99.0}) == {0: 0.0, 1: 0.0}
+    # all identical: MAD and mean-dev both zero -> all scores 0
+    assert set(robust_z({i: 2.0 for i in range(5)}).values()) == {0.0}
+    # MAD == 0 but spread exists: mean-abs-dev fallback still scores
+    vals = {i: 1.0 for i in range(6)}
+    vals[6] = 100.0
+    assert abs(robust_z(vals)[6]) > 3.5
+
+
+# -------------------------------------------------------------------- audit
+def test_audit_records_stats_and_instruments():
+    reg = MetricsRegistry()
+    audit = ContributionAudit(registry=reg, window=4)
+    for i in range(6):
+        audit.record(0, magnitude=0.5, error_delta=0.01, staleness=float(i))
+    audit.record(1, magnitude=0.2, error_delta=-0.02, staleness=1.0,
+                 outcome="rejected")
+    st = audit.clients[0]
+    assert st.merges == 6 and len(st.staleness) == 4     # window bounds
+    assert st.mean("staleness") == pytest.approx((2 + 3 + 4 + 5) / 4)
+    assert audit.clients[1].outcomes == {"rejected": 1}
+    assert audit.recorded == 7
+    snap = reg.snapshot()
+    assert snap["counters"]["audit.outcomes{cid=0,outcome=merged}"] == 6.0
+    assert snap["counters"]["audit.outcomes{cid=1,outcome=rejected}"] == 1.0
+    assert "audit.update_magnitude{cid=0}" in snap["histograms"]
+    assert "audit.staleness{cid=1}" in snap["histograms"]
+
+
+def test_audit_flags_poisoning_client():
+    audit = ContributionAudit(registry=MetricsRegistry())
+    rng = np.random.RandomState(0)
+    for cid in range(8):
+        for _ in range(20):
+            audit.record(cid, magnitude=0.5 + 0.01 * rng.randn(),
+                         error_delta=0.01, staleness=1.0)
+    for _ in range(20):    # cid 8 injects huge updates that hurt validation
+        audit.record(8, magnitude=25.0, error_delta=-0.05, staleness=1.0)
+    flagged = {(f.cid, f.metric) for f in audit.flags()}
+    assert (8, "magnitude") in flagged
+    assert (8, "error_delta") in flagged
+    assert all(cid == 8 for cid, _ in flagged)
+    only_mag = audit.flags("magnitude")
+    assert {f.metric for f in only_mag} == {"magnitude"}
+    summ = audit.summary()
+    assert summ["recorded"] == 9 * 20
+    assert any(f["cid"] == 8 for f in summ["flags"])
+
+
+def test_audit_default_registry_follows_obs_scope():
+    audit = ContributionAudit()
+    with obs.tracing():
+        audit.record(0, magnitude=1.0, error_delta=0.0, staleness=0.0)
+        snap = obs.get_registry().snapshot()
+        assert "audit.update_magnitude{cid=0}" in snap["histograms"]
+    # the scope's fresh registry absorbed the write; the outer one is clean
+    outer = obs.get_registry().snapshot()
+    assert "audit.update_magnitude{cid=0}" not in outer["histograms"]
+
+
+# -------------------------------------------------------- engine integration
+def _engine(mode="enhanced", engine="events", fleet=None, seed=0):
+    dom = DomainConfig(name="mobile", n_samples=900, n_features=10,
+                       n_clients=6, noniid_alpha=0.5, label_imbalance=0.5,
+                       noise=0.15, straggler_factor=3.0, dropout_prob=0.1,
+                       link_mbps=5.0)
+    data = make_domain_data(dom, seed=seed, partitioner="iid")
+    cfg = FedBoostConfig(n_clients=dom.n_clients, n_rounds=4,
+                         straggler_factor=dom.straggler_factor,
+                         dropout_prob=dom.dropout_prob, seed=seed)
+    return FederatedBoostEngine(cfg, data, mode, engine=engine, fleet=fleet)
+
+
+@pytest.mark.parametrize("engine", ["loop", "events"])
+def test_attached_audit_observes_every_merge(engine):
+    eng = _engine(engine=engine)
+    audit = eng.attach_audit()
+    metrics = eng.run()
+    assert audit.recorded == metrics.learners_merged
+    assert sum(st.outcomes.get("merged", 0)
+               for st in audit.clients.values()) == metrics.learners_merged
+    assert all(0 <= cid < 6 for cid in audit.clients)
+    # staleness is measured in sync rounds: non-negative, finite
+    for st in audit.clients.values():
+        assert all(s >= 0 for s in st.staleness)
+        assert all(np.isfinite(m) for m in st.magnitude)
+
+
+@pytest.mark.parametrize("mode", ["baseline", "enhanced"])
+def test_audit_is_pure_measurement(mode):
+    plain = _engine(mode=mode).run()
+    audited_eng = _engine(mode=mode)
+    audited_eng.attach_audit()
+    audited = audited_eng.run()
+    assert plain.final_val_error == audited.final_val_error
+    assert plain.learners_merged == audited.learners_merged
+    assert plain.val_error_curve == audited.val_error_curve
+    assert plain.sim_time_s == audited.sim_time_s
+
+
+def test_fleet_profile_refuses_audit():
+    eng = _engine(engine="events", fleet=True)
+    with pytest.raises(ValueError, match="fleet"):
+        eng.attach_audit()
+
+
+def test_attach_audit_accepts_external_instance():
+    audit = ContributionAudit(registry=MetricsRegistry(), window=8)
+    eng = _engine()
+    assert eng.attach_audit(audit) is audit
+    eng.run()
+    assert audit.recorded > 0
+
+
+def test_audit_flag_to_dict_roundtrip():
+    f = AuditFlag(cid=3, metric="magnitude", z=4.2, value=9.0, median=1.0)
+    assert f.to_dict() == {"cid": 3, "metric": "magnitude", "z": 4.2,
+                           "value": 9.0, "median": 1.0}

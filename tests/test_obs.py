@@ -108,10 +108,15 @@ def test_jsonl_export_roundtrip(tmp_path):
         path = tr.export_jsonl(tmp_path / "trace.jsonl")
     back = obs.load_jsonl(path)
     assert back == tr.finished()
-    # every line is standalone JSON (streaming consumers)
+    # every line is standalone JSON (streaming consumers): one meta header
+    # carrying the ring accounting, then one line per span
     lines = (tmp_path / "trace.jsonl").read_text().strip().splitlines()
-    assert len(lines) == 2
-    assert all(json.loads(ln)["name"] in ("a", "b") for ln in lines)
+    assert len(lines) == 3
+    meta = json.loads(lines[0])["meta"]
+    assert meta == {"schema": 2, "dropped": 0, "started": 2, "exported": 2}
+    assert all(json.loads(ln)["name"] in ("a", "b") for ln in lines[1:])
+    meta2, spans = obs.load_trace(path)
+    assert meta2 == meta and spans == back
 
 
 # ---------------------------------------------------------------- registry
@@ -238,6 +243,95 @@ def test_fleet_percentile_weights_thinned_tenant_reservoirs():
     assert m.report()["p99_ms"] == pytest.approx(1.0)
     # per-tenant quantiles are unaffected either way
     assert m.tenant("cold").p99 == pytest.approx(0.100)
+
+
+def test_weight_per_sample_tracks_stream_not_reservoir():
+    h = Histogram(reservoir=64)
+    for _ in range(64):
+        h.observe(1.0)
+    assert h.weight_per_sample == 1.0             # nothing thinned yet
+    for _ in range(640 - 64):
+        h.observe(1.0)
+    assert h.weight_per_sample == pytest.approx(10.0)
+    assert Histogram().weight_per_sample == 0.0   # empty: no weight
+
+
+def test_latency_pairs_survive_merge_of_merges():
+    """Folding already-folded per-host registries must not double-weight
+    thinned reservoirs.  ``Histogram.extend`` keeps only every 8th incoming
+    sample once full, so a second-level fold re-thins the first fold's
+    survivors; ``latency_pairs`` taken *before* each merge carries the
+    exact weights, and fleet quantiles from the concatenated pairs match
+    the true stream regardless of fold depth."""
+    rng = random.Random(7)
+    hosts = []
+    stream: list = []
+    for h in range(4):
+        m = ServeMetrics()
+        # hosts see very different traffic volumes and latency regimes
+        n = 6_000 * (h + 1)
+        base = 0.001 * (h + 1)
+        for _ in range(n):
+            v = base * (1.0 + 0.1 * rng.random())
+            m.record_completion("t", v, staleness_s=0.0, version=1)
+            stream.append(v)
+        hosts.append(m)
+    true_p99 = percentile(stream, 99.0)
+    # exact-weight pairs concatenated across hosts, pre-merge
+    pairs = [p for m in hosts for p in m.latency_pairs()]
+    flat = weighted_percentile(pairs, 99.0)
+    assert abs(flat - true_p99) / true_p99 < 0.05
+    # a two-level fold: (h0+h1) and (h2+h3), then the fold-of-folds.
+    # the merged histogram's single weight_per_sample can no longer
+    # distinguish the hosts, and re-thinning dropped samples unevenly
+    lvl1a, lvl1b = ServeMetrics(), ServeMetrics()
+    lvl1a.tenant("t").merge_from(hosts[0].tenant("t"))
+    lvl1a.tenant("t").merge_from(hosts[1].tenant("t"))
+    lvl1b.tenant("t").merge_from(hosts[2].tenant("t"))
+    lvl1b.tenant("t").merge_from(hosts[3].tenant("t"))
+    top = ServeMetrics()
+    top.tenant("t").merge_from(lvl1a.tenant("t"))
+    top.tenant("t").merge_from(lvl1b.tenant("t"))
+    # totals stay exact through any fold depth
+    assert top.completed == len(stream)
+    # and the pre-merge pairs remain the trustworthy quantile source:
+    # they must beat (or match) the merged reservoir's estimate
+    merged_err = abs(top.fleet_percentile(99.0) - true_p99)
+    assert abs(flat - true_p99) <= merged_err + 1e-12
+
+
+def test_sharded_report_percentiles_come_from_premerge_pairs():
+    """ShardedEnsembleServer.report folds per-host metrics; its fleet
+    p50/p99 must come from the pre-merge per-host pairs, not from the
+    merged (re-thinned) reservoir."""
+    from repro.serve import (BatchConfig, GossipConfig, ShardCluster,
+                             ShardedEnsembleServer)
+    from repro.serve.metrics import weighted_percentile as wp
+    cluster = ShardCluster(3, GossipConfig(seed=0))
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    for i in range(4):
+        p = np.zeros((4, 4), np.float32)
+        p[:, 0] = rng.randint(0, 8, size=4)
+        p[:, 1] = rng.randn(4)
+        p[:, 2] = 1.0
+        cluster.publish_packed(f"tenant-{i}", jnp.asarray(p),
+                               jnp.asarray(rng.rand(4) + 0.1))
+    cluster.run_until_quiescent()
+    server = ShardedEnsembleServer(cluster, BatchConfig(max_batch=8),
+                                   service_model=lambda n: 1e-3 + 1e-4 * n)
+    t = 0.0
+    for i in range(60):
+        t += rng.exponential(1.0 / 200.0)
+        server.submit(f"tenant-{i % 4}", rng.randn(8).astype(np.float32), t)
+    server.drain()
+    rep = server.report()
+    pairs = server.metrics.latency_pairs()
+    for s in server.servers.values():
+        pairs.extend(s.metrics.latency_pairs())
+    assert rep["p50_ms"] == 1e3 * wp(pairs, 50.0)
+    assert rep["p99_ms"] == 1e3 * wp(pairs, 99.0)
+    assert rep["completed"] == 60
 
 
 def test_tenant_metrics_view_and_merge():

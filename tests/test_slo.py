@@ -1,0 +1,159 @@
+"""SLO error budgets + multi-window burn-rate alerting (repro.obs.slo)."""
+import pytest
+
+import repro.obs as obs
+from repro.obs.slo import (AlertLog, BurnRateRule, ErrorBudget, SLObjective,
+                           SLOMonitor, default_rules)
+
+
+def _obj(**kw):
+    base = dict(tenant="t0", latency_threshold_s=0.02, target=0.95,
+                window_s=1.0)
+    base.update(kw)
+    return SLObjective(**base)
+
+
+# ----------------------------------------------------------------- objective
+def test_budget_fraction_is_target_complement():
+    assert _obj(target=0.99).budget_fraction == pytest.approx(0.01)
+    assert _obj(target=0.95).budget_fraction == pytest.approx(0.05)
+    # a 100% target still yields a positive (tiny) budget, never div-by-zero
+    assert _obj(target=1.0).budget_fraction > 0.0
+
+
+def test_default_rules_scale_with_window():
+    page, ticket = default_rules(_obj(window_s=2.0))
+    assert (page.long_s, page.short_s, page.factor) == (0.5, 0.125, 8.0)
+    assert (ticket.long_s, ticket.short_s, ticket.factor) == (2.0, 0.5, 2.0)
+    # page is the faster, higher-threshold rule
+    assert page.short_s < ticket.short_s and page.factor > ticket.factor
+
+
+# -------------------------------------------------------------- error budget
+def test_error_budget_exact_totals_and_windowed_counts():
+    b = ErrorBudget(_obj(), horizon_s=1.0)
+    for i in range(10):
+        b.record(0.1 * i, good=(i % 2 == 0))
+    assert (b.good_total, b.bad_total, b.total) == (5, 5, 10)
+    # window (0.4, 0.9]: events at t=0.5..0.9
+    good, bad = b.window_counts(0.9, 0.5)
+    assert good + bad == 5
+    # totals survive trimming even when the window forgets everything
+    b.record(100.0, good=True)
+    assert b.window_counts(100.0, 0.5) == (1, 0)
+    assert (b.good_total, b.bad_total) == (6, 5)
+
+
+def test_burn_rate_in_budget_units():
+    # 5% budget; 10% observed bad over the window -> burn 2.0
+    b = ErrorBudget(_obj(target=0.95), horizon_s=10.0)
+    for i in range(100):
+        b.record(0.01 * (i + 1), good=(i % 10 != 0))
+    assert b.bad_fraction(1.0, 1.0) == pytest.approx(0.10)
+    assert b.burn_rate(1.0, 1.0) == pytest.approx(2.0)
+    # remaining is clipped to [0, 1]
+    assert b.remaining(1.0) == 0.0
+    empty = ErrorBudget(_obj(), horizon_s=1.0)
+    assert empty.burn_rate(5.0, 1.0) == 0.0
+    assert empty.remaining(5.0) == 1.0
+
+
+# ---------------------------------------------------------------- alert log
+def test_alert_log_fire_resolve_active_bookkeeping():
+    from repro.obs.slo import AlertEvent
+    log = AlertLog()
+    f = AlertEvent(1.0, "t0", "page", "fire", 10.0, 9.0)
+    log.fire(f)
+    assert log.is_active("t0", "page") and log.active() == [f]
+    log.resolve(AlertEvent(2.0, "t0", "page", "resolve", 0.5, 4.0))
+    assert not log.is_active("t0", "page") and log.active() == []
+    assert [e["kind"] for e in log.timeline()] == ["fire", "resolve"]
+
+
+# ------------------------------------------------------------------ monitor
+def test_monitor_fires_during_burst_and_resolves_after():
+    mon = SLOMonitor([_obj(window_s=1.0)])
+    t = 0.0
+    # healthy traffic: everything within threshold
+    while t < 2.0:
+        mon.record("t0", t, latency_s=0.005)
+        assert mon.check(t) == []
+        t += 0.01
+    # incident: every request blows the threshold
+    fired = []
+    while t < 2.5:
+        mon.record("t0", t, latency_s=0.5)
+        fired += mon.check(t)
+        t += 0.01
+    assert any(e.kind == "fire" for e in fired)
+    assert mon.alerts.active()
+    # recovery: healthy again; short windows drain and everything resolves
+    resolved = []
+    while t < 4.5:
+        mon.record("t0", t, latency_s=0.005)
+        resolved += mon.check(t)
+        t += 0.01
+    assert any(e.kind == "resolve" for e in resolved)
+    assert not mon.alerts.active()
+    # fire/resolve pair up per (tenant, rule)
+    events = mon.alerts.timeline()
+    fires = sum(e["kind"] == "fire" for e in events)
+    assert fires == sum(e["kind"] == "resolve" for e in events)
+
+
+def test_monitor_rejections_burn_budget_and_journal_is_exact():
+    journal = []
+    mon = SLOMonitor([_obj()], journal=journal)
+    assert mon.record("t0", 0.0, latency_s=0.001) is True
+    assert mon.record("t0", 0.1, latency_s=0.5) is False      # too slow
+    assert mon.record("t0", 0.2, rejected=True) is False      # shed
+    assert mon.record("t0", 0.3) is False                     # no latency
+    b = mon.budgets["t0"]
+    assert (b.good_total, b.bad_total) == (1, 3)
+    assert len(journal) == 4
+    assert [e["good"] for e in journal] == [True, False, False, False]
+    assert journal[2]["rejected"] is True
+    # unknown tenants are ignored, not crashed on
+    assert mon.record("nobody", 0.4, latency_s=9.9) is True
+    assert len(journal) == 4
+
+
+def test_monitor_requires_objectives_and_burn_pressure_crosses_one():
+    with pytest.raises(ValueError):
+        SLOMonitor([])
+    mon = SLOMonitor([_obj(window_s=1.0)])
+    assert mon.burn_pressure(0.0) == 0.0
+    for i in range(50):
+        mon.record("t0", 0.01 * i, latency_s=0.5)   # all bad
+    # burn_short/factor >= 1.0 exactly when some rule is ready to fire
+    assert mon.burn_pressure(0.5) >= 1.0
+    assert mon.budget_remaining("t0", 0.5) == 0.0
+
+
+def test_monitor_emits_slo_counters_and_alert_points():
+    with obs.tracing() as tracer:
+        mon = SLOMonitor([_obj(window_s=1.0)])
+        for i in range(50):
+            mon.record("t0", 0.01 * i, latency_s=0.5)
+            mon.check(0.01 * i)
+        snap = obs.get_registry().snapshot()
+        assert snap["counters"]["slo.bad{tenant=t0}"] == 50.0
+        assert snap["counters"]["alert.fires{rule=page,tenant=t0}"] >= 1.0
+        assert any(g.startswith("slo.burn_rate{") for g in snap["gauges"])
+        names = [s["name"] for s in tracer.finished()]
+    assert "alert.fire" in names
+
+
+def test_report_shape():
+    mon = SLOMonitor([_obj()])
+    mon.record("t0", 0.0, latency_s=0.001)
+    rep = mon.report(0.5)
+    assert rep["tenants"]["t0"]["good"] == 1
+    assert rep["tenants"]["t0"]["bad"] == 0
+    assert rep["alerts"] == [] and rep["active_alerts"] == []
+
+
+def test_custom_rules_override_defaults():
+    rule = BurnRateRule("only", long_s=0.5, short_s=0.1, factor=4.0)
+    mon = SLOMonitor([_obj()], rules=[rule])
+    assert mon.rules_for("t0") == (rule,)

@@ -1,0 +1,93 @@
+"""Vocabulary-drift lint: every span/point/counter/gauge/histogram name
+emitted under ``src/repro/`` must be documented in the vocabulary tables of
+``src/repro/obs/README.md`` — and every documented name must still be
+emitted somewhere.  Rename an instrument without updating the README (or
+vice versa) and this test names the drift."""
+import re
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src" / "repro"
+README = SRC / "obs" / "README.md"
+
+# an emission call: the instrument-factory token, an open paren, then the
+# first argument on the same line (dotted-name literals are always inline)
+_CALL = re.compile(
+    r"\b(?:span|point|count|observe|counter|gauge|histogram)\(\s*([^\n]*)")
+# dotted instrument/span name inside a (possibly f-) string literal
+_LITERAL = re.compile(r'f?"([a-z_][a-z0-9_]*(?:\.[a-z0-9_{}]+)+)"')
+# a documented name: lowercase dotted, optional {labels} suffix / <op> hole
+_DOC_NAME = re.compile(
+    r"^[a-z_][a-z0-9_]*(?:\.[a-z0-9_<>]+)+(?:\{[^}]*\})?$")
+
+
+def emitted_names():
+    """Every dotted name passed to an emission call under src/repro."""
+    names = {}
+    for path in sorted(SRC.rglob("*.py")):
+        for m in _CALL.finditer(path.read_text()):
+            # all string literals in the first-argument region: catches
+            # conditional names like ("slo.good" if good else "slo.bad")
+            head = m.group(1).split(" #")[0]
+            for lit in _LITERAL.findall(head):
+                name = re.sub(r"\{[^}]*\}", "<op>", lit)
+                names.setdefault(name, f"{path.relative_to(SRC)}")
+    return names
+
+
+def documented_names():
+    """Names from the README vocabulary tables: span-table column 1 and
+    metrics-table column 2 (other columns carry prose and attr names)."""
+    names = {}
+    section = None
+    for line in README.read_text().splitlines():
+        if line.startswith("#"):
+            heading = line.strip("# ").lower()
+            if "span vocabulary" in heading:
+                section = ("span", 0)       # column 1: the span name
+            elif "metrics registry" in heading:
+                section = ("metric", 1)     # column 2: the instruments
+            else:
+                section = None
+            continue
+        if section is None or not line.startswith("|"):
+            continue
+        cols = [c.strip() for c in line.strip("|").split("|")]
+        kind, col = section
+        if len(cols) <= col or set(cols[col]) <= {"-", " "}:
+            continue
+        for tok in re.findall(r"`([^`]+)`", cols[col]):
+            if _DOC_NAME.match(tok):
+                names.setdefault(re.sub(r"\{[^}]*\}", "", tok), kind)
+    return names
+
+
+def test_every_emitted_name_is_documented():
+    emitted = emitted_names()
+    documented = documented_names()
+    undocumented = {n: src for n, src in emitted.items()
+                    if n not in documented}
+    assert not undocumented, (
+        "names emitted in src/repro but missing from the obs/README.md "
+        f"vocabulary tables: {undocumented}")
+
+
+def test_every_documented_name_is_emitted():
+    emitted = emitted_names()
+    documented = documented_names()
+    stale = sorted(n for n in documented if n not in emitted)
+    assert not stale, (
+        "names documented in obs/README.md vocabulary tables but no "
+        f"longer emitted anywhere under src/repro: {stale}")
+
+
+def test_lint_extractors_see_the_core_vocabulary():
+    """Self-check that the scanners actually work (an empty intersection
+    would make the two drift tests pass vacuously)."""
+    emitted = emitted_names()
+    documented = documented_names()
+    for name in ("serve.request", "serve.submit", "train.sync",
+                 "kernel.<op>", "alert.fire", "audit.update_magnitude",
+                 "slo.good", "slo.bad", "chain.mint", "gossip.exchange"):
+        assert name in emitted, f"scanner lost emitted name {name}"
+        assert name in documented, f"README parse lost {name}"
+    assert len(emitted) > 30 and len(documented) > 30
